@@ -1,0 +1,73 @@
+"""Shared benchmark plumbing: build all compressors over a dataset, timed
+query runner (paper: 500 queries per pattern, average ms)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines import HDTBitmapTriples, K2Triples, ntriples_size_bytes
+from repro.core import (
+    Hypergraph,
+    LabelTable,
+    RepairConfig,
+    TripleQueryEngine,
+    attach_node_labels,
+    compress,
+    encode,
+)
+
+PATTERNS = ["s??", "?p?", "??o", "sp?", "s?o", "?po", "spo", "???"]
+
+
+def build_itr(ds, plus=False, config=None):
+    table = LabelTable.terminals([2] * ds.n_preds)
+    graph = Hypergraph.from_triples(ds.triples, ds.n_nodes)
+    extra = 0
+    if plus and ds.node_labels is not None:
+        n_kinds = int(ds.node_labels.max()) + 1
+        graph, table, _base = attach_node_labels(graph, table, ds.node_labels)
+        extra = n_kinds
+    grammar, stats = compress(graph, table, config)
+    enc = encode(grammar)
+    engine = TripleQueryEngine(grammar, enc)
+    return {"grammar": grammar, "encoded": enc, "engine": engine, "stats": stats,
+            "size": enc.size_in_bytes()}
+
+
+def build_all(ds, itr_config=None):
+    out = {"ITR": build_itr(ds, plus=False, config=itr_config)}
+    if ds.node_labels is not None:
+        out["ITR+"] = build_itr(ds, plus=True, config=itr_config)
+    out["k2-triples"] = {"engine": K2Triples(ds.triples, ds.n_nodes, ds.n_preds)}
+    out["k2-triples"]["size"] = out["k2-triples"]["engine"].size_in_bytes()
+    out["HDT-BT"] = {"engine": HDTBitmapTriples(ds.triples, ds.n_nodes, ds.n_preds)}
+    out["HDT-BT"]["size"] = out["HDT-BT"]["engine"].size_in_bytes()
+    out["raw_bytes"] = ntriples_size_bytes(ds.triples)
+    return out
+
+
+def _bind(pattern, s, p, o):
+    return (s if pattern[0] == "s" else None,
+            p if pattern[1] == "p" else None,
+            o if pattern[2] == "o" else None)
+
+
+# paper protocol is 500 queries/pattern (in C); the unselective patterns
+# enumerate the whole graph per query, so at Python speed we sample fewer
+# and still report per-query averages
+QUERIES_PER_PATTERN = {"???": 5, "?p?": 50, "?po": 100, "??o": 100}
+
+
+def time_queries(engine, ds, pattern: str, n_queries: int = 500, seed: int = 0):
+    """Average µs per query (paper Figure 4 protocol: 500 random queries)."""
+    n_queries = min(n_queries, QUERIES_PER_PATTERN.get(pattern, n_queries))
+    rng = np.random.default_rng(seed)
+    rows = ds.triples[rng.integers(0, len(ds.triples), n_queries)]
+    t0 = time.perf_counter()
+    n_results = 0
+    for s, p, o in rows:
+        qs, qp, qo = _bind(pattern, int(s), int(p), int(o))
+        n_results += len(engine.query(qs, qp, qo))
+    dt = time.perf_counter() - t0
+    return dt / n_queries * 1e6, n_results

@@ -1,0 +1,34 @@
+"""Compression throughput (paper reports build feasibility — RDFRePair was
+stopped after 6 days on wikidata; ITR's count/replace must scale): edges/s
+on growing synthetic inputs, plus the Pallas digram-count kernel stage."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Hypergraph, LabelTable, compress
+from repro.data.synthetic import rdf_like
+
+
+def run(sizes=(2000, 8000, 32000), quiet=False):
+    rows = []
+    for n_edges in sizes:
+        ds = rdf_like(n_nodes=n_edges // 3, n_edges=n_edges, n_preds=20, seed=1)
+        table = LabelTable.terminals([2] * ds.n_preds)
+        g = Hypergraph.from_triples(ds.triples, ds.n_nodes)
+        t0 = time.perf_counter()
+        grammar, stats = compress(g, table)
+        dt = time.perf_counter() - t0
+        rows.append({"edges": ds.n_triples, "seconds": dt,
+                     "edges_per_s": ds.n_triples / dt,
+                     "iterations": stats.iterations,
+                     "replaced": stats.replaced_occurrences})
+        if not quiet:
+            print(f"speed E={ds.n_triples:<7} {dt:6.2f}s  {ds.n_triples/dt:9.0f} edges/s "
+                  f"iters={stats.iterations} replaced={stats.replaced_occurrences}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Figure 4: average runtime of 500 queries per triple pattern on the
+geo-coordinates-en stand-in, per engine (ITR vs k²-triples vs HDT-BT).
+
+The paper's claim under test: ITR answers every pattern except ?P? faster
+than (or comparable to) the baselines, in milliseconds.
+"""
+from __future__ import annotations
+
+from benchmarks.common import PATTERNS, build_all, time_queries
+from repro.data.synthetic import PAPER_DATASETS
+
+
+def run(dataset="geo-coordinates-en", n_queries=500, quiet=False):
+    ds = PAPER_DATASETS[dataset]()
+    built = build_all(ds)
+    built.pop("raw_bytes")
+    rows = []
+    for pattern in PATTERNS:
+        row = {"pattern": pattern}
+        checks = {}
+        for method, b in built.items():
+            us, n_res = time_queries(b["engine"], ds, pattern, n_queries)
+            row[method] = us
+            checks[method] = n_res
+        # engines must agree on result counts (correctness guard)
+        assert len(set(checks.values())) == 1, f"{pattern}: result mismatch {checks}"
+        rows.append(row)
+        if not quiet:
+            times = " ".join(f"{m}={row[m]:9.1f}us" for m in built)
+            print(f"fig4 {pattern} {times}  (n={checks['ITR']})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""§Roofline source: aggregates results/dryrun/*.json into the per-cell
+roofline table (3 terms, dominant bottleneck, useful-FLOPs ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(mesh="1pod"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "results", "dryrun", f"*__{mesh}.json"))):
+        with open(path) as fh:
+            r = json.load(fh)
+        if isinstance(r, list):
+            rows.extend(r)
+        else:
+            rows.append(r)
+    return [r for r in rows if isinstance(r, dict)]
+
+
+def run(mesh="1pod", quiet=False):
+    rows = load(mesh)
+    out = []
+    for r in rows:
+        if not r.get("ok"):
+            out.append({"arch": r.get("arch"), "shape": r.get("shape"), "ok": False,
+                        "error": r.get("error", "?")})
+            continue
+        t = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "ok": True,
+            "compute_ms": t["compute_s"] * 1e3,
+            "memory_ms": t["memory_s"] * 1e3,
+            "collective_ms": t["collective_s"] * 1e3,
+            "dominant": t["dominant"],
+            "useful_ratio": r.get("useful_flops_ratio"),
+            "hbm_gb": r["memory"]["peak_est_bytes"] / 1e9,
+            "fits": r["memory"]["peak_est_bytes"] < 16e9,
+            "compile_s": r.get("compile_s"),
+        })
+    if not quiet:
+        print(f"roofline table ({mesh}): {sum(o['ok'] for o in out)}/{len(out)} cells")
+        hdr = f"{'arch':<24}{'shape':<15}{'compute':>10}{'memory':>10}{'collect':>10}  {'dom':<10}{'useful':>7}{'HBM GB':>8} fit"
+        print(hdr)
+        for o in sorted(out, key=lambda x: (x["arch"], x["shape"])):
+            if not o["ok"]:
+                print(f"{o['arch']:<24}{o['shape']:<15} FAILED: {o['error'][:60]}")
+                continue
+            ur = f"{o['useful_ratio']:.3f}" if o["useful_ratio"] else "-"
+            print(f"{o['arch']:<24}{o['shape']:<15}{o['compute_ms']:>9.1f}ms{o['memory_ms']:>9.1f}ms"
+                  f"{o['collective_ms']:>9.1f}ms  {o['dominant']:<10}{ur:>7}{o['hbm_gb']:>8.2f} {'Y' if o['fits'] else 'N'}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "1pod")

@@ -1,0 +1,71 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints `name,value,derived` CSV lines per benchmark so results are grep-able
+(`python -m benchmarks.run > bench_output.txt`).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        compression_ratio,
+        compression_speed,
+        itr_plus_bench,
+        kernels_bench,
+        query_latency,
+    )
+
+    print("== Table 1b / Figure 3: compression ratio per dataset ==")
+    fig3 = compression_ratio.run()
+    print("\n== Figure 4: triple-query latency (500 queries/pattern) ==")
+    fig4 = query_latency.run()
+    print("\n== §ITR+: node-label hyperedges (ttt-win) ==")
+    plus = itr_plus_bench.run()
+    print("\n== ablations: §Handling loops + mfd selection ==")
+    from benchmarks import ablations
+
+    abl = ablations.run()
+    print("\n== compression throughput ==")
+    speed = compression_speed.run()
+    print("\n== kernel micro-bench (CPU interpret) ==")
+    kerns = kernels_bench.run()
+
+    print("\n== CSV ==")
+    print("name,value,derived")
+    for row in fig3:
+        for m in ("ITR", "ITR+", "k2-triples", "HDT-BT"):
+            if m in row:
+                print(f"fig3/{row['dataset']}/{m},{row[m]:.6f},ratio")
+    for row in fig4:
+        for m, v in row.items():
+            if m != "pattern":
+                print(f"fig4/{row['pattern']}/{m},{v:.1f},us_per_query")
+    p = plus[0]
+    print(f"itr_plus/ttt-win/gain,{p['plus_gain']:.4f},fraction")
+    for row in abl["loop_rules"]:
+        print(f"ablation/loop_rules/{row['dataset']},{row['loop_rule_bytes']/row['index_fn_bytes']:.4f},vs_index_fn")
+    for row in abl["selection"]:
+        print(f"ablation/selection/{row['dataset']},{row['savings_gain']:.4f},savings_vs_count")
+    for row in speed:
+        print(f"speed/E{row['edges']},{row['edges_per_s']:.0f},edges_per_s")
+    for row in kerns:
+        print(f"kernel/{row['kernel']},{row['pallas_interpret_us']:.1f},us_per_call")
+
+    # roofline summary if the dry-run has produced results
+    try:
+        from benchmarks import roofline_report
+
+        rows = roofline_report.run(quiet=True)
+        ok = [r for r in rows if r.get("ok")]
+        if ok:
+            print(f"roofline/cells_ok,{len(ok)},count")
+            for r in ok:
+                print(f"roofline/{r['arch']}/{r['shape']}/dominant,{r['dominant']},bottleneck")
+    except Exception as e:  # dry-run not yet executed
+        print(f"# roofline skipped: {e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+#!/usr/bin/env python
+"""Serve a small LM with batched requests: prefill + token-by-token decode
+through the KV-cache engine (the same computation the decode_* dry-run
+cells lower at production scale).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.transformer import init_params
+from repro.serve import ServeEngine
+
+
+def main():
+    cfg = get_arch("gemma2-9b").reduced()  # local/global + softcap engine path
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(params, cfg, max_len=96, eos_id=None)
+
+    rng = np.random.default_rng(0)
+    requests = [rng.integers(2, cfg.vocab, rng.integers(4, 12)).tolist()
+                for _ in range(8)]
+    print(f"serving {len(requests)} batched requests "
+          f"(model={cfg.name}, vocab={cfg.vocab})")
+    res = engine.generate(requests, max_new_tokens=16, temperature=0.0)
+    for i, (req, out) in enumerate(zip(requests, res.tokens)):
+        print(f"  req{i}: prompt[{len(req)}] -> {out[:int(res.n_generated[i])].tolist()}")
+    print(f"prefill: {res.prefill_ms:.1f} ms, decode: {res.decode_ms_per_token:.1f} ms/token")
+
+    # determinism check (greedy)
+    res2 = engine.generate(requests, max_new_tokens=16, temperature=0.0)
+    assert np.array_equal(res.tokens, res2.tokens)
+    print("greedy decode deterministic: OK")
+
+
+if __name__ == "__main__":
+    main()

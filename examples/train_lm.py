@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""Train a small decoder LM for a few hundred steps on synthetic structured
+data, with gradient compression (int8 + error feedback) and checkpointing —
+the end-to-end exercise of the LM training path at laptop scale (the full
+configs run through the same code in the dry-run).
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer as tf_mod
+from repro.train import AdamWConfig, CompressionConfig, Trainer, TrainerConfig
+
+
+def synthetic_batches(vocab, batch=8, seq=64, seed=0):
+    """Structured sequences (arithmetic-progression tokens) — learnable."""
+    rng = np.random.default_rng(seed)
+    while True:
+        start = rng.integers(0, vocab - 1, (batch, 1))
+        step = rng.integers(1, 5, (batch, 1))
+        seqs = (start + step * np.arange(seq + 1)) % vocab
+        yield {"tokens": jnp.asarray(seqs[:, :-1], jnp.int32),
+               "targets": jnp.asarray(seqs[:, 1:], jnp.int32)}
+
+
+def main():
+    cfg = dataclasses.replace(get_arch("qwen2-1.5b").reduced(),
+                              n_layers=4, d_model=128, d_ff=256)
+    params = tf_mod.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name} scaled to {n_params/1e6:.2f}M params")
+
+    def loss_fn(p, batch):
+        return tf_mod.forward_loss(p, batch["tokens"], batch["targets"], cfg)
+
+    tc = TrainerConfig(
+        total_steps=300, checkpoint_every=100, log_every=25,
+        checkpoint_dir=tempfile.mkdtemp(prefix="itr_lm_ckpt_"),
+        opt=AdamWConfig(lr=3e-3, warmup_steps=30, total_steps=300),
+        compression=CompressionConfig(codec="int8"),
+    )
+    trainer = Trainer(loss_fn, params, tc)
+    log = trainer.run(synthetic_batches(cfg.vocab))
+    for rec in log:
+        print(f"  step {rec['step']:>4} loss {rec['loss']:.4f} lr {rec['lr']:.2e}")
+    assert log[-1]["loss"] < log[0]["loss"] * 0.8, "LM failed to learn"
+    print(f"loss {log[0]['loss']:.3f} -> {log[-1]['loss']:.3f} with int8-compressed grads: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Run the full dry-run sweep (40 cells × 2 meshes) as parallel subprocesses.
+
+Each cell runs in its own process (XLA device-count env is process-global),
+writes results/dryrun/<arch>__<shape>__<mesh>.json, and logs to
+results/dryrun/logs/. Usage: python scripts/run_dryrun_sweep.py [--workers N]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor, as_completed
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.configs.registry import all_cells  # noqa: E402
+
+
+def run_one(arch, shape, multi_pod, timeout=1800):
+    mesh = "2pod" if multi_pod else "1pod"
+    safe = arch.replace("/", "_").replace(".", "_")
+    out = os.path.join(ROOT, "results", "dryrun", f"{safe}__{shape}__{mesh}.json")
+    log = os.path.join(ROOT, "results", "dryrun", "logs", f"{safe}__{shape}__{mesh}.log")
+    os.makedirs(os.path.dirname(log), exist_ok=True)
+    if os.path.exists(out):
+        with open(out) as fh:
+            r = json.load(fh)
+        if isinstance(r, dict) and r.get("ok"):
+            return (arch, shape, mesh, "cached", 0.0)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    t0 = time.time()
+    with open(log, "w") as lf:
+        try:
+            p = subprocess.run(cmd, stdout=lf, stderr=subprocess.STDOUT,
+                               timeout=timeout, env=env, cwd=ROOT)
+            status = "ok" if p.returncode == 0 else f"rc={p.returncode}"
+        except subprocess.TimeoutExpired:
+            status = "timeout"
+    return (arch, shape, mesh, status, time.time() - t0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--mesh", choices=["1pod", "2pod", "both"], default="both")
+    args = ap.parse_args()
+    jobs = []
+    for arch, shape in all_cells():
+        if args.mesh in ("1pod", "both"):
+            jobs.append((arch, shape, False))
+        if args.mesh in ("2pod", "both"):
+            jobs.append((arch, shape, True))
+    # heaviest first so stragglers start early
+    heavy = {"yi-34b": 0, "phi3.5-moe-42b-a6.6b": 1, "gemma2-9b": 2}
+    jobs.sort(key=lambda j: heavy.get(j[0], 9))
+    print(f"{len(jobs)} dry-run jobs, {args.workers} workers")
+    results = []
+    with ThreadPoolExecutor(args.workers) as ex:
+        futs = {ex.submit(run_one, *j): j for j in jobs}
+        for fut in as_completed(futs):
+            r = fut.result()
+            results.append(r)
+            print(f"[{len(results)}/{len(jobs)}] {r[0]} × {r[1]} × {r[2]}: {r[3]} ({r[4]:.0f}s)", flush=True)
+    bad = [r for r in results if r[3] not in ("ok", "cached")]
+    print(f"\ndone: {len(results) - len(bad)}/{len(results)} ok")
+    for r in bad:
+        print("FAILED:", r)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

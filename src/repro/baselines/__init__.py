@@ -1,0 +1,18 @@
+"""Comparison baselines from the paper's evaluation (Table 1a).
+
+* :class:`K2Triples` — Álvarez-García et al. [9]: one k²-tree per predicate
+  over the subject×object matrix.
+* :class:`HDTBitmapTriples` — Fernández et al. [10]: dictionary + the BT
+  (Bitmap-Triples) structure: subject-sorted adjacency with predicate and
+  object layers delimited by rank/select bitmaps.
+* gRePair / RDFRePair are RePair variants; the paper's differentiators are
+  the digram definition and the index-functions. We expose the honest
+  ablation `loop_rules` mode (paper §Handling loops) in `repro.core` and a
+  `grepair_digrams` restricted-shape mode for size comparisons rather than
+  reimplementing the Scala/Java systems (see DESIGN.md §2).
+"""
+from repro.baselines.k2_triples import K2Triples
+from repro.baselines.hdt_bt import HDTBitmapTriples
+from repro.baselines.ntriples import ntriples_size_bytes
+
+__all__ = ["K2Triples", "HDTBitmapTriples", "ntriples_size_bytes"]

@@ -1,0 +1,101 @@
+"""HDT Bitmap-Triples baseline [10].
+
+Triples sorted by (s, p, o). Layer 1: the distinct predicates of each
+subject (sequence Sp + bitmap Bp whose 1s close each subject's run); layer
+2: the objects of each (s, p) pair (sequence So + bitmap Bo). S-rooted
+patterns are rank/select walks; O-rooted patterns scan (HDT needs its
+optional OPS index for those, which the paper excluded from disk size).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.succinct import BitVector
+
+
+class HDTBitmapTriples:
+    def __init__(self, triples: np.ndarray, n_nodes: int, n_preds: int):
+        triples = np.asarray(triples, dtype=np.int64)
+        triples = np.unique(triples[np.lexsort((triples[:, 2], triples[:, 1], triples[:, 0]))], axis=0)
+        self.n_nodes, self.n_preds = int(n_nodes), int(n_preds)
+        s, p, o = triples[:, 0], triples[:, 1], triples[:, 2]
+        self.n_triples = len(triples)
+
+        # layer 2: objects per (s,p) run
+        sp_change = np.concatenate([[True], (s[1:] != s[:-1]) | (p[1:] != p[:-1])])
+        self.So = o
+        bo = np.zeros(len(o), dtype=np.uint8)
+        run_ends = np.concatenate([np.flatnonzero(sp_change)[1:] - 1, [len(o) - 1]]) if len(o) else np.zeros(0, np.int64)
+        bo[run_ends] = 1
+        self.Bo = BitVector(bo)
+
+        # layer 1: predicates per subject (one entry per (s,p) run)
+        sp_idx = np.flatnonzero(sp_change)
+        self.Sp = p[sp_idx]
+        s_of_run = s[sp_idx]
+        bp = np.zeros(len(sp_idx), dtype=np.uint8)
+        s_change_end = np.concatenate(
+            [np.flatnonzero(s_of_run[1:] != s_of_run[:-1]), [len(s_of_run) - 1]]
+        ) if len(sp_idx) else np.zeros(0, np.int64)
+        bp[s_change_end] = 1
+        self.Bp = BitVector(bp)
+        # subjects present, in order (for select into runs)
+        self.subjects = np.unique(s)
+        self._subj_pos = {int(v): i for i, v in enumerate(self.subjects)}
+
+    # -- run lookups -----------------------------------------------------
+    def _pred_run(self, subj: int) -> tuple[int, int]:
+        """[lo, hi) range in Sp for subject subj."""
+        i = self._subj_pos.get(int(subj))
+        if i is None:
+            return 0, 0
+        lo = 0 if i == 0 else int(self.Bp.select1(i - 1)) + 1
+        hi = int(self.Bp.select1(i)) + 1
+        return lo, hi
+
+    def _obj_run(self, sp_run_idx: int) -> tuple[int, int]:
+        lo = 0 if sp_run_idx == 0 else int(self.Bo.select1(sp_run_idx - 1)) + 1
+        hi = int(self.Bo.select1(sp_run_idx)) + 1
+        return lo, hi
+
+    def query(self, s: int | None, p: int | None, o: int | None) -> list[tuple]:
+        out = []
+        if s is not None:
+            lo, hi = self._pred_run(s)
+            for ri in range(lo, hi):
+                pp = int(self.Sp[ri])
+                if p is not None and pp != p:
+                    continue
+                olo, ohi = self._obj_run(ri)
+                objs = self.So[olo:ohi]
+                if o is not None:
+                    j = np.searchsorted(objs, o)
+                    if j < len(objs) and objs[j] == o:
+                        out.append((pp, (int(s), int(o))))
+                else:
+                    out.extend((pp, (int(s), int(x))) for x in objs)
+            return out
+        # O-rooted / P-only patterns: scan runs (no OPS index)
+        run_subject = self.subjects[self.Bp.rank1(np.arange(len(self.Sp)))] if len(self.Sp) else np.zeros(0, np.int64)
+        for ri in range(len(self.Sp)):
+            pp = int(self.Sp[ri])
+            if p is not None and pp != p:
+                continue
+            ss = int(run_subject[ri])
+            olo, ohi = self._obj_run(ri)
+            objs = self.So[olo:ohi]
+            if o is not None:
+                j = np.searchsorted(objs, o)
+                if j < len(objs) and objs[j] == o:
+                    out.append((pp, (ss, int(o))))
+            else:
+                out.extend((pp, (ss, int(x))) for x in objs)
+        return out
+
+    def size_in_bytes(self) -> int:
+        # sequences log-packed like HDT: ceil(log2) bits per element
+        bits_p = max(1, int(np.ceil(np.log2(max(self.n_preds, 2)))))
+        bits_o = max(1, int(np.ceil(np.log2(max(self.n_nodes, 2)))))
+        seq = (len(self.Sp) * bits_p + len(self.So) * bits_o + 7) // 8
+        subj = (len(self.subjects) * bits_o + 7) // 8
+        return seq + subj + self.Bp.size_in_bytes() + self.Bo.size_in_bytes()

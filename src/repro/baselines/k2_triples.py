@@ -1,0 +1,36 @@
+"""k²-Triples baseline [9]: a k²-tree per predicate over subject×object."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.succinct import K2Tree
+
+
+class K2Triples:
+    def __init__(self, triples: np.ndarray, n_nodes: int, n_preds: int):
+        triples = np.asarray(triples, dtype=np.int64)
+        self.n_nodes, self.n_preds = int(n_nodes), int(n_preds)
+        self.trees: list[K2Tree] = []
+        for p in range(n_preds):
+            sel = triples[:, 1] == p
+            self.trees.append(K2Tree(triples[sel, 0], triples[sel, 2], n_nodes, n_nodes))
+
+    def query(self, s: int | None, p: int | None, o: int | None) -> list[tuple]:
+        preds = [p] if p is not None else range(self.n_preds)
+        out = []
+        for pp in preds:
+            t = self.trees[pp]
+            if s is not None and o is not None:
+                if t.access(s, o):
+                    out.append((pp, (s, o)))
+            elif s is not None:
+                out.extend((pp, (s, int(c))) for c in t.row(s))
+            elif o is not None:
+                out.extend((pp, (int(r), o)) for r in t.col(o))
+            else:
+                for r in range(self.n_nodes):
+                    out.extend((pp, (r, int(c))) for c in t.row(r))
+        return out
+
+    def size_in_bytes(self) -> int:
+        return sum(t.size_in_bytes() for t in self.trees) + 8 * self.n_preds

@@ -1,0 +1,15 @@
+"""Uncompressed N-Triples size model — denominator of the compression ratio."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def ntriples_size_bytes(
+    triples: np.ndarray,
+    node_repr_len: int = 24,
+    pred_repr_len: int = 28,
+) -> int:
+    """Serialized `<s> <p> <o> .\n` size with IRI-length models matching the
+    paper's converted inputs (all compressors read the same RDF file)."""
+    n = len(triples)
+    return n * (2 * node_repr_len + pred_repr_len + 6)

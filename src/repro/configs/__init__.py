@@ -1,0 +1,4 @@
+"""Per-architecture configs (exact published numbers) + the registry."""
+from repro.configs.registry import ARCHS, ArchSpec, ShapeSpec, all_cells, get_arch
+
+__all__ = ["ARCHS", "ArchSpec", "ShapeSpec", "all_cells", "get_arch"]

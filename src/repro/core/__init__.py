@@ -1,0 +1,29 @@
+"""ITR core — the paper's contribution: Incidence-Type RePair graph
+compression with a succinct encoding that answers triple queries fast."""
+from repro.core.hypergraph import Hypergraph, LabelTable
+from repro.core.digram import DigramCounter, digram_counts, digram_key, incidences
+from repro.core.grammar import Grammar, Rule
+from repro.core.repair import RepairConfig, RepairStats, compress
+from repro.core.encode import EncodedGrammar, encode
+from repro.core.query import TripleQueryEngine, query_oracle
+from repro.core.itr_plus import attach_node_labels, strip_node_labels
+
+__all__ = [
+    "Hypergraph",
+    "LabelTable",
+    "DigramCounter",
+    "digram_counts",
+    "digram_key",
+    "incidences",
+    "Grammar",
+    "Rule",
+    "RepairConfig",
+    "RepairStats",
+    "compress",
+    "EncodedGrammar",
+    "encode",
+    "TripleQueryEngine",
+    "query_oracle",
+    "attach_node_labels",
+    "strip_node_labels",
+]

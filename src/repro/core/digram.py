@@ -1,0 +1,224 @@
+"""Incidence-types, digrams, and the paper's approximate occurrence counting.
+
+An incidence-type is ``(label a, connection-type m)`` with ``m < rank(a)``;
+it is flattened to the integer id ``it_offsets[a] + m``. A digram is an
+unordered pair of incidence-types, flattened to ``min(it1,it2) << 32 | max``.
+
+Counting follows the paper exactly: a single scan builds
+``c : V × IT -> N`` (a segment count), and the per-node digram score is
+``min(c(v,i1), c(v,i2))`` for ``i1 != i2`` and ``c(v,i1) // 2`` for
+``i1 == i2``, summed over nodes. Two implementations:
+
+* :func:`digram_counts` — full vectorized recount (sort + segment ops);
+  this is the TPU-native formulation (see `repro.kernels.digram_count`
+  for the Pallas version of the pairwise stage).
+* :class:`DigramCounter` — the paper's *Update Count* step: after a
+  replacement only the touched nodes' contributions are recomputed.
+  Tests assert it matches the full recount after every iteration.
+
+``cap`` bounds the number of distinct incidence-types considered per node
+(top-`cap` by count); nodes beyond it contribute only their most frequent
+types. This is the one deviation from the paper (documented in DESIGN.md
+§3); ``cap=None`` disables it and is used in the parity tests.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core.hypergraph import Hypergraph, LabelTable
+
+DIGRAM_SHIFT = 32
+_MASK32 = (1 << 32) - 1
+
+
+def digram_key(it1: int, it2: int) -> int:
+    lo, hi = (it1, it2) if it1 <= it2 else (it2, it1)
+    return (lo << DIGRAM_SHIFT) | hi
+
+
+def split_digram(key: int) -> tuple[int, int]:
+    return key >> DIGRAM_SHIFT, key & _MASK32
+
+
+def split_it(it: int, it_offsets: np.ndarray) -> tuple[int, int]:
+    """Inverse of it_offsets[label] + m -> (label, m)."""
+    label = int(np.searchsorted(it_offsets, it, side="right") - 1)
+    return label, int(it - it_offsets[label])
+
+
+def incidences(graph: Hypergraph, table: LabelTable) -> tuple[np.ndarray, np.ndarray]:
+    """(node, incidence_type_id) for every edge slot; one scan over edges."""
+    ranks = graph.ranks()
+    it_offsets = table.it_offsets()
+    pos = np.arange(len(graph.nodes_flat), dtype=np.int64) - np.repeat(graph.offsets[:-1], ranks)
+    its = np.repeat(it_offsets[graph.labels], ranks) + pos
+    return graph.nodes_flat, its
+
+
+def node_it_counts(graph: Hypergraph, table: LabelTable):
+    """The mapping c : V × IT -> N as parallel arrays (v, it, count), sorted."""
+    nodes, its = incidences(graph, table)
+    n_it = int(table.it_offsets()[-1])
+    key = nodes * n_it + its
+    uk, cnts = np.unique(key, return_counts=True)
+    return uk // n_it, uk % n_it, cnts.astype(np.int64)
+
+
+def digram_counts(
+    graph: Hypergraph, table: LabelTable, cap: int | None = 64
+) -> tuple[np.ndarray, np.ndarray]:
+    """Full recount. Returns (digram_keys, counts), counts > 0, unsorted."""
+    v, it, cnts = node_it_counts(graph, table)
+    if len(v) == 0:
+        return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64)
+    order = np.lexsort((-cnts, v))
+    v, it, cnts = v[order], it[order], cnts[order]
+    starts = np.flatnonzero(np.concatenate([[True], v[1:] != v[:-1]]))
+    sizes = np.diff(np.concatenate([starts, [len(v)]]))
+    if cap is not None:
+        rank_in_group = np.arange(len(v)) - np.repeat(starts, sizes)
+        keep = rank_in_group < cap
+        v, it, cnts = v[keep], it[keep], cnts[keep]
+        starts = np.flatnonzero(np.concatenate([[True], v[1:] != v[:-1]]))
+        sizes = np.diff(np.concatenate([starts, [len(v)]]))
+
+    all_keys, all_cv = [], []
+    for d in np.unique(sizes):
+        g_starts = starts[sizes == d]
+        idx = g_starts[:, None] + np.arange(d)[None, :]
+        its_m = it[idx]  # (G, d)
+        cnt_m = cnts[idx]
+        ii, jj = np.triu_indices(int(d))
+        it1, it2 = its_m[:, ii], its_m[:, jj]
+        c1, c2 = cnt_m[:, ii], cnt_m[:, jj]
+        cv = np.where(ii == jj, c1 // 2, np.minimum(c1, c2))
+        lo = np.minimum(it1, it2)
+        hi = np.maximum(it1, it2)
+        keys = (lo.astype(np.int64) << DIGRAM_SHIFT) | hi.astype(np.int64)
+        mask = cv > 0
+        all_keys.append(keys[mask])
+        all_cv.append(cv[mask])
+    if not all_keys:
+        return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64)
+    keys = np.concatenate(all_keys)
+    cv = np.concatenate(all_cv)
+    uk, inv = np.unique(keys, return_inverse=True)
+    sums = np.zeros(len(uk), dtype=np.int64)
+    np.add.at(sums, inv, cv)
+    return uk, sums
+
+
+class DigramCounter:
+    """Incremental digram counts (paper's Count + Update Count steps).
+
+    Maintains per-node incidence-type histograms and the global digram
+    count table; replacement notifies it with the removed/added incidence
+    lists and only the touched nodes are recomputed. A lazy max-heap
+    serves "most frequent digram" queries.
+    """
+
+    def __init__(self, graph: Hypergraph, table: LabelTable, cap: int | None = 64):
+        self.cap = cap
+        self.node_hist: dict[int, dict[int, int]] = defaultdict(dict)
+        self.pair_counts: dict[int, int] = defaultdict(int)
+        self._heap: list[tuple[int, int]] = []
+        v, it, cnts = node_it_counts(graph, table)
+        starts = np.flatnonzero(np.concatenate([[True], v[1:] != v[:-1]])) if len(v) else np.zeros(0, np.int64)
+        bounds = np.concatenate([starts, [len(v)]]).astype(np.int64)
+        it_l, cnt_l = it.tolist(), cnts.tolist()
+        v_l = v.tolist()
+        for gi in range(len(starts)):
+            s, e = int(bounds[gi]), int(bounds[gi + 1])
+            self.node_hist[v_l[s]] = dict(zip(it_l[s:e], cnt_l[s:e]))
+        for node in self.node_hist:
+            self._apply_contrib(node, +1)
+        for key, cnt in self.pair_counts.items():
+            heapq.heappush(self._heap, (-cnt, key))
+
+    # -- per-node contributions ------------------------------------------
+    def _node_items(self, node: int):
+        items = self.node_hist.get(node)
+        if not items:
+            return ()
+        if self.cap is not None and len(items) > self.cap:
+            return sorted(items.items(), key=lambda kv: -kv[1])[: self.cap]
+        return tuple(items.items())
+
+    def _apply_contrib(self, node: int, sign: int, touch: set | None = None):
+        items = self._node_items(node)
+        n = len(items)
+        pc = self.pair_counts
+        for i in range(n):
+            it1, c1 = items[i]
+            half = c1 // 2
+            if half:
+                k = (it1 << DIGRAM_SHIFT) | it1
+                pc[k] += sign * half
+                if touch is not None:
+                    touch.add(k)
+            for j in range(i + 1, n):
+                it2, c2 = items[j]
+                cv = c1 if c1 < c2 else c2
+                if cv:
+                    k = digram_key(it1, it2)
+                    pc[k] += sign * cv
+                    if touch is not None:
+                        touch.add(k)
+
+    # -- update after replacement ----------------------------------------
+    def apply_delta(self, removed: tuple[np.ndarray, np.ndarray], added: tuple[np.ndarray, np.ndarray]):
+        """removed/added: (nodes, its) incidence arrays of deleted/new edges."""
+        rem_v, rem_it = removed
+        add_v, add_it = added
+        affected = set(np.unique(np.concatenate([rem_v, add_v])).tolist())
+        touched: set = set()
+        for node in affected:
+            self._apply_contrib(node, -1, touched)
+        # apply histogram deltas
+        for v_arr, it_arr, sign in ((rem_v, rem_it, -1), (add_v, add_it, +1)):
+            for v, it in zip(v_arr.tolist(), it_arr.tolist()):
+                h = self.node_hist[v]
+                nv = h.get(it, 0) + sign
+                if nv:
+                    h[it] = nv
+                else:
+                    h.pop(it, None)
+        for node in affected:
+            self._apply_contrib(node, +1, touched)
+        for k in touched:
+            c = self.pair_counts.get(k, 0)
+            if c > 0:
+                heapq.heappush(self._heap, (-c, k))
+            elif c == 0:
+                self.pair_counts.pop(k, None)
+
+    def pop_best(self, skip: set | None = None) -> tuple[int, int] | None:
+        """(digram_key, count) with the highest current count, or None.
+
+        Lazy-deletion max-heap: stale entries (count changed since push) are
+        reinserted at their current count; digrams in `skip` (e.g. excluded
+        by the max-rank bound) are dropped.
+        """
+        while self._heap:
+            negc, key = heapq.heappop(self._heap)
+            cur = self.pair_counts.get(key, 0)
+            if cur <= 0 or (skip is not None and key in skip):
+                continue
+            if cur != -negc:
+                heapq.heappush(self._heap, (-cur, key))
+                continue
+            heapq.heappush(self._heap, (negc, key))  # keep for future queries
+            return key, cur
+        return None
+
+    def as_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        items = [(k, c) for k, c in self.pair_counts.items() if c > 0]
+        if not items:
+            return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64)
+        keys = np.array([k for k, _ in items], dtype=np.int64)
+        cnts = np.array([c for _, c in items], dtype=np.int64)
+        order = np.argsort(keys)
+        return keys[order], cnts[order]

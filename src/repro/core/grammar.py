@@ -1,0 +1,205 @@
+"""Straight-line hyperedge-replacement (SL-HR) grammars and expansion.
+
+A rule ``A -> G_A`` has a right-hand side whose nodes ``0..rank(A)-1`` are
+the formal parameters (digram-born rules reference only external nodes —
+see DESIGN.md); expanding an edge ``A(v0..vk)`` maps RHS node ``j`` to
+``vj``. Expansion is vectorized per (rule, rhs-edge): all edges sharing a
+nonterminal label are instantiated with one gather.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.hypergraph import Hypergraph, LabelTable
+
+
+@dataclass
+class Rule:
+    label: int  # nonterminal label id
+    rank: int
+    rhs: Hypergraph  # n_nodes == rank; all nodes are external parameters
+
+    def validate(self, table: LabelTable):
+        assert table.ranks[self.label] == self.rank
+        assert self.rhs.n_nodes == self.rank
+        self.rhs.validate(table)
+        if self.rhs.n_edges:
+            # every external parameter must occur in the RHS (decode relies on it)
+            assert np.array_equal(np.unique(self.rhs.nodes_flat), np.arange(self.rank))
+
+
+@dataclass
+class Grammar:
+    table: LabelTable
+    start: Hypergraph
+    rules: dict[int, Rule] = field(default_factory=dict)  # label -> rule
+
+    # ------------------------------------------------------------------
+    def validate(self):
+        self.start.validate(self.table)
+        for lbl, rule in self.rules.items():
+            assert lbl == rule.label and lbl >= self.table.n_terminals
+            rule.validate(self.table)
+        assert self._topological_order() is not None, "grammar must be non-recursive"
+
+    def _topological_order(self) -> list[int] | None:
+        """Rule labels in dependency order (used rules first); None if cyclic."""
+        deps = {
+            lbl: {int(x) for x in np.unique(r.rhs.labels) if int(x) in self.rules}
+            for lbl, r in self.rules.items()
+        }
+        order, done = [], set()
+        while len(order) < len(deps):
+            progress = False
+            for lbl, ds in deps.items():
+                if lbl not in done and ds <= done:
+                    order.append(lbl)
+                    done.add(lbl)
+                    progress = True
+            if not progress:
+                return None
+        return order
+
+    # ------------------------------------------------------------------
+    def expand_once(self, graph: Hypergraph) -> tuple[Hypergraph, bool]:
+        """Replace every nonterminal edge by its instantiated RHS (one level)."""
+        is_nt = np.isin(graph.labels, list(self.rules.keys())) if self.rules else np.zeros(graph.n_edges, bool)
+        if not is_nt.any():
+            return graph, False
+        keep = graph.select(~is_nt)
+        new_labels, new_flat, new_ranks = [], [], []
+        nt_graph = graph.select(is_nt)
+        for lbl in np.unique(nt_graph.labels):
+            rule = self.rules[int(lbl)]
+            sel = nt_graph.labels == lbl
+            n_sel = int(sel.sum())
+            node_mat = nt_graph.nodes_flat[
+                nt_graph.offsets[:-1][sel][:, None] + np.arange(rule.rank)[None, :]
+            ]  # (n_sel, rank)
+            rhs = rule.rhs
+            rhs_ranks = rhs.ranks()
+            for j in range(rhs.n_edges):
+                params = rhs.edge_nodes(j)  # indices into externals
+                new_labels.append(np.full(n_sel, rhs.labels[j], dtype=np.int64))
+                new_flat.append(node_mat[:, params].reshape(-1))
+                new_ranks.append(np.full(n_sel, rhs_ranks[j], dtype=np.int64))
+        out = keep.concat_edges(
+            np.concatenate(new_labels),
+            np.concatenate(new_flat) if new_flat else np.zeros(0, np.int64),
+            np.concatenate(new_ranks),
+        )
+        return out, True
+
+    def decompress(self) -> Hypergraph:
+        g = self.start
+        changed = True
+        guard = 0
+        while changed:
+            g, changed = self.expand_once(g)
+            guard += 1
+            assert guard <= len(self.rules) + 2, "expansion did not terminate"
+        return g
+
+    # ------------------------------------------------------------------
+    def size_units(self) -> int:
+        """Integer-unit grammar size (drives the RePair stop condition)."""
+        total = self.start.size_units()
+        for r in self.rules.values():
+            total += 1 + r.rhs.size_units()  # 1 unit rule header
+        return total
+
+    def nt_generates(self) -> np.ndarray:
+        """bool[n_rules_labels, n_terminals]: A (transitively) emits label t.
+
+        Rows indexed by (label - n_terminals) for present rule labels.
+        """
+        T = self.table.n_terminals
+        n_nt = (max(self.rules.keys()) - T + 1) if self.rules else 0
+        gen = np.zeros((n_nt, T), dtype=bool)
+        order = self._topological_order()
+        assert order is not None
+        for lbl in order:
+            rhs = self.rules[lbl].rhs
+            row = gen[lbl - T]
+            for x in np.unique(rhs.labels):
+                x = int(x)
+                if x < T:
+                    row[x] = True
+                else:
+                    row |= gen[x - T]
+        return gen
+
+    # ------------------------------------------------------------------
+    def prune(self) -> "Grammar":
+        """String-RePair Prune adapted to graphs: inline rules used once,
+        drop unused rules, renumber nonterminals in topological order."""
+        g = self
+        while True:
+            usage = g._usage_counts()
+            once = [lbl for lbl, c in usage.items() if c == 1]
+            unused = [lbl for lbl, c in usage.items() if c == 0]
+            if not once and not unused:
+                break
+            g = g._inline_and_drop(set(once), set(unused))
+        return g._renumber()
+
+    def _usage_counts(self) -> dict[int, int]:
+        usage = {lbl: 0 for lbl in self.rules}
+        for labels in [self.start.labels] + [r.rhs.labels for r in self.rules.values()]:
+            uniq, cnt = np.unique(labels, return_counts=True)
+            for u, c in zip(uniq.tolist(), cnt.tolist()):
+                if u in usage:
+                    usage[u] += int(c)
+        return usage
+
+    def _inline_and_drop(self, once: set, unused: set) -> "Grammar":
+        sub = Grammar(self.table, self.start, {l: r for l, r in self.rules.items() if l not in unused})
+
+        def inline(graph: Hypergraph) -> Hypergraph:
+            if not once:
+                return graph
+            # once-rules may nest (A's RHS uses B, both used once): expand to
+            # fixpoint so no dangling reference to a dropped rule survives
+            partial = Grammar(self.table, graph,
+                              {l: self.rules[l] for l in once if l in self.rules})
+            changed = True
+            while changed and partial.rules:
+                graph, changed = partial.expand_once(graph)
+            return graph
+
+        # expand_once on the full graph would expand all NTs; restrict by
+        # building a grammar containing only the inlined rules.
+        new_start = inline(sub.start)
+        new_rules = {}
+        for lbl, r in sub.rules.items():
+            if lbl in once:
+                continue
+            new_rules[lbl] = Rule(lbl, r.rank, inline(r.rhs))
+        return Grammar(self.table, new_start, new_rules)
+
+    def _renumber(self) -> "Grammar":
+        T = self.table.n_terminals
+        order = self._topological_order()
+        assert order is not None
+        mapping = {lbl: T + i for i, lbl in enumerate(order)}
+        # vectorized lookup table — sequential masked assignment would
+        # corrupt labels when old/new id ranges overlap
+        lut = np.arange(self.table.n_labels, dtype=np.int64)
+        for old, new in mapping.items():
+            lut[old] = new
+
+        def remap(graph: Hypergraph) -> Hypergraph:
+            labels = lut[graph.labels] if graph.n_edges else graph.labels.copy()
+            return Hypergraph(graph.n_nodes, labels, graph.nodes_flat.copy(), graph.offsets.copy())
+
+        new_ranks = np.concatenate(
+            [self.table.ranks[:T], [self.rules[lbl].rank for lbl in order]]
+        ).astype(np.int64)
+        table = LabelTable(new_ranks, T, self.table.names)
+        rules = {
+            mapping[lbl]: Rule(mapping[lbl], self.rules[lbl].rank, remap(self.rules[lbl].rhs))
+            for lbl in order
+        }
+        return Grammar(table, remap(self.start), rules)

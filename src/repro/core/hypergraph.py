@@ -1,0 +1,145 @@
+"""Array-based hypergraph with labeled (hyper)edges, per the paper's model.
+
+A hypergraph is ``G = (V, E)`` with ``V = {0..p}`` and edges ``e = a(v0..vk)``
+where ``a`` is a ranked label and duplicates among the ``vi`` are allowed
+(loops). We store edges in struct-of-arrays form:
+
+  labels[e]                -> label id of edge e
+  nodes_flat / offsets[e]  -> node tuple of edge e (ragged)
+
+Label ranks live in a :class:`LabelTable`; all edges of a label share its
+rank (paper assumption). Terminal labels occupy ids ``0..n_terminals-1``;
+nonterminals introduced by compression are appended after.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+
+@dataclass
+class LabelTable:
+    ranks: np.ndarray  # int64[n_labels]
+    n_terminals: int
+    names: list[str] | None = None  # dictionary strings for terminals
+
+    @classmethod
+    def terminals(cls, ranks, names=None) -> "LabelTable":
+        ranks = np.asarray(ranks, dtype=np.int64)
+        return cls(ranks=ranks, n_terminals=len(ranks), names=names)
+
+    @property
+    def n_labels(self) -> int:
+        return len(self.ranks)
+
+    def is_terminal(self, label) -> np.ndarray:
+        return np.asarray(label) < self.n_terminals
+
+    def add_label(self, rank: int) -> int:
+        """Append a nonterminal label; returns its id."""
+        self.ranks = np.concatenate([self.ranks, [rank]])
+        return len(self.ranks) - 1
+
+    def it_offsets(self) -> np.ndarray:
+        """Incidence-type id of (label a, connection m) is it_offsets[a] + m."""
+        return np.concatenate([[0], np.cumsum(self.ranks)]).astype(np.int64)
+
+    def copy(self) -> "LabelTable":
+        return LabelTable(self.ranks.copy(), self.n_terminals, self.names)
+
+
+@dataclass
+class Hypergraph:
+    n_nodes: int
+    labels: np.ndarray      # int64[E]
+    nodes_flat: np.ndarray  # int64[sum ranks]
+    offsets: np.ndarray     # int64[E+1]
+
+    @classmethod
+    def from_edges(cls, n_nodes: int, edges: list[tuple[int, list[int]]]) -> "Hypergraph":
+        """edges: list of (label, [v0..vk])."""
+        labels = np.array([e[0] for e in edges], dtype=np.int64)
+        tuples = [np.asarray(e[1], dtype=np.int64) for e in edges]
+        offsets = np.concatenate([[0], np.cumsum([len(t) for t in tuples])]).astype(np.int64)
+        nodes_flat = np.concatenate(tuples) if tuples else np.zeros(0, dtype=np.int64)
+        return cls(n_nodes, labels, nodes_flat, offsets)
+
+    @classmethod
+    def from_triples(cls, triples: np.ndarray, n_nodes: int) -> "Hypergraph":
+        """triples: int64[n, 3] rows (s, p, o) -> rank-2 edges p(s, o)."""
+        triples = np.asarray(triples, dtype=np.int64)
+        labels = triples[:, 1].copy()
+        nodes_flat = triples[:, [0, 2]].reshape(-1).copy()
+        offsets = np.arange(len(triples) + 1, dtype=np.int64) * 2
+        return cls(n_nodes, labels, nodes_flat, offsets)
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.labels)
+
+    def ranks(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    def edge_nodes(self, e: int) -> np.ndarray:
+        return self.nodes_flat[self.offsets[e]:self.offsets[e + 1]]
+
+    def edge_tuples(self) -> list[tuple[int, tuple[int, ...]]]:
+        """Python-friendly view (tests / small graphs only)."""
+        return [
+            (int(self.labels[e]), tuple(int(v) for v in self.edge_nodes(e)))
+            for e in range(self.n_edges)
+        ]
+
+    def canonical_multiset(self) -> set:
+        """Multiset of edges as a set of (label, nodes, multiplicity) triples."""
+        from collections import Counter
+
+        cnt = Counter(self.edge_tuples())
+        return {(lbl, nd, c) for (lbl, nd), c in cnt.items()}
+
+    def validate(self, table: LabelTable | None = None) -> None:
+        assert len(self.offsets) == self.n_edges + 1
+        assert self.offsets[0] == 0 and self.offsets[-1] == len(self.nodes_flat)
+        if self.n_edges:
+            assert self.nodes_flat.min() >= 0 and (self.n_nodes == 0 or self.nodes_flat.max() < self.n_nodes)
+        if table is not None and self.n_edges:
+            assert np.array_equal(self.ranks(), table.ranks[self.labels]), "edge arity != label rank"
+
+    def size_units(self) -> int:
+        """Integer-unit size model: 1 (label) + rank per edge (Maneth-style)."""
+        return int(self.n_edges + len(self.nodes_flat))
+
+    def select(self, mask: np.ndarray) -> "Hypergraph":
+        """Subgraph with edges where mask is True (nodes untouched)."""
+        idx = np.flatnonzero(mask)
+        return self.gather_edges(idx)
+
+    def gather_edges(self, idx: np.ndarray) -> "Hypergraph":
+        ranks = self.ranks()
+        new_labels = self.labels[idx]
+        new_ranks = ranks[idx]
+        new_offsets = np.concatenate([[0], np.cumsum(new_ranks)]).astype(np.int64)
+        # ragged gather of node tuples
+        take = _ragged_take(self.offsets, idx, new_ranks)
+        return Hypergraph(self.n_nodes, new_labels, self.nodes_flat[take], new_offsets)
+
+    def concat_edges(self, labels: np.ndarray, nodes_flat: np.ndarray, ranks: np.ndarray) -> "Hypergraph":
+        new_labels = np.concatenate([self.labels, labels])
+        new_flat = np.concatenate([self.nodes_flat, nodes_flat])
+        new_offsets = np.concatenate([self.offsets, self.offsets[-1] + np.cumsum(ranks)]).astype(np.int64)
+        return Hypergraph(self.n_nodes, new_labels, new_flat, new_offsets)
+
+    def copy(self) -> "Hypergraph":
+        return Hypergraph(self.n_nodes, self.labels.copy(), self.nodes_flat.copy(), self.offsets.copy())
+
+
+def _ragged_take(offsets: np.ndarray, idx: np.ndarray, out_ranks: np.ndarray) -> np.ndarray:
+    """Flat indices selecting the node tuples of edges `idx`."""
+    total = int(out_ranks.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    starts = offsets[idx]
+    out_offsets = np.concatenate([[0], np.cumsum(out_ranks)]).astype(np.int64)
+    pos = np.arange(total, dtype=np.int64) - np.repeat(out_offsets[:-1], out_ranks)
+    return np.repeat(starts, out_ranks) + pos

@@ -1,0 +1,66 @@
+"""ITR+ — frequent node labels become terminal hyperedges of rank 1.
+
+`x(v)` states node v carries label x: the dictionary stores one entry per
+*distinct* label instead of one RDF representation per labeled node, and
+rank-1 edges participate in digram replacement, so repeated (node label ×
+edge label) subgraphs compress into single nonterminals (paper §ITR+).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hypergraph import Hypergraph, LabelTable
+
+
+def attach_node_labels(
+    graph: Hypergraph, table: LabelTable, node_labels: np.ndarray
+) -> tuple[Hypergraph, LabelTable, int]:
+    """Append rank-1 edges `x(v)` for every labeled node.
+
+    node_labels: int64[n_nodes], -1 = unlabeled; values are indices into a
+    node-label alphabet appended to the terminal labels. Returns
+    (graph+, table+, first_node_label_id).
+    """
+    node_labels = np.asarray(node_labels, dtype=np.int64)
+    assert len(node_labels) == graph.n_nodes
+    n_label_kinds = int(node_labels.max()) + 1 if (node_labels >= 0).any() else 0
+    base = table.n_terminals
+    new_ranks = np.concatenate([table.ranks[:base], np.ones(n_label_kinds, dtype=np.int64), table.ranks[base:]])
+    # terminal block grows; nonterminal ids (if any) shift by n_label_kinds
+    assert base == table.n_labels, "attach node labels before compression"
+    new_table = LabelTable(new_ranks, base + n_label_kinds, table.names)
+
+    labeled = np.flatnonzero(node_labels >= 0)
+    lab_edges_labels = base + node_labels[labeled]
+    new_graph = graph.concat_edges(
+        lab_edges_labels.astype(np.int64),
+        labeled.astype(np.int64),
+        np.ones(len(labeled), dtype=np.int64),
+    )
+    return new_graph, new_table, base
+
+
+def strip_node_labels(
+    graph: Hypergraph, first_label_id: int, n_label_kinds: int
+) -> tuple[Hypergraph, np.ndarray]:
+    """Inverse of attach: split rank-1 label edges back into node_labels."""
+    ranks = graph.ranks()
+    is_label_edge = (
+        (graph.labels >= first_label_id)
+        & (graph.labels < first_label_id + n_label_kinds)
+        & (ranks == 1)
+    )
+    node_labels = np.full(graph.n_nodes, -1, dtype=np.int64)
+    lab = graph.select(is_label_edge)
+    node_labels[lab.nodes_flat] = lab.labels - first_label_id
+    return graph.select(~is_label_edge), node_labels
+
+
+def dictionary_cost_itr(node_label_strings: list[str], n_labeled_nodes: int, avg_node_repr: int = 24) -> int:
+    """ITR stores one RDF representation per labeled node (paper: |V| entries)."""
+    return n_labeled_nodes * avg_node_repr
+
+
+def dictionary_cost_itr_plus(node_label_strings: list[str]) -> int:
+    """ITR+ stores only the distinct label strings."""
+    return sum(len(s) + 1 for s in node_label_strings)

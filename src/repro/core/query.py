@@ -1,0 +1,145 @@
+"""Triple queries on the compressed grammar (paper §Answering triple queries).
+
+Patterns: any subset of (S, P, O) bound. Case analysis per the paper:
+
+* S or O bound  -> decompress one row of the start graph's incidence-matrix
+  k²-tree (no full decompression) to seed the worklist with incident edges.
+* only P bound  -> seed with start-graph edges labeled P (binary search on
+  the Elias–Fano label list) plus edges of every nonterminal A whose NT
+  matrix row says A can generate P.
+* nothing bound -> all start edges (equivalent to decompression).
+
+The worklist expands a nonterminal edge only if its attachment nodes can
+still contain bound S/O and NT[label, P] holds — pruned expansion is what
+makes queries fast on the grammar.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.encode import EncodedGrammar, encode
+from repro.core.grammar import Grammar
+from repro.core.succinct import K2Tree
+
+
+class TripleQueryEngine:
+    """Query engine over a grammar + its succinct encoding."""
+
+    def __init__(self, grammar: Grammar, encoded: EncodedGrammar | None = None):
+        self.grammar = grammar
+        self.encoded = encoded if encoded is not None else encode(grammar)
+        self.T = grammar.table.n_terminals
+        self.ranks = grammar.table.ranks
+        # NT reachability matrix, k²-compressed (paper: matrix NT)
+        gen = grammar.nt_generates()
+        if gen.size:
+            r, c = np.nonzero(gen)
+            self.nt_k2 = K2Tree(r, c, gen.shape[0], gen.shape[1])
+        else:
+            self.nt_k2 = None
+        self._nt_rows: dict[int, set] = {}
+        # decoded rule bodies (label, params) per nonterminal, memoized arrays
+        self._rules = {
+            lbl: [(int(r.rhs.labels[j]), r.rhs.edge_nodes(j)) for j in range(r.rhs.n_edges)]
+            for lbl, r in grammar.rules.items()
+        }
+        # per-edge start-graph reconstruction caches; materialized once as
+        # python lists so the per-query hot loop does O(1) lookups instead
+        # of numpy slicing per edge (paper-side hillclimb, EXPERIMENTS §Perf)
+        self._start_sorted = grammar.start.gather_edges(np.argsort(grammar.start.labels, kind="stable"))
+        self._sorted_labels = self._start_sorted.labels
+        g = self._start_sorted
+        self._edge_cache = [
+            (int(g.labels[j]), g.nodes_flat[g.offsets[j]:g.offsets[j + 1]])
+            for j in range(g.n_edges)
+        ]
+
+    # -- helpers --------------------------------------------------------
+    def _nt_generates(self, label: int, p: int) -> bool:
+        if self.nt_k2 is None:
+            return False
+        row = self._nt_rows.get(label)
+        if row is None:
+            row = set(self.nt_k2.row(label - self.T).tolist())
+            self._nt_rows[label] = row
+        return p in row
+
+    def _edge(self, j: int) -> tuple[int, np.ndarray]:
+        """Sorted-start edge j (pre-reconstructed at load)."""
+        return self._edge_cache[j]
+
+    def _edges_with_label(self, label: int) -> np.ndarray:
+        lo = np.searchsorted(self._sorted_labels, label, side="left")
+        hi = np.searchsorted(self._sorted_labels, label, side="right")
+        return np.arange(lo, hi, dtype=np.int64)
+
+    def _row_edges(self, node: int) -> np.ndarray:
+        """Edges incident to `node` via one k²-tree row decompression."""
+        if node < 0 or node >= self.encoded.incidence.n_rows:
+            return np.zeros(0, dtype=np.int64)
+        return self.encoded.incidence.row(node)
+
+    # -- main entry ------------------------------------------------------
+    def query(self, s: int | None, p: int | None, o: int | None) -> list[tuple]:
+        """Return matching terminal edges as (label, (v0..vk)) tuples."""
+        if s is not None or o is not None:
+            r = s if s is not None else o
+            seeds = [self._edge(int(j)) for j in self._row_edges(int(r))]
+        elif p is not None:
+            seeds = [self._edge(int(j)) for j in self._edges_with_label(int(p))]
+            for lbl in self._rules:
+                if self._nt_generates(lbl, int(p)):
+                    seeds.extend(self._edge(int(j)) for j in self._edges_with_label(lbl))
+        else:
+            g = self._start_sorted
+            seeds = [(int(g.labels[j]), g.edge_nodes(j)) for j in range(g.n_edges)]
+
+        out: list[tuple] = []
+        z = list(seeds)
+        while z:
+            label, nodes = z.pop()
+            if label >= self.T:  # nonterminal
+                if s is not None and s not in nodes:
+                    continue
+                if o is not None and o not in nodes:
+                    continue
+                if p is not None and not self._nt_generates(label, p):
+                    continue
+                for child_label, params in self._rules[label]:
+                    z.append((child_label, nodes[params]))
+            else:
+                if self._matches(label, nodes, s, p, o):
+                    out.append((label, tuple(int(v) for v in nodes)))
+        return out
+
+    @staticmethod
+    def _matches(label, nodes, s, p, o) -> bool:
+        if p is not None and label != p:
+            return False
+        if s is not None and (len(nodes) < 1 or nodes[0] != s):
+            return False
+        if o is not None and (len(nodes) < 2 or nodes[1] != o):
+            return False
+        return True
+
+    # -- convenience -----------------------------------------------------
+    def neighbors_out(self, v: int) -> np.ndarray:
+        """v ? ? -> distinct objects (outgoing neighborhood)."""
+        res = self.query(v, None, None)
+        return np.unique(np.array([e[1][1] for e in res if len(e[1]) >= 2], dtype=np.int64))
+
+    def neighbors_in(self, v: int) -> np.ndarray:
+        """? ? v -> distinct subjects (incoming neighborhood)."""
+        res = self.query(None, None, v)
+        return np.unique(np.array([e[1][0] for e in res if len(e[1]) >= 2], dtype=np.int64))
+
+
+def query_oracle(graph, s, p, o) -> list[tuple]:
+    """Reference: scan the uncompressed hypergraph (tests/benchmarks)."""
+    out = []
+    for e in range(graph.n_edges):
+        label = int(graph.labels[e])
+        nodes = graph.edge_nodes(e)
+        if TripleQueryEngine._matches(label, nodes, s, p, o):
+            out.append((label, tuple(int(v) for v in nodes)))
+    return out

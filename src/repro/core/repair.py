@@ -1,0 +1,311 @@
+"""The ITR RePair loop: count -> replace mfd -> update count -> prune.
+
+Replacement is a vectorized emulation of the paper's left-to-right pointer
+scan: per node, candidate edges are classed by which digram side(s) they can
+serve (A = side-0 only, C = side-1 only, B = both), greedily paired
+A×C, then leftovers×B, then B×B — a maximal matching at each node — and
+cross-node conflicts (an edge proposed at two nodes) are resolved by pair
+priority over a few rounds. Loops (e1 == e2) are never paired, matching the
+paper's `e1 != e2` requirement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.digram import (
+    DIGRAM_SHIFT,
+    DigramCounter,
+    incidences,
+    split_digram,
+    split_it,
+)
+from repro.core.grammar import Grammar, Rule
+from repro.core.hypergraph import Hypergraph, LabelTable
+
+
+@dataclass
+class RepairConfig:
+    max_rank: int = 32          # bound on new nonterminal rank (gRePair-style guard)
+    cap: int | None = 64        # per-node distinct incidence-type cap (None = exact)
+    selection: str = "count"    # "count" = paper's mfd; "savings" = beyond-paper
+    max_iters: int | None = None
+    prune: bool = True
+    min_count: int | None = None  # if set, replace while count >= min_count
+                                  # (overrides the unit-savings stop criterion)
+
+
+@dataclass
+class RepairStats:
+    iterations: int = 0
+    replaced_occurrences: int = 0
+    rules_created: int = 0
+    initial_size_units: int = 0
+    final_size_units: int = 0
+
+
+def compress(
+    graph: Hypergraph, table: LabelTable, config: RepairConfig | None = None
+) -> tuple[Grammar, RepairStats]:
+    """Run ITR compression; returns (grammar, stats). Inputs are not mutated."""
+    config = config or RepairConfig()
+    table = table.copy()
+    graph = graph.copy()
+    stats = RepairStats(initial_size_units=graph.size_units())
+    counter = DigramCounter(graph, table, cap=config.cap)
+    it_offsets = table.it_offsets()  # stable under label append
+    rules: dict[int, Rule] = {}
+    skip: set[int] = set()
+
+    while config.max_iters is None or stats.iterations < config.max_iters:
+        picked = _select_digram(counter, table, it_offsets, skip, config)
+        if picked is None:
+            break
+        key, _count = picked
+        it1, it2 = split_digram(key)
+        a1, m1 = split_it(it1, it_offsets)
+        a2, m2 = split_it(it2, it_offsets)
+        r1, r2 = int(table.ranks[a1]), int(table.ranks[a2])
+
+        e1s, e2s = _find_occurrences(graph, a1, m1, a2, m2, it1 == it2)
+        if len(e1s) == 0:
+            skip.add(key)  # count is positive but only self-pairs exist
+            continue
+
+        new_label = table.add_label(r1 + r2 - 1)
+        it_offsets = table.it_offsets()
+        rules[new_label] = _make_rule(new_label, a1, m1, r1, a2, m2, r2)
+        graph, removed_inc, added_inc = _replace(
+            graph, table, e1s, e2s, a1, m1, r1, a2, m2, r2, new_label
+        )
+        counter.apply_delta(removed_inc, added_inc)
+        stats.iterations += 1
+        stats.replaced_occurrences += len(e1s)
+        stats.rules_created += 1
+
+    grammar = Grammar(table, graph, rules)
+    if config.prune:
+        grammar = grammar.prune()
+    stats.final_size_units = grammar.size_units()
+    return grammar, stats
+
+
+# ----------------------------------------------------------------------
+def _savings(count: int, r1: int, r2: int) -> int:
+    # each replaced occurrence trades edges of cost (1+r1)+(1+r2) for one of
+    # cost (1 + r1+r2-1): gain 2 units; the rule costs 3 + r1 + r2 units.
+    return 2 * count - (3 + r1 + r2)
+
+
+def _select_digram(counter, table, it_offsets, skip, config):
+    """Pick the next digram per config.selection; None = stop."""
+    if config.selection == "count":
+        while True:
+            best = counter.pop_best(skip)
+            if best is None:
+                return None
+            key, cnt = best
+            it1, it2 = split_digram(key)
+            a1, _ = split_it(it1, it_offsets)
+            a2, _ = split_it(it2, it_offsets)
+            r1, r2 = int(table.ranks[a1]), int(table.ranks[a2])
+            if r1 + r2 - 1 > config.max_rank:
+                skip.add(key)
+                continue
+            if config.min_count is not None:
+                if cnt < config.min_count:
+                    return None
+            elif _savings(cnt, r1, r2) <= 0:
+                return None  # paper: stop when the mfd no longer shrinks the grammar
+            return key, cnt
+    elif config.selection == "savings":
+        # scan candidates in count order; savings <= 2*cnt - 5, so we can
+        # stop scanning once that bound cannot beat the best found.
+        import heapq
+
+        popped = []
+        best_key, best_score, best_cnt = None, 0, 0
+        while True:
+            item = counter.pop_best(skip)
+            if item is None:
+                break
+            key, cnt = item
+            if 2 * cnt - 5 <= best_score:
+                break
+            # temporarily remove from heap to see the next one
+            heapq.heappop(counter._heap)
+            popped.append((-cnt, key))
+            it1, it2 = split_digram(key)
+            a1, _ = split_it(it1, it_offsets)
+            a2, _ = split_it(it2, it_offsets)
+            r1, r2 = int(table.ranks[a1]), int(table.ranks[a2])
+            if r1 + r2 - 1 > config.max_rank:
+                skip.add(key)
+                continue
+            score = _savings(cnt, r1, r2)
+            if score > best_score:
+                best_key, best_score, best_cnt = key, score, cnt
+        for entry in popped:
+            heapq.heappush(counter._heap, entry)
+        if best_key is None or best_score <= 0:
+            return None
+        return best_key, best_cnt
+    raise ValueError(f"unknown selection {config.selection}")
+
+
+# ----------------------------------------------------------------------
+def _find_occurrences(graph, a1, m1, a2, m2, same_it):
+    """Greedy maximal set of non-overlapping occurrences; returns (e1s, e2s)."""
+    labels = graph.labels
+    starts = graph.offsets[:-1]
+    if same_it:
+        cand = np.flatnonzero(labels == a1)
+        v = graph.nodes_flat[starts[cand] + m1]
+        order = np.lexsort((cand, v))
+        cand, v = cand[order], v[order]
+        # pair consecutive edges within each node group
+        grp_start = np.concatenate([[True], v[1:] != v[:-1]])
+        idx_in_grp = np.arange(len(v)) - np.maximum.accumulate(np.where(grp_start, np.arange(len(v)), 0))
+        is_first = (idx_in_grp % 2 == 0) & (np.arange(len(v)) + 1 < len(v))
+        partner_same_node = np.zeros(len(v), bool)
+        partner_same_node[:-1] = v[:-1] == v[1:]
+        take = is_first & partner_same_node
+        e1s = cand[np.flatnonzero(take)]
+        e2s = cand[np.flatnonzero(take) + 1]
+        return e1s, e2s
+
+    avail = np.ones(graph.n_edges, dtype=bool)
+    out1, out2 = [], []
+    for _round in range(64):
+        c1 = np.flatnonzero((labels == a1) & avail)
+        c2 = np.flatnonzero((labels == a2) & avail)
+        if len(c1) == 0 or len(c2) == 0:
+            break
+        v1 = graph.nodes_flat[starts[c1] + m1]
+        v2 = graph.nodes_flat[starts[c2] + m2]
+        p1, p2 = _propose_pairs(c1, v1, c2, v2)
+        if len(p1) == 0:
+            break
+        # cross-node conflict resolution: keep the lowest-priority pair per edge
+        pid = np.arange(len(p1), dtype=np.int64)
+        min_pid = np.full(graph.n_edges, len(p1), dtype=np.int64)
+        np.minimum.at(min_pid, p1, pid)
+        np.minimum.at(min_pid, p2, pid)
+        keep = (min_pid[p1] == pid) & (min_pid[p2] == pid)
+        kept1, kept2 = p1[keep], p2[keep]
+        if len(kept1) == 0:
+            break
+        out1.append(kept1)
+        out2.append(kept2)
+        avail[kept1] = False
+        avail[kept2] = False
+        if keep.all():
+            break  # nothing was dropped; no edge left to retry
+    if not out1:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    return np.concatenate(out1), np.concatenate(out2)
+
+
+def _propose_pairs(c1, v1, c2, v2):
+    """Per-node greedy pairing of side-0 (c1@v1) and side-1 (c2@v2) candidates."""
+    # class rows: (node, edge, side-bit); merge edges appearing on both sides at a node
+    nodes = np.concatenate([v1, v2])
+    edges = np.concatenate([c1, c2])
+    bits = np.concatenate([np.ones(len(c1), np.int64), np.full(len(c2), 2, np.int64)])
+    key = nodes * (edges.max() + 1) + edges
+    uk, inv = np.unique(key, return_inverse=True)
+    flag = np.zeros(len(uk), dtype=np.int64)
+    np.bitwise_or.at(flag, inv, bits)
+    u_nodes = uk // (edges.max() + 1)
+    u_edges = uk % (edges.max() + 1)
+    # class: A=1 (side0 only), C=2 (side1 only), B=3 (both); sort (node, class, edge)
+    order = np.lexsort((u_edges, flag, u_nodes))
+    u_nodes, u_edges, flag = u_nodes[order], u_edges[order], flag[order]
+
+    grp_start = np.flatnonzero(np.concatenate([[True], u_nodes[1:] != u_nodes[:-1]]))
+    grp_end = np.concatenate([grp_start[1:], [len(u_nodes)]])
+    # per-node segment offsets of classes A(1), C(2), B(3) — classes are
+    # contiguous within a node group because we sorted by flag
+    a_cnt = np.zeros(len(grp_start), np.int64)
+    c_cnt = np.zeros(len(grp_start), np.int64)
+    b_cnt = np.zeros(len(grp_start), np.int64)
+    gidx = np.repeat(np.arange(len(grp_start)), grp_end - grp_start)
+    np.add.at(a_cnt, gidx, flag == 1)
+    np.add.at(c_cnt, gidx, flag == 2)
+    np.add.at(b_cnt, gidx, flag == 3)
+    a_off = grp_start
+    c_off = grp_start + a_cnt
+    b_off = c_off + c_cnt
+
+    p_ac = np.minimum(a_cnt, c_cnt)
+    rem_a = a_cnt - p_ac
+    rem_c = c_cnt - p_ac
+    p_ab = np.minimum(rem_a, b_cnt)
+    p_bc = np.minimum(rem_c, b_cnt - p_ab)
+    p_bb = (b_cnt - p_ab - p_bc) // 2
+
+    def ragged(offsets_l, counts, offsets_r, counts_r=None, stride_l=1, stride_r=1, base_r=0):
+        tot = int(counts.sum())
+        if tot == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        i = np.arange(tot, dtype=np.int64) - np.repeat(np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
+        left = np.repeat(offsets_l, counts) + stride_l * i
+        right = np.repeat(offsets_r, counts) + stride_r * i + base_r
+        return left, right
+
+    l_ac, r_ac = ragged(a_off, p_ac, c_off)
+    l_ab, r_ab = ragged(a_off + p_ac, p_ab, b_off)            # A leftover × B(as side1)
+    l_bc, r_bc = ragged(b_off, p_bc, c_off + p_ac)            # B(as side0) × C leftover
+    bb_start = b_off + p_ab + p_bc
+    l_bb, r_bb = ragged(bb_start, p_bb, bb_start, stride_l=2, stride_r=2, base_r=1)
+
+    left = np.concatenate([l_ac, l_ab, l_bc, l_bb])
+    right = np.concatenate([r_ac, r_ab, r_bc, r_bb])
+    return u_edges[left], u_edges[right]
+
+
+# ----------------------------------------------------------------------
+def _others(rank: int, m: int) -> np.ndarray:
+    return np.array([x for x in range(rank) if x != m], dtype=np.int64)
+
+
+def _make_rule(new_label, a1, m1, r1, a2, m2, r2) -> Rule:
+    """B -> { a1(params), a2(params) } with shared node = external 0."""
+    new_rank = r1 + r2 - 1
+    p1 = np.zeros(r1, dtype=np.int64)
+    p1[_others(r1, m1)] = np.arange(1, r1)
+    p2 = np.zeros(r2, dtype=np.int64)
+    p2[_others(r2, m2)] = np.arange(r1, r1 + r2 - 1)
+    rhs = Hypergraph.from_edges(new_rank, [(a1, p1.tolist()), (a2, p2.tolist())])
+    return Rule(new_label, new_rank, rhs)
+
+
+def _replace(graph, table, e1s, e2s, a1, m1, r1, a2, m2, r2, new_label):
+    """Swap matched edge pairs for new_label hyperedges; return incidence deltas."""
+    starts = graph.offsets[:-1]
+    mat1 = graph.nodes_flat[starts[e1s][:, None] + np.arange(r1)[None, :]]
+    mat2 = graph.nodes_flat[starts[e2s][:, None] + np.arange(r2)[None, :]]
+    shared = mat1[:, m1]
+    new_mat = np.concatenate(
+        [shared[:, None], mat1[:, _others(r1, m1)], mat2[:, _others(r2, m2)]], axis=1
+    )
+
+    removed = np.zeros(graph.n_edges, dtype=bool)
+    removed[e1s] = True
+    removed[e2s] = True
+    removed_graph = graph.select(removed)
+    rem_inc = incidences(removed_graph, table)
+
+    new_rank = r1 + r2 - 1
+    kept = graph.select(~removed)
+    n_new = len(e1s)
+    out = kept.concat_edges(
+        np.full(n_new, new_label, dtype=np.int64),
+        new_mat.reshape(-1),
+        np.full(n_new, new_rank, dtype=np.int64),
+    )
+    it_offsets = table.it_offsets()
+    add_nodes = new_mat.reshape(-1)
+    add_its = np.tile(it_offsets[new_label] + np.arange(new_rank), n_new)
+    return out, rem_inc, (add_nodes, add_its)

@@ -1,0 +1,131 @@
+"""Elias gamma / delta universal codes over uint32 word streams.
+
+The encoder is vectorized: per-value code words (<= 64 bits each) are OR-
+scattered into the output word array with at most three word touches per
+code. The decoder walks the bitstream through one arbitrary-precision
+integer (CPython big-int bit ops are C-speed), which is plenty for the
+rule-decode path — rules are decoded once at load time and memoized.
+
+Codes encode x >= 1; callers encoding values >= 0 shift by one.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _bit_length(x: np.ndarray) -> np.ndarray:
+    """floor(log2(x)) + 1 for x >= 1, vectorized."""
+    x = x.astype(np.uint64)
+    out = np.zeros(x.shape, dtype=np.int64)
+    cur = x.copy()
+    for shift in (32, 16, 8, 4, 2, 1):
+        ge = cur >= (np.uint64(1) << np.uint64(shift))
+        out += np.where(ge, shift, 0)
+        cur = np.where(ge, cur >> np.uint64(shift), cur)
+    return out + 1
+
+
+def _gamma_parts(x: np.ndarray):
+    """Return (code_as_uint64, length_bits) for gamma(x), LSB-first layout.
+
+    gamma(x) = (N zeros) then reversed? We use the LSB-first convention:
+    the decoder reads unary zeros, a terminating 1, then N payload bits
+    (LSB first). Code = [0]*N + [1] + low N bits of x.
+    Bit i of the returned integer is the i-th bit written to the stream.
+    """
+    x = x.astype(np.uint64)
+    n = _bit_length(x) - 1  # payload bits
+    # bit layout: positions 0..n-1 zeros, position n one, n+1..2n payload
+    payload = x - (np.uint64(1) << n.astype(np.uint64))  # strip leading 1
+    code = (np.uint64(1) << n.astype(np.uint64)) | (payload << (n + 1).astype(np.uint64))
+    return code, 2 * n + 1
+
+
+def gamma_encode(values: np.ndarray) -> tuple[np.ndarray, int]:
+    values = np.asarray(values, dtype=np.uint64)
+    if np.any(values < 1):
+        raise ValueError("gamma code requires values >= 1")
+    codes, lengths = _gamma_parts(values)
+    return _pack_codes(codes, lengths)
+
+
+def delta_encode(values: np.ndarray) -> tuple[np.ndarray, int]:
+    """Elias delta: gamma(bitlen(x)) followed by the bitlen(x)-1 payload bits."""
+    values = np.asarray(values, dtype=np.uint64)
+    if values.size == 0:
+        return np.zeros(0, dtype=np.uint32), 0
+    if np.any(values < 1):
+        raise ValueError("delta code requires values >= 1")
+    nbits = _bit_length(values)  # L = N + 1
+    g_code, g_len = _gamma_parts(nbits.astype(np.uint64))
+    payload_len = nbits - 1
+    payload = values - (np.uint64(1) << payload_len.astype(np.uint64))
+    code = g_code | (payload << g_len.astype(np.uint64))
+    total_len = g_len + payload_len
+    if np.any(total_len > 64):
+        raise ValueError("delta codes over 64 bits unsupported (value too large)")
+    return _pack_codes(code, total_len)
+
+
+def _pack_codes(codes: np.ndarray, lengths: np.ndarray) -> tuple[np.ndarray, int]:
+    """OR-scatter LSB-first codes into a uint32 word array."""
+    lengths = np.asarray(lengths, dtype=np.int64)
+    offsets = np.concatenate([[0], np.cumsum(lengths)])
+    total_bits = int(offsets[-1])
+    n_words = (total_bits + 31) // 32 + 2  # slack for the 3-word writes
+    words = np.zeros(n_words, dtype=np.uint64)
+    starts = offsets[:-1]
+    w0 = starts >> 5
+    s = (starts & 31).astype(np.uint64)
+    lo64 = (codes << s).astype(np.uint64)  # wraps mod 2^64 == low 64 bits
+    hi = np.where(s > 0, codes >> (np.uint64(64) - s), np.uint64(0))
+    np.bitwise_or.at(words, w0, lo64 & np.uint64(0xFFFFFFFF))
+    np.bitwise_or.at(words, w0 + 1, lo64 >> np.uint64(32))
+    np.bitwise_or.at(words, w0 + 2, hi & np.uint64(0xFFFFFFFF))
+    out = words[: (total_bits + 31) // 32].astype(np.uint32)
+    return out, total_bits
+
+
+class _BitReader:
+    """Sequential bit reader over packed words using one big int."""
+
+    def __init__(self, words: np.ndarray, n_bits: int):
+        self.big = int.from_bytes(np.ascontiguousarray(words, dtype="<u4").tobytes(), "little")
+        self.n_bits = n_bits
+        self.pos = 0
+
+    def read_unary_zeros(self) -> int:
+        z = 0
+        big, pos = self.big, self.pos
+        while not (big >> pos) & 1:
+            z += 1
+            pos += 1
+            if pos > self.n_bits:
+                raise ValueError("ran off bitstream in unary read")
+        self.pos = pos + 1  # consume terminating 1
+        return z
+
+    def read_bits(self, k: int) -> int:
+        v = (self.big >> self.pos) & ((1 << k) - 1)
+        self.pos += k
+        return v
+
+
+def gamma_decode(words: np.ndarray, n_bits: int, count: int) -> np.ndarray:
+    r = _BitReader(words, n_bits)
+    out = np.empty(count, dtype=np.uint64)
+    for i in range(count):
+        n = r.read_unary_zeros()
+        out[i] = (1 << n) | r.read_bits(n)
+    return out
+
+
+def delta_decode(words: np.ndarray, n_bits: int, count: int) -> np.ndarray:
+    r = _BitReader(words, n_bits)
+    out = np.empty(count, dtype=np.uint64)
+    for i in range(count):
+        n = r.read_unary_zeros()
+        nbits = (1 << n) | r.read_bits(n)  # = bit length L of the value
+        payload = r.read_bits(int(nbits) - 1)
+        out[i] = (1 << (int(nbits) - 1)) | payload
+    return out

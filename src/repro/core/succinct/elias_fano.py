@@ -1,0 +1,84 @@
+"""Quasi-succinct Elias–Fano encoding of monotone non-decreasing sequences.
+
+Used by ITR for the sorted list of per-edge label IDs in the start graph
+(paper §Succinct Encoding, citing Vigna [12]). Supports O(1) `access` via
+select1 on the upper-bits bitvector and O(log) `rank_leq` / predecessor.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.succinct.bitvector import BitVector
+
+
+class EliasFano:
+    def __init__(self, values: np.ndarray, universe: int | None = None):
+        values = np.asarray(values, dtype=np.int64)
+        if len(values) and np.any(np.diff(values) < 0):
+            raise ValueError("EliasFano requires a non-decreasing sequence")
+        self.n = int(len(values))
+        self.universe = int(universe if universe is not None else (values[-1] + 1 if self.n else 1))
+        n = max(self.n, 1)
+        self.l = max(0, int(np.floor(np.log2(max(self.universe, 1) / n))) if self.universe > n else 0)
+        low_mask = (1 << self.l) - 1
+        self._lows = (values & low_mask).astype(np.uint64) if self.l > 0 else np.zeros(self.n, dtype=np.uint64)
+        highs = (values >> self.l).astype(np.int64)
+        # upper bitvector: for item i, a 1 at position highs[i] + i
+        n_upper = self.n + (int(highs[-1]) if self.n else 0) + 1
+        self._upper = BitVector.from_positions(highs + np.arange(self.n), n_upper)
+        # packed low bits
+        self._low_words, self._low_bits = self._pack_lows()
+
+    def _pack_lows(self):
+        if self.l == 0 or self.n == 0:
+            return np.zeros(0, dtype=np.uint32), 0
+        total_bits = self.n * self.l
+        starts = np.arange(self.n, dtype=np.int64) * self.l
+        w0 = starts >> 5
+        s = (starts & 31).astype(np.uint64)
+        lo64 = (self._lows << s).astype(np.uint64)
+        # pack into 32-bit lanes via 64-bit scatter
+        words32 = np.zeros(total_bits // 32 + 3, dtype=np.uint64)
+        hi = np.where(s > 0, self._lows >> (np.uint64(64) - s), np.uint64(0))
+        np.bitwise_or.at(words32, w0, lo64 & np.uint64(0xFFFFFFFF))
+        np.bitwise_or.at(words32, w0 + 1, lo64 >> np.uint64(32))
+        np.bitwise_or.at(words32, w0 + 2, hi & np.uint64(0xFFFFFFFF))
+        return words32[: (total_bits + 31) // 32].astype(np.uint32), total_bits
+
+    def _low(self, i: np.ndarray) -> np.ndarray:
+        if self.l == 0:
+            return np.zeros(np.shape(i), dtype=np.int64)
+        i = np.asarray(i, dtype=np.int64)
+        starts = i * self.l
+        w0 = starts >> 5
+        s = (starts & 31).astype(np.uint64)
+        w = self._low_words
+        lo = w[w0].astype(np.uint64)
+        mid = np.where(w0 + 1 < len(w), w[np.minimum(w0 + 1, len(w) - 1)], 0).astype(np.uint64)
+        merged = lo | (mid << np.uint64(32))
+        return ((merged >> s) & np.uint64((1 << self.l) - 1)).astype(np.int64)
+
+    def access(self, i) -> np.ndarray:
+        """values[i]; accepts scalars or arrays."""
+        i_arr = np.asarray(i, dtype=np.int64)
+        high = self._upper.select1(i_arr) - i_arr
+        return (high << self.l) | self._low(i_arr)
+
+    def to_numpy(self) -> np.ndarray:
+        if self.n == 0:
+            return np.zeros(0, dtype=np.int64)
+        return self.access(np.arange(self.n))
+
+    def rank_leq(self, x: int) -> int:
+        """Number of stored values <= x (binary search on access)."""
+        lo, hi = 0, self.n
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if int(self.access(mid)) <= x:
+                lo = mid + 1
+            else:
+                hi = mid
+        return lo
+
+    def size_in_bytes(self) -> int:
+        return self._upper.size_in_bytes() + self._low_words.nbytes + 16

@@ -1,0 +1,131 @@
+"""k²-tree (Brisaboa et al. [7]) over a sparse 0/1 matrix, built from COO.
+
+ITR uses k²-trees twice: for the node×edge *incidence matrix* of the start
+graph, and for the NT (nonterminal × terminal-label) reachability matrix of
+the triple-query engine.
+
+Layout note: the classic structure concatenates all internal levels into one
+bitmap T plus a leaf bitmap L and navigates with a single rank. We keep one
+BitVector per level (identical total bit count, plus one pointer per level);
+child block of the j-th set bit of level t is block j of level t+1. This
+keeps construction fully vectorized (digit-radix sort per level) and row/
+column expansion a simple per-level frontier sweep.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.succinct.bitvector import BitVector
+
+
+class K2Tree:
+    def __init__(self, rows: np.ndarray, cols: np.ndarray, n_rows: int, n_cols: int, k: int = 2):
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        if rows.size:
+            if rows.min() < 0 or rows.max() >= n_rows or cols.min() < 0 or cols.max() >= n_cols:
+                raise ValueError("point out of bounds")
+        self.n_rows, self.n_cols, self.k = int(n_rows), int(n_cols), int(k)
+        side = max(n_rows, n_cols, 1)
+        h = 1
+        while k**h < side:
+            h += 1
+        self.h = h
+        self.side = k**h
+        self.n_points = 0
+        self.levels: list[BitVector] = []
+        self._build(rows, cols)
+
+    def _build(self, rows: np.ndarray, cols: np.ndarray):
+        k, k2, h = self.k, self.k * self.k, self.h
+        if rows.size == 0:
+            self.levels = [BitVector(np.zeros(k2, dtype=np.uint8))]
+            return
+        # dedup points
+        flat = rows * self.n_cols + cols
+        flat = np.unique(flat)
+        rows = flat // self.n_cols
+        cols = flat % self.n_cols
+        self.n_points = len(flat)
+
+        # child digit of each point at each level
+        childs = np.empty((h, len(rows)), dtype=np.int64)
+        for t in range(h):
+            scale = k ** (h - 1 - t)
+            childs[t] = (rows // scale % k) * k + (cols // scale % k)
+
+        levels = []
+        keys = np.zeros(len(rows), dtype=np.int64)  # node key at current level (root=0)
+        for t in range(h):
+            pair = keys * k2 + childs[t]
+            uniq_keys, key_idx = np.unique(keys, return_inverse=True)
+            uniq_pair = np.unique(pair)
+            bits = np.zeros(len(uniq_keys) * k2, dtype=np.uint8)
+            # position of each set child bit: parent's index in level order * k2 + child
+            parent_of_pair = np.searchsorted(uniq_keys, uniq_pair // k2)
+            bits[parent_of_pair * k2 + uniq_pair % k2] = 1
+            levels.append(BitVector(bits))
+            # next level node key = rank of (key,child) among set bits == index in uniq_pair
+            keys = np.searchsorted(uniq_pair, pair)
+        self.levels = levels
+
+    # ---------------- queries ----------------
+    def access(self, r: int, c: int) -> int:
+        k, k2 = self.k, self.k * self.k
+        block = 0
+        for t in range(self.h):
+            scale = k ** (self.h - 1 - t)
+            child = (r // scale % k) * k + (c // scale % k)
+            bitpos = block * k2 + child
+            if bitpos >= self.levels[t].n or not int(self.levels[t].access(bitpos)):
+                return 0
+            block = int(self.levels[t].rank1(bitpos))
+        return 1
+
+    def row(self, r: int) -> np.ndarray:
+        """All columns c with M[r, c] = 1, without decompressing the matrix."""
+        return self._line(r, axis=0)
+
+    def col(self, c: int) -> np.ndarray:
+        """All rows r with M[r, c] = 1."""
+        return self._line(c, axis=1)
+
+    def _line(self, fixed: int, axis: int) -> np.ndarray:
+        k, k2 = self.k, self.k * self.k
+        blocks = np.array([0], dtype=np.int64)
+        prefixes = np.array([0], dtype=np.int64)  # free-axis coordinate prefix
+        for t in range(self.h):
+            if len(blocks) == 0:
+                return np.zeros(0, dtype=np.int64)
+            scale = k ** (self.h - 1 - t)
+            fixed_digit = fixed // scale % k
+            # candidate children: fixed axis digit fixed, free axis digit 0..k-1
+            free = np.arange(k, dtype=np.int64)
+            if axis == 0:  # row query: row digit fixed, col digit free
+                child = fixed_digit * k + free
+            else:  # col query: col digit fixed, row digit free
+                child = free * k + fixed_digit
+            bitpos = (blocks[:, None] * k2 + child[None, :]).reshape(-1)
+            new_prefix = (prefixes[:, None] * k + free[None, :]).reshape(-1)
+            lv = self.levels[t]
+            valid = bitpos < lv.n
+            setbit = np.zeros(len(bitpos), dtype=bool)
+            if valid.any():
+                setbit[valid] = lv.access(bitpos[valid]).astype(bool)
+            bitpos, new_prefix = bitpos[setbit], new_prefix[setbit]
+            if t < self.h - 1:
+                blocks = lv.rank1(bitpos)
+                prefixes = new_prefix
+            else:
+                limit = self.n_cols if axis == 0 else self.n_rows
+                return np.sort(new_prefix[new_prefix < limit])
+        return np.zeros(0, dtype=np.int64)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n_rows, self.n_cols), dtype=np.uint8)
+        for r in range(self.n_rows):
+            out[r, self.row(r)] = 1
+        return out
+
+    def size_in_bytes(self) -> int:
+        return sum(lv.size_in_bytes() for lv in self.levels) + 8 * len(self.levels)

@@ -1,0 +1,17 @@
+"""Data layer: synthetic graph generators (paper-dataset stand-ins), an
+N-Triples parser, the ITR-compressed GraphStore, and neighbor samplers."""
+from repro.data.synthetic import rdf_like, version_graph, web_graph, molecule_batch
+from repro.data.graph_store import GraphStore
+from repro.data.sampler import NeighborSampler
+from repro.data.rdf import parse_ntriples, write_ntriples
+
+__all__ = [
+    "rdf_like",
+    "version_graph",
+    "web_graph",
+    "molecule_batch",
+    "GraphStore",
+    "NeighborSampler",
+    "parse_ntriples",
+    "write_ntriples",
+]

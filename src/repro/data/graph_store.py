@@ -1,0 +1,96 @@
+"""GraphStore — the paper's compressed graph as a first-class data-layer
+service of the training framework.
+
+Graphs are held as an ITR grammar; point lookups (neighborhoods, triple
+patterns) run on the compressed form via :class:`TripleQueryEngine`.
+Training hot paths (full-batch GNN adjacency, high-throughput fanout
+sampling) use a lazily *materialized* CSR view — decompressed once, cached —
+because a sampled-training step issues thousands of neighbor lookups per
+batch. Storage stays compressed; the CSR cache is working memory.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    Hypergraph,
+    LabelTable,
+    RepairConfig,
+    TripleQueryEngine,
+    compress,
+    encode,
+)
+
+
+class GraphStore:
+    def __init__(self, grammar, stats=None):
+        self.grammar = grammar
+        self.stats = stats
+        self.encoded = encode(grammar)
+        self.engine = TripleQueryEngine(grammar, self.encoded)
+        self._csr = None
+        self._csc = None
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def from_triples(
+        cls, triples: np.ndarray, n_nodes: int, n_preds: int, config: RepairConfig | None = None
+    ) -> "GraphStore":
+        table = LabelTable.terminals([2] * n_preds)
+        graph = Hypergraph.from_triples(triples, n_nodes)
+        grammar, stats = compress(graph, table, config)
+        return cls(grammar, stats)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.grammar.start.n_nodes
+
+    # ------------------------------------------------------- point paths
+    def neighbors_out(self, v: int) -> np.ndarray:
+        """Compressed-path neighborhood query (paper: `v ? ?`)."""
+        return self.engine.neighbors_out(v)
+
+    def neighbors_in(self, v: int) -> np.ndarray:
+        return self.engine.neighbors_in(v)
+
+    def triples(self, s=None, p=None, o=None) -> list[tuple]:
+        return self.engine.query(s, p, o)
+
+    def compressed_size_bytes(self) -> int:
+        return self.encoded.size_in_bytes()
+
+    # ---------------------------------------------------- training paths
+    def csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """(indptr, indices) over out-edges; materialized once."""
+        if self._csr is None:
+            g = self.grammar.decompress()
+            ranks = g.ranks()
+            r2 = ranks == 2
+            src = g.nodes_flat[g.offsets[:-1][r2]]
+            dst = g.nodes_flat[g.offsets[:-1][r2] + 1]
+            self._csr = _to_csr(src, dst, self.n_nodes)
+        return self._csr
+
+    def csc(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._csc is None:
+            g = self.grammar.decompress()
+            ranks = g.ranks()
+            r2 = ranks == 2
+            src = g.nodes_flat[g.offsets[:-1][r2]]
+            dst = g.nodes_flat[g.offsets[:-1][r2] + 1]
+            self._csc = _to_csr(dst, src, self.n_nodes)
+        return self._csc
+
+    def edge_index(self) -> tuple[np.ndarray, np.ndarray]:
+        """(senders, receivers) COO arrays for full-batch GNNs."""
+        indptr, indices = self.csr()
+        senders = np.repeat(np.arange(self.n_nodes), np.diff(indptr))
+        return senders, indices
+
+
+def _to_csr(src: np.ndarray, dst: np.ndarray, n: int) -> tuple[np.ndarray, np.ndarray]:
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    counts = np.bincount(src, minlength=n)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return indptr, dst.astype(np.int64)

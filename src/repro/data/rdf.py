@@ -1,0 +1,45 @@
+"""Minimal N-Triples reader/writer with ID dictionaries.
+
+The paper converts every dataset to RDF notation and feeds the same file to
+all compressors; this module is that common input path. Handles `<iri>`
+terms and `"literal"` objects; blank nodes `_:b` are treated as IRIs.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+_TERM = re.compile(r'(<[^>]*>|_:\S+|"(?:[^"\\]|\\.)*"(?:\^\^<[^>]*>|@[\w-]+)?)')
+
+
+def parse_ntriples(path: str):
+    """Returns (triples int64[n,3], node_names list, pred_names list)."""
+    nodes: dict[str, int] = {}
+    preds: dict[str, int] = {}
+    rows = []
+    with open(path, "r", encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            terms = _TERM.findall(line)
+            if len(terms) < 3:
+                continue
+            s_t, p_t, o_t = terms[0], terms[1], terms[2]
+            s = nodes.setdefault(s_t, len(nodes))
+            p = preds.setdefault(p_t, len(preds))
+            o = nodes.setdefault(o_t, len(nodes))
+            rows.append((s, p, o))
+    triples = np.array(rows, dtype=np.int64) if rows else np.zeros((0, 3), dtype=np.int64)
+    return triples, list(nodes), list(preds)
+
+
+def write_ntriples(path: str, triples: np.ndarray, node_names=None, pred_names=None):
+    triples = np.asarray(triples, dtype=np.int64)
+    with open(path, "w", encoding="utf-8") as fh:
+        for s, p, o in triples:
+            s_t = node_names[s] if node_names else f"<http://ex.org/n{s}>"
+            p_t = pred_names[p] if pred_names else f"<http://ex.org/p{p}>"
+            o_t = node_names[o] if node_names else f"<http://ex.org/n{o}>"
+            fh.write(f"{s_t} {p_t} {o_t} .\n")

@@ -1,0 +1,70 @@
+"""Fanout neighbor sampler (GraphSAGE-style) over a GraphStore CSR view.
+
+Produces layered subgraph batches for `minibatch_lg`: seed nodes, then for
+each hop a uniform sample of up to `fanout[h]` in-neighbors per frontier
+node. Output is a bipartite block per hop (senders/receivers into a
+compacted node set) — the exact structure the GNN minibatch step consumes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class SampledBlock:
+    senders: np.ndarray     # positions into the previous layer's node list
+    receivers: np.ndarray   # positions into the next (smaller) node list
+    n_src: int
+    n_dst: int
+
+
+@dataclass
+class SampledBatch:
+    node_ids: np.ndarray    # global ids of all nodes needed (layer-0 first)
+    blocks: list[SampledBlock]
+    seeds: np.ndarray
+
+
+class NeighborSampler:
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray, fanouts: tuple[int, ...]):
+        self.indptr, self.indices = indptr, indices
+        self.fanouts = tuple(fanouts)
+
+    def sample(self, seeds: np.ndarray, rng: np.random.Generator) -> SampledBatch:
+        seeds = np.asarray(seeds, dtype=np.int64)
+        layers = [seeds]
+        edges_per_hop = []
+        frontier = seeds
+        for f in self.fanouts:
+            deg = self.indptr[frontier + 1] - self.indptr[frontier]
+            take = np.minimum(deg, f)
+            # ragged uniform sample without replacement approximated by
+            # with-replacement draw then dedup per (dst, src)
+            dst_rep = np.repeat(np.arange(len(frontier)), take)
+            base = np.repeat(self.indptr[frontier], take)
+            degs = np.repeat(np.maximum(deg, 1), take)
+            offs = (rng.random(len(base)) * degs).astype(np.int64)
+            src = self.indices[base + offs]
+            key = dst_rep * (self.indices.max() + 2) + src
+            _, uniq_idx = np.unique(key, return_index=True)
+            dst_rep, src = dst_rep[uniq_idx], src[uniq_idx]
+            edges_per_hop.append((src, dst_rep))
+            frontier = np.unique(src)
+            layers.append(frontier)
+
+        # compact node ids: union of all layers, seeds keep positions 0..len-1
+        all_nodes = np.concatenate(layers)
+        node_ids, first_pos = np.unique(all_nodes, return_index=True)
+        # build position lookup
+        lookup = {int(v): i for i, v in enumerate(node_ids)}
+        blocks = []
+        for hop, (src, dst_rep) in enumerate(edges_per_hop):
+            dst_global = layers[hop][dst_rep]
+            senders = np.array([lookup[int(v)] for v in src], dtype=np.int64)
+            receivers = np.array([lookup[int(v)] for v in dst_global], dtype=np.int64)
+            blocks.append(
+                SampledBlock(senders, receivers, n_src=len(node_ids), n_dst=len(node_ids))
+            )
+        return SampledBatch(node_ids=node_ids, blocks=blocks, seeds=seeds)

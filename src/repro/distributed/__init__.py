@@ -1,0 +1,10 @@
+"""Distribution utilities: logical-axis sharding rules and collective helpers."""
+from repro.distributed.sharding import (
+    LOGICAL_RULES,
+    logical_spec,
+    shard,
+    param_spec,
+    zero1_spec,
+)
+
+__all__ = ["LOGICAL_RULES", "logical_spec", "shard", "param_spec", "zero1_spec"]

@@ -1,0 +1,103 @@
+"""Collective-aware aggregation primitives.
+
+`partitioned_segment_sum` is the §Perf-D GNN optimization: when the data
+layer partitions edges by receiver block (receivers sorted, shard s owning
+node rows [s·rows, (s+1)·rows)), message aggregation becomes a *local*
+scatter per shard via shard_map — the plain `jax.ops.segment_sum` over
+edge-sharded messages otherwise all-reduces the full (N, d) node aggregate
+on every layer (measured: ~96 × 48 MB tuples per gatedgcn/minibatch step).
+
+Contract: edges must be receiver-block-partitioned to match the flattened
+mesh (the GraphStore/NeighborSampler `partition_edges` helpers provide
+this); `validate_partitioning` checks it host-side in tests/loaders.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if m is None or not m.shape:
+        return None
+    return m
+
+
+def partitioned_segment_sum(msgs, receivers, n_nodes: int):
+    """Σ_{e: recv[e]=r} msgs[e] -> (n_nodes, d); local scatter per shard.
+
+    Falls back to jax.ops.segment_sum when no mesh is active or shapes
+    don't divide the device grid.
+    """
+    mesh = _active_mesh()
+    if mesh is None:
+        return jax.ops.segment_sum(msgs, receivers, num_segments=n_nodes)
+    if msgs.ndim == 1:  # e.g. degree counts
+        return partitioned_segment_sum(msgs[:, None], receivers, n_nodes)[:, 0]
+    axes = tuple(mesh.axis_names)
+    n_dev = 1
+    for a in axes:
+        n_dev *= dict(mesh.shape)[a]
+    E = msgs.shape[0]
+    if E % n_dev or n_nodes % n_dev or n_dev == 1:
+        return jax.ops.segment_sum(msgs, receivers, num_segments=n_nodes)
+    rows = n_nodes // n_dev
+
+    def local(m_loc, r_loc):
+        dev = jax.lax.axis_index(axes)
+        lo = dev * rows
+        rel = r_loc - lo
+        # contract: 0 <= rel < rows (receiver-partitioned edges); clip is a
+        # safety net so violations corrupt locally instead of crashing
+        rel = jnp.clip(rel, 0, rows - 1)
+        return jax.ops.segment_sum(m_loc, rel, num_segments=rows)
+
+    spec_e = P(axes) if len(axes) > 1 else P(axes[0])
+    out = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(spec_e[0], None), spec_e),
+        out_specs=P(spec_e[0], None),
+    )(msgs, receivers)
+    return out
+
+
+def partition_edges(senders: np.ndarray, receivers: np.ndarray, n_nodes: int,
+                    n_shards: int):
+    """Host-side loader step: sort edges by receiver block and pad each
+    shard's slice to equal length (padding edges point at the shard's first
+    row with a sentinel sender -1 the caller masks).
+
+    Returns (senders', receivers', pad_mask) each of length
+    n_shards * max_per_shard.
+    """
+    rows = (n_nodes + n_shards - 1) // n_shards
+    blk = receivers // rows
+    order = np.argsort(blk, kind="stable")
+    senders, receivers, blk = senders[order], receivers[order], blk[order]
+    counts = np.bincount(blk, minlength=n_shards)
+    per = int(counts.max()) if len(counts) else 1
+    out_s = np.full(n_shards * per, -1, dtype=np.int64)
+    out_r = np.empty(n_shards * per, dtype=np.int64)
+    for s in range(n_shards):
+        out_r[s * per:(s + 1) * per] = s * rows  # pad targets: shard-local row
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(len(receivers)) - np.repeat(starts, counts)
+    idx = blk * per + pos
+    out_s[idx] = senders
+    out_r[idx] = receivers
+    return out_s, out_r, out_s >= 0
+
+
+def validate_partitioning(receivers: np.ndarray, n_nodes: int, n_shards: int) -> bool:
+    rows = (n_nodes + n_shards - 1) // n_shards
+    per = len(receivers) // n_shards
+    blk = np.asarray(receivers) // rows
+    want = np.repeat(np.arange(n_shards), per)
+    return bool((blk == want).all())

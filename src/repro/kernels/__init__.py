@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel lives in its own module (pl.pallas_call + BlockSpec), has a
+pure-jnp oracle in `ref.py`, and a jitted wrapper in `ops.py` that picks
+interpret mode off-TPU. See tests/test_kernels_*.py for the sweep tests.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    bitvec_rank,
+    build_csr_blocks,
+    csr_spmm,
+    digram_pair_counts,
+    dot_interaction,
+    embedding_bag,
+    flash_attention,
+)
+
+__all__ = [
+    "ops",
+    "ref",
+    "bitvec_rank",
+    "build_csr_blocks",
+    "csr_spmm",
+    "digram_pair_counts",
+    "dot_interaction",
+    "embedding_bag",
+    "flash_attention",
+]

@@ -1,0 +1,51 @@
+"""Batched bitvector rank1 Pallas kernel (query-time hot op of the k²-tree).
+
+rank1(pos) = word_ranks[pos/32] + popcount(words[pos/32] & mask(pos%32)).
+Popcount is the SWAR bit dance on uint32 lanes — no LUT, pure VPU ops.
+Full words + prefix ranks are resident; positions are blocked on the grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _popcount32(x):
+    m1 = jnp.uint32(0x55555555)
+    m2 = jnp.uint32(0x33333333)
+    m4 = jnp.uint32(0x0F0F0F0F)
+    x = x - ((x >> 1) & m1)
+    x = (x & m2) + ((x >> 2) & m2)
+    x = (x + (x >> 4)) & m4
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _rank_kernel(pos_ref, words_ref, ranks_ref, o_ref):
+    pos = pos_ref[...]
+    w = pos >> 5
+    rem = (pos & 31).astype(jnp.uint32)
+    word = words_ref[w]
+    mask = jnp.where(rem == 0, jnp.uint32(0), (jnp.uint32(1) << rem) - jnp.uint32(1))
+    o_ref[...] = ranks_ref[w] + _popcount32(word & mask)
+
+
+def bitvec_rank(words, word_ranks, positions, *, block_q=1024, interpret=False):
+    """words: (W,) uint32; word_ranks: (W,) int32 exclusive prefix;
+    positions: (Q,) int32 with pos/32 < W. Returns rank1 at each position."""
+    (W,) = words.shape
+    (Q,) = positions.shape
+    block_q = min(block_q, Q)
+    assert Q % block_q == 0
+    return pl.pallas_call(
+        _rank_kernel,
+        grid=(Q // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((W,), lambda i: (0,)),
+            pl.BlockSpec((W,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_q,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), jnp.int32),
+        interpret=interpret,
+    )(positions, words, word_ranks)

@@ -1,0 +1,48 @@
+"""Embedding-bag Pallas kernel (DLRM multi-hot lookup + segment reduce).
+
+One grid step owns a (batch-block × feature-block) tile: it gathers up to
+L rows per bag from the table and reduces over the bag axis (sum or mean).
+JAX has no native EmbeddingBag; this is the framework's own implementation
+(gather + in-register reduce), with `-1` padding for ragged bags.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(idx_ref, tbl_ref, o_ref, *, combiner):
+    idx = idx_ref[...]                          # (Bb, L)
+    valid = idx >= 0
+    rows = tbl_ref[jnp.maximum(idx, 0)]         # (Bb, L, Db)
+    rows = jnp.where(valid[..., None], rows, 0.0)
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        denom = jnp.maximum(valid.sum(axis=1, keepdims=True), 1).astype(out.dtype)
+        out = out / denom
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def embedding_bag(
+    table, indices, *, combiner="sum", block_b=128, block_d=None, interpret=False
+):
+    """table: (V, D); indices: (B, L) int32, -1-padded -> (B, D)."""
+    V, D = table.shape
+    B, L = indices.shape
+    block_b = min(block_b, B)
+    block_d = block_d or min(D, 128)
+    assert B % block_b == 0 and D % block_d == 0
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, combiner=combiner),
+        grid=(B // block_b, D // block_d),
+        in_specs=[
+            pl.BlockSpec((block_b, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((V, block_d), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(indices, table)

@@ -1,0 +1,130 @@
+"""Flash attention Pallas TPU kernel (online-softmax, blocked, GQA-aware).
+
+Target layout: grid (batch*q_heads, Sq/bq, Sk/bk); the K/V BlockSpec index
+map folds grouped-query attention (q head h reads kv head h // group), so
+no repeated K/V materialization. VMEM scratch carries the running max m,
+normalizer l, and output accumulator across the sequential k-block axis.
+Supports causal masking (right-aligned, so Sq < Sk decodes work), Gemma-2
+style sliding windows and logit soft-capping. Fully-masked k-blocks are
+skipped with `pl.when` (structural block skipping — on TPU this saves the
+MXU work; in interpret mode it is exercised for correctness).
+
+MXU alignment: bq/bk default 128 (v5e systolic tile); D padded by caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, sm_scale, causal, window, softcap, block_q, block_k, sq, sk,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # right-aligned absolute positions (supports Sq < Sk decode windows)
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + (sk - sq)
+    k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    # structural skip: is any (q, k) pair in this block pair visible?
+    lo_q, hi_q = q_pos[0], q_pos[-1]
+    lo_k = k_pos[0]
+    block_visible = jnp.bool_(True)
+    if causal:
+        block_visible &= lo_k <= hi_q
+    if window is not None:
+        block_visible &= k_pos[-1] > lo_q - window
+
+    @pl.when(block_visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=None, softcap=None, sm_scale=None,
+    block_q=128, block_k=128, interpret=False,
+):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). Returns (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, "pad sequence to block multiple"
+    if sm_scale is None:
+        sm_scale = float(1.0 / (D ** 0.5))
+
+    qr = q.reshape(B * Hq, Sq, D)
+    kr = k.reshape(B * Hkv, Sk, D)
+    vr = v.reshape(B * Hkv, Sk, D)
+
+    def kv_map(h, qi, ki):
+        return (h // group, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        sm_scale=sm_scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, sq=Sq, sk=Sk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, Sq // block_q, Sk // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, D), kv_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, Sq, D)

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(
+    q, k, v, *, causal=True, window=None, softcap=None, sm_scale=None
+):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); GQA via head broadcast."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(D).astype(q.dtype)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    Sk = k.shape[2]
+    q_idx = jnp.arange(Sq)[:, None] + (Sk - Sq)  # right-aligned (decode-friendly)
+    k_idx = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window is not None:
+        mask &= k_idx > q_idx - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def spmm_ref(x, senders, receivers, n_out):
+    """Sum aggregation: out[r] = sum_{e: receivers[e]=r} x[senders[e]]."""
+    msgs = x[senders]
+    return jax.ops.segment_sum(msgs, receivers, num_segments=n_out)
+
+
+def embedding_bag_ref(table, indices, combiner="sum"):
+    """table: (V, D); indices: (B, L) with -1 padding."""
+    mask = (indices >= 0)[..., None]
+    rows = table[jnp.maximum(indices, 0)] * mask
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        denom = jnp.maximum(mask.sum(axis=1), 1)
+        out = out / denom
+    return out
+
+
+def digram_pair_counts_ref(its, cnts):
+    """Per-node pairwise digram counts (paper's count_v formula).
+
+    its, cnts: (N, K) int32, -1/-0 padded. Returns (it_lo, it_hi, count)
+    each (N, P) with P = K(K+1)/2; padded pairs carry count 0.
+    """
+    N, K = its.shape
+    ii, jj = np.triu_indices(K)
+    it1 = its[:, ii]
+    it2 = its[:, jj]
+    c1 = cnts[:, ii]
+    c2 = cnts[:, jj]
+    valid = (it1 >= 0) & (it2 >= 0)
+    cv = jnp.where(ii[None, :] == jj[None, :], c1 // 2, jnp.minimum(c1, c2))
+    cv = jnp.where(valid, cv, 0)
+    lo = jnp.minimum(it1, it2)
+    hi = jnp.maximum(it1, it2)
+    return lo, hi, cv
+
+
+def dot_interaction_ref(x):
+    """DLRM dot-interaction: x (B, F, D) -> strictly-lower-tri of x @ x^T."""
+    B, F, D = x.shape
+    z = jnp.einsum("bfd,bgd->bfg", x, x)
+    ii, jj = np.tril_indices(F, k=-1)
+    return z[:, ii, jj]
+
+
+def bitvec_rank_ref(words, word_ranks, positions):
+    """rank1(pos) over packed uint32 words with exclusive word prefix ranks."""
+    w = positions >> 5
+    rem = (positions & 31).astype(jnp.uint32)
+    word = words[w]
+    mask = jnp.where(rem == 0, jnp.uint32(0), (jnp.uint32(1) << rem) - jnp.uint32(1))
+    masked = word & mask
+    # popcount via SWAR
+    m1 = jnp.uint32(0x55555555)
+    m2 = jnp.uint32(0x33333333)
+    m4 = jnp.uint32(0x0F0F0F0F)
+    x = masked - ((masked >> 1) & m1)
+    x = (x & m2) + ((x >> 2) & m2)
+    x = (x + (x >> 4)) & m4
+    pc = (x * jnp.uint32(0x01010101)) >> 24
+    return word_ranks[w] + pc.astype(jnp.int32)

@@ -1,0 +1,1 @@
+"""Launchers: production mesh, per-cell step builders, dry-run, train/serve drivers."""

@@ -1,0 +1,167 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCHS, all_cells, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.roofline.analysis import (
+    HW,
+    collective_wire_bytes,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
+
+
+def _cell_meta(arch_id: str, shape_name: str) -> dict:
+    arch = get_arch(arch_id)
+    shape = arch.shapes[shape_name]
+    cfg = arch.config()
+    meta = {"family": arch.family, "kind": shape.kind, **shape.params}
+    if arch.family == "lm":
+        meta.update(
+            n_active_params=cfg.n_active_params(), n_params=cfg.n_params(),
+            n_layers=cfg.n_layers, n_heads=cfg.n_heads, head_dim=cfg.head_dim,
+        )
+    elif arch.family == "gnn":
+        meta.update(n_layers=cfg.n_layers, d_hidden=cfg.d_hidden)
+        if shape.kind == "minibatch":
+            seeds, (f1, f2) = shape.params["batch_nodes"], shape.params["fanouts"]
+            meta["n_nodes"] = seeds * (1 + f1 + f1 * f2)
+            meta["n_edges"] = seeds * f1 + seeds * f1 * f2
+        elif shape.kind == "molecule":
+            meta["n_nodes"] = shape.params["batch"] * shape.params["n_nodes"]
+            meta["n_edges"] = shape.params["batch"] * shape.params["n_edges"]
+    else:
+        meta.update(n_fields=cfg.n_fields, embed_dim=cfg.embed_dim,
+                    n_params=cfg.n_params())
+    return meta
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = int(np.prod(list(mesh.shape.values())))
+    jax.set_mesh(mesh)
+    t0 = time.time()
+    cell = build_cell(arch_id, shape_name, overrides=overrides)
+    kw = {}
+    if cell.meta and "out_shardings" in cell.meta:
+        kw["out_shardings"] = cell.meta["out_shardings"]
+    jitted = jax.jit(
+        cell.fn, in_shardings=cell.in_specs, donate_argnums=cell.donate_argnums, **kw
+    )
+    lowered = jitted.lower(*cell.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(f"[{arch_id} × {shape_name} × {'2pod' if multi_pod else '1pod'}] "
+          f"memory_analysis: args={mem.argument_size_in_bytes/1e9:.3f}GB "
+          f"out={mem.output_size_in_bytes/1e9:.3f}GB temp={mem.temp_size_in_bytes/1e9:.3f}GB "
+          f"(per device)")
+    cost = compiled.cost_analysis()
+    # cost_analysis counts while-loop bodies ONCE (scan-undercount); use the
+    # trip-count-aware HLO walk for the roofline terms (roofline/hlo_cost.py)
+    from repro.roofline.hlo_cost import hlo_cost
+
+    hc = hlo_cost(compiled.as_text(), n_devices)
+    flops = hc.flops
+    bytes_acc = hc.bytes
+    wire = hc.wire_bytes
+    colls = hc.collectives
+    print(f"  hlo_cost(trip-aware): flops/dev={flops:.3e} bytes/dev={bytes_acc:.3e} "
+          f"wire/dev={wire:.3e} | raw cost_analysis flops={float(cost.get('flops', 0.0)):.3e}")
+    terms = roofline_terms(flops, bytes_acc, wire)
+    meta = _cell_meta(arch_id, shape_name)
+    mflops = model_flops(arch_id, shape_name, meta)
+    hlo_global = flops * n_devices
+    result = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": n_devices,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_est_bytes": mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+        },
+        "cost": {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+        "collectives": colls,
+        "wire_bytes_per_dev": wire,
+        "roofline": terms,
+        "model_flops_global": mflops,
+        "hlo_flops_global": hlo_global,
+        "useful_flops_ratio": (mflops / hlo_global) if hlo_global else None,
+    }
+    fit = result["memory"]["peak_est_bytes"] < 16e9
+    print(f"  roofline: compute={terms['compute_s']*1e3:.3f}ms memory={terms['memory_s']*1e3:.3f}ms "
+          f"collective={terms['collective_s']*1e3:.3f}ms dominant={terms['dominant']} "
+          f"| useful/HLO={result['useful_flops_ratio'] if result['useful_flops_ratio'] else float('nan'):.3f} "
+          f"| fits16GB={fit}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower+compile every cell")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON result(s) here")
+    ap.add_argument("--override", action="append", default=[],
+                    help="model-config override k=v (v parsed as python literal)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        import ast
+
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    cells = [(args.arch, args.shape)] if args.arch and args.shape else all_cells()
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch_id, shape_name in cells:
+        for mp in meshes:
+            try:
+                results.append(run_cell(arch_id, shape_name, mp, overrides or None))
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                results.append({
+                    "arch": arch_id, "shape": shape_name,
+                    "mesh": "pod2x16x16" if mp else "pod16x16",
+                    "ok": False, "error": f"{type(e).__name__}: {e}",
+                })
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as fh:
+            json.dump(results if len(results) > 1 else results[0], fh, indent=2)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\ndry-run: {n_ok}/{len(results)} cells compiled")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

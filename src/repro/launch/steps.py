@@ -1,0 +1,356 @@
+"""Step builders + abstract input specs for every (arch × shape) cell.
+
+`build_cell(arch_id, shape_name)` returns a `Cell` whose `fn` is the jitted
+step (train_step / prefill / decode / serve / retrieval per the shape's
+kind), `args` are ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+no device allocation), and `in_specs` are PartitionSpecs resolved against
+the active mesh (call under `jax.set_mesh`).
+
+Sizes are rounded up to multiples of 256 (=16×16 mesh) where sharding needs
+divisibility; the data loader performs the same padding in real runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ShapeSpec, get_arch
+from repro.distributed.collectives import partitioned_segment_sum
+from repro.distributed.sharding import logical_spec, param_spec, zero1_spec
+from repro.models import dlrm as dlrm_mod
+from repro.models import gnn as gnn_mod
+from repro.models import transformer as tf_mod
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def _r256(n: int) -> int:
+    return ((n + 255) // 256) * 256
+
+
+# gradient-accumulation microbatches per LM train step (activation-memory
+# control: yi-34b carries 60 layers × (B_local, 4k, 7168) between scan steps)
+GRAD_ACCUM = {
+    "yi-34b": 16,
+    "gemma2-9b": 8,
+    "phi3.5-moe-42b-a6.6b": 8,
+    "qwen2-1.5b": 4,
+    "olmoe-1b-7b": 8,  # 4 left 23 GB/dev (§Roofline baseline); 8 fits
+}
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: tuple            # pytree of ShapeDtypeStruct
+    in_specs: tuple        # matching pytree of PartitionSpec
+    donate_argnums: tuple = ()
+    meta: dict | None = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _kp_str(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def _tree_param_specs(abstract_params):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = [param_spec(_kp_str(kp), leaf.shape) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _tree_opt_specs(abstract_opt, pspecs_by_path):
+    """master/m/v get ZeRO-1 augmented specs; step is replicated."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_opt)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        if path == "step":
+            specs.append(P())
+            continue
+        sub = path.split("/", 1)[1]  # strip master|m|v prefix
+        base = pspecs_by_path.get(sub, P())
+        specs.append(zero1_spec(base, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _pspecs_by_path(abstract_params):
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract_params)
+    out = {}
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[path] = param_spec(path, leaf.shape)
+    return out
+
+
+# ===================================================================== LM
+def _lm_cell(arch_id: str, shape: ShapeSpec, reduced: bool, overrides=None) -> Cell:
+    import dataclasses
+
+    arch = get_arch(arch_id)
+    cfg = arch.reduced() if reduced else arch.config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    B = shape.params["global_batch"]
+    S = shape.params["seq_len"]
+    if reduced:
+        B, S = 2, min(S, 64)
+    opt_cfg = AdamWConfig()
+
+    abstract_params = jax.eval_shape(partial(tf_mod.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = _tree_param_specs(abstract_params)
+
+    if shape.kind == "train":
+        abstract_opt = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), abstract_params)
+        pby = _pspecs_by_path(abstract_params)
+        ospecs = _tree_opt_specs(abstract_opt, pby)
+        n_micro = 1 if reduced else GRAD_ACCUM.get(arch_id, 1)
+        # fp32 grad accumulator sharded ZeRO-style (params spec + data axis):
+        # the per-microbatch reduce-scatter this induces is the standard
+        # ZeRO-2 trade (collective traffic for accumulator memory)
+        flatp, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+        gspecs = jax.tree_util.tree_unflatten(treedef, [
+            zero1_spec(pby[_kp_str(kp)], leaf.shape) for kp, leaf in flatp
+        ])
+        have_mesh = any(s != () and tuple(s) != (None,) * len(tuple(s)) for s in jax.tree.leaves(gspecs)) \
+            if jax.tree.leaves(gspecs) else False
+
+        def train_step(params, opt_state, tokens, targets):
+            Bl, Sl = tokens.shape
+            mb = Bl // n_micro
+            tok = tokens.reshape(n_micro, mb, Sl)
+            tgt = targets.reshape(n_micro, mb, Sl)
+
+            def constrain(tree):
+                if not have_mesh:
+                    return tree
+                return jax.tree.map(
+                    lambda a, sp: a if all(e is None for e in sp) else
+                    jax.lax.with_sharding_constraint(a, sp),
+                    tree, gspecs,
+                )
+
+            def micro(carry, xs):
+                g_acc, loss_acc = carry
+                t, y = xs
+                loss, g = jax.value_and_grad(tf_mod.forward_loss)(params, t, y, cfg)
+                g_acc = constrain(jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g))
+                return (g_acc, loss_acc + loss), None
+
+            g0 = constrain(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (g_acc, loss_sum), _ = jax.lax.scan(micro, (g0, jnp.float32(0.0)), (tok, tgt))
+            grads = jax.tree.map(lambda g: g / n_micro, g_acc)
+            params, opt_state, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss_sum / n_micro, metrics
+
+        args = (
+            abstract_params, abstract_opt,
+            _sds((B, S), jnp.int32), _sds((B, S), jnp.int32),
+        )
+        specs = (pspecs, ospecs,
+                 logical_spec(("batch", None), (B, S)),
+                 logical_spec(("batch", None), (B, S)))
+        return Cell(arch_id, shape.name, train_step, args, specs, donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        def prefill(params, tokens):
+            return tf_mod.prefill_step(params, tokens, cfg)
+
+        args = (abstract_params, _sds((B, S), jnp.int32))
+        specs = (pspecs, logical_spec(("batch", None), (B, S)))
+        return Cell(arch_id, shape.name, prefill, args, specs)
+
+    # decode (incl. long_500k): one new token against a seq_len KV cache
+    abstract_cache = jax.eval_shape(partial(tf_mod.init_cache, cfg, B, S))
+    lead = (None,) * len(cfg.layers_leading)
+    cache_spec = jax.tree.map(
+        lambda l: logical_spec(lead + ("batch", "kv_seq", "kv_heads", None), l.shape),
+        abstract_cache,
+    )
+
+    def decode(params, cache, tokens, index):
+        return tf_mod.decode_step(params, cache, tokens, index, cfg)
+
+    args = (abstract_params, abstract_cache, _sds((B,), jnp.int32), _sds((), jnp.int32))
+    specs = (pspecs, cache_spec, logical_spec(("batch",), (B,)), P())
+    # out_shardings pin the new cache to the input layout so donation
+    # aliases it in place (otherwise GSPMD may pick a different out
+    # sharding and double the cache footprint)
+    out_specs = (P(), cache_spec)
+    return Cell(arch_id, shape.name, decode, args, specs, donate_argnums=(1,),
+                meta={"out_shardings": out_specs})
+
+
+# ===================================================================== GNN
+_GNN_EDGE_FEAT = 8
+_GNN_OUT = {"gcn-cora": None, "gatedgcn": None, "meshgraphnet": 3, "nequip": 1}
+
+
+def _gnn_sizes(shape: ShapeSpec, reduced: bool):
+    p = shape.params
+    if shape.kind == "minibatch":
+        seeds = p["batch_nodes"]
+        f1, f2 = p["fanouts"]
+        n = seeds * (1 + f1 + f1 * f2)
+        e = seeds * f1 + seeds * f1 * f2
+        d_feat, n_cls = p["d_feat"], p["n_classes"]
+    elif shape.kind == "molecule":
+        n = p["batch"] * p["n_nodes"]
+        e = p["batch"] * p["n_edges"]
+        d_feat, n_cls = p["d_feat"], 1
+    else:
+        n, e = p["n_nodes"], p["n_edges"]
+        d_feat, n_cls = p["d_feat"], p.get("n_classes", 2)
+    if reduced:
+        scale = max(n // 64, 1)
+        n, e = max(n // scale, 8), max(e // scale, 16)
+        d_feat = min(d_feat, 16)
+    return _r256(n), _r256(e), d_feat, n_cls
+
+
+def _gnn_cell(arch_id: str, shape: ShapeSpec, reduced: bool) -> Cell:
+    arch = get_arch(arch_id)
+    cfg = arch.reduced() if reduced else arch.config()
+    n, e, d_feat, n_cls = _gnn_sizes(shape, reduced)
+    opt_cfg = AdamWConfig()
+    key = jax.random.PRNGKey(0)
+
+    # §Perf D: receiver-partitioned edges (loader contract, see
+    # distributed.collectives.partition_edges) make message aggregation a
+    # local scatter per shard instead of a full-(N,d) all-reduce per layer
+    agg = partitioned_segment_sum
+    if arch_id == "gcn-cora":
+        init = partial(gnn_mod.gcn_init, cfg, key, d_feat, n_cls)
+        apply_fn = lambda p, b: gnn_mod.gcn_apply(p, b["x"], b["senders"], b["receivers"], n, cfg, agg_fn=agg)
+    elif arch_id == "gatedgcn":
+        init = partial(gnn_mod.gatedgcn_init, cfg, key, d_feat, _GNN_EDGE_FEAT, n_cls)
+        apply_fn = lambda p, b: gnn_mod.gatedgcn_apply(
+            p, b["x"], b["ef"], b["senders"], b["receivers"], n, cfg, agg_fn=agg)
+    elif arch_id == "meshgraphnet":
+        init = partial(gnn_mod.meshgraphnet_init, cfg, key, d_feat, _GNN_EDGE_FEAT, 3)
+        apply_fn = lambda p, b: gnn_mod.meshgraphnet_apply(
+            p, b["x"], b["ef"], b["senders"], b["receivers"], n, cfg, agg_fn=agg)
+    else:  # nequip
+        init = partial(gnn_mod.nequip_init, cfg, key, 64)
+        apply_fn = lambda p, b: gnn_mod.nequip_apply(
+            p, b["species"], b["pos"], b["senders"], b["receivers"], n, cfg, agg_fn=agg)
+
+    abstract_params = jax.eval_shape(init)
+    pspecs = _tree_param_specs(abstract_params)
+    abstract_opt = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), abstract_params)
+    ospecs = _tree_opt_specs(abstract_opt, _pspecs_by_path(abstract_params))
+
+    edge_spec = logical_spec(("edges",), (e,))
+    batch = {
+        "senders": (_sds((e,), jnp.int32), edge_spec),
+        "receivers": (_sds((e,), jnp.int32), edge_spec),
+    }
+    if arch_id == "nequip":
+        batch["species"] = (_sds((n,), jnp.int32), P())
+        batch["pos"] = (_sds((n, 3), jnp.float32), P())
+    else:
+        batch["x"] = (_sds((n, d_feat), jnp.float32), P())
+        if arch_id != "gcn-cora":
+            batch["ef"] = (_sds((e, _GNN_EDGE_FEAT), jnp.float32),
+                           logical_spec(("edges", None), (e, _GNN_EDGE_FEAT)))
+
+    regression = arch_id in ("meshgraphnet", "nequip")
+    if regression:
+        d_out = _GNN_OUT[arch_id]
+        batch["y"] = (_sds((n, d_out), jnp.float32), P())
+    else:
+        batch["y"] = (_sds((n,), jnp.int32), P())
+    if shape.kind == "minibatch":
+        batch["seed_mask"] = (_sds((n,), jnp.bool_), P())
+    if shape.kind == "molecule":
+        batch["graph_ids"] = (_sds((n,), jnp.int32), P())
+
+    def loss_fn(params, b):
+        out = apply_fn(params, b)
+        if regression:
+            per_node = jnp.mean(jnp.square(out - b["y"]), axis=-1)
+        else:
+            logp = jax.nn.log_softmax(out)
+            per_node = -jnp.take_along_axis(logp, jnp.maximum(b["y"], 0)[:, None], axis=1)[:, 0]
+        if "seed_mask" in b:
+            w = b["seed_mask"].astype(jnp.float32)
+            return (per_node * w).sum() / jnp.maximum(w.sum(), 1)
+        return per_node.mean()
+
+    def train_step(params, opt_state, b):
+        loss, grads = jax.value_and_grad(loss_fn)(params, b)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss, metrics
+
+    args = (abstract_params, abstract_opt, {k: v[0] for k, v in batch.items()})
+    specs = (pspecs, ospecs, {k: v[1] for k, v in batch.items()})
+    return Cell(arch_id, shape.name, train_step, args, specs, donate_argnums=(0, 1))
+
+
+# ================================================================= RecSys
+def _dlrm_cell(arch_id: str, shape: ShapeSpec, reduced: bool) -> Cell:
+    arch = get_arch(arch_id)
+    cfg = arch.reduced() if reduced else arch.config()
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "retrieval":
+        n_cand = _r256(shape.params["n_candidates"]) if not reduced else 1024
+        d = cfg.embed_dim
+
+        def retrieval(query, cands):
+            return dlrm_mod.retrieval_scores(query, cands, k=100)
+
+        args = (_sds((d,), jnp.float32), _sds((n_cand, d), jnp.float32))
+        specs = (P(), logical_spec(("table_rows", None), (n_cand, d)))
+        return Cell(arch_id, shape.name, retrieval, args, specs)
+
+    B = shape.params["batch"]
+    if reduced:
+        B = 32
+    abstract_params = jax.eval_shape(partial(dlrm_mod.dlrm_init, cfg), key)
+    pspecs = _tree_param_specs(abstract_params)
+    dense = _sds((B, cfg.n_dense), jnp.float32)
+    sparse = _sds((B, cfg.n_sparse), jnp.int32)
+    bspec = logical_spec(("wide_batch", None), (B, cfg.n_dense))
+
+    if shape.kind == "serve":
+        def serve(params, dense, sparse):
+            return dlrm_mod.dlrm_apply(params, dense, sparse, cfg)
+
+        return Cell(arch_id, shape.name, serve, (abstract_params, dense, sparse),
+                    (pspecs, bspec, bspec))
+
+    opt_cfg = AdamWConfig(sgd_paths=("tables",))
+    abstract_opt = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), abstract_params)
+    ospecs = _tree_opt_specs(abstract_opt, _pspecs_by_path(abstract_params))
+
+    def train_step(params, opt_state, dense, sparse, labels):
+        loss, grads = jax.value_and_grad(dlrm_mod.dlrm_loss)(params, dense, sparse, labels, cfg)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss, metrics
+
+    args = (abstract_params, abstract_opt, dense, sparse, _sds((B,), jnp.float32))
+    specs = (pspecs, ospecs, bspec, bspec, logical_spec(("wide_batch",), (B,)))
+    return Cell(arch_id, shape.name, train_step, args, specs, donate_argnums=(0, 1))
+
+
+# ================================================================= dispatch
+def build_cell(arch_id: str, shape_name: str, reduced: bool = False,
+               overrides: dict | None = None) -> Cell:
+    arch = get_arch(arch_id)
+    shape = arch.shapes[shape_name]
+    if arch.family == "lm":
+        return _lm_cell(arch_id, shape, reduced, overrides)
+    if arch.family == "gnn":
+        return _gnn_cell(arch_id, shape, reduced)
+    return _dlrm_cell(arch_id, shape, reduced)

@@ -1,0 +1,4 @@
+"""Model zoo: the 10 assigned architectures (5 LM transformers, 4 GNNs, DLRM)."""
+from repro.models import common, dlrm, gnn, transformer
+
+__all__ = ["common", "dlrm", "gnn", "transformer"]

@@ -1,0 +1,99 @@
+"""Shared model building blocks (pure JAX, functional params-as-pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict of jnp arrays
+
+
+def dense_init(key, d_in, d_out, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(x.dtype)
+
+
+def rope(x, positions, theta=10000.0):
+    """x: (..., S, H, D); positions: (..., S). Rotary over last dim pairs."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def chunked_cross_entropy(h, w_vocab, targets, *, chunk=256, softcap=None):
+    """Token CE without materializing (B, S, V) logits at once.
+
+    h: (B, S, D); w_vocab: (D, V); targets: (B, S) int32; -100 = ignore.
+    Scans sequence chunks: per-chunk logits live only inside the scan body —
+    the key memory optimization for 256k vocabularies at 4k context.
+    """
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    h_c = h.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)       # (n, B, c, D)
+    t_c = targets.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        loss_sum, count = carry
+        hc, tc = xs
+        logits = jnp.einsum("bcd,dv->bcv", hc.astype(jnp.float32), w_vocab.astype(jnp.float32))
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        mask = tc != -100
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, jnp.maximum(tc, 0)[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, lse - tgt, 0.0)
+        return (loss_sum + nll.sum(), count + mask.sum()), None
+
+    (loss_sum, count), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)), (h_c, t_c))
+    return loss_sum / jnp.maximum(count, 1)
+
+
+def mlp_params(key, sizes, dtype=jnp.float32, bias=True):
+    keys = jax.random.split(key, len(sizes) - 1)
+    layers = []
+    for k, d_in, d_out in zip(keys, sizes[:-1], sizes[1:]):
+        p = {"w": dense_init(k, d_in, d_out, dtype=dtype)}
+        if bias:
+            p["b"] = jnp.zeros((d_out,), dtype)
+        layers.append(p)
+    return layers
+
+
+def mlp_apply(layers, x, act=jax.nn.relu, final_act=False):
+    for i, p in enumerate(layers):
+        x = x @ p["w"]
+        if "b" in p:
+            x = x + p["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))

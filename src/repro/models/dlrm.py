@@ -1,0 +1,126 @@
+"""DLRM (Naumov et al. 2019), MLPerf benchmark config over Criteo-1TB.
+
+Huge sparse embedding tables (the hot path) + bottom MLP over dense
+features + dot feature interaction + top MLP. Tables are row-sharded over
+the *whole* mesh (logical axis "table_rows" -> data×model) — 26 tables,
+~178M total rows × 128 = ~91 GB fp32, ~356 MB per chip at 256 chips.
+
+Lookups are single-hot per field on Criteo (the embedding-bag kernel in
+repro.kernels handles multi-hot for other datasets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.models.common import mlp_apply, mlp_params
+
+# MLPerf DLRM Criteo Terabyte per-field cardinalities (dlrm repo day-23)
+CRITEO_TB_ROWS = (
+    45833188, 36746, 17245, 7413, 20243, 3, 7114, 1441, 62, 29275261,
+    1572176, 345138, 10, 2209, 11267, 128, 4, 974, 14, 48937457,
+    11316796, 40094537, 452104, 12606, 104, 35,
+)
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    bot_mlp: tuple = (512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256, 1)
+    row_counts: tuple = CRITEO_TB_ROWS
+    interaction: str = "dot"
+    compute_dtype: str = "bfloat16"  # activation/wire dtype; fp32 in reduced
+    row_pad: int = 256  # pad table rows to a mesh multiple so row-sharding
+                        # applies (unpadded rows fall back to replication —
+                        # the §Perf C1 iteration measured 90 GB/device)
+
+    def padded_rows(self, rows: int) -> int:
+        return ((rows + self.row_pad - 1) // self.row_pad) * self.row_pad
+
+    @property
+    def n_fields(self) -> int:
+        return self.n_sparse + 1  # + bottom-MLP output as a field
+
+    def n_params(self) -> int:
+        total = sum(self.row_counts) * self.embed_dim
+        dims = [self.n_dense] + list(self.bot_mlp)
+        total += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        f = self.n_fields
+        d_int = f * (f - 1) // 2 + self.embed_dim
+        dims = [d_int] + list(self.top_mlp)
+        total += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        return total
+
+
+def dlrm_init(cfg: DLRMConfig, key):
+    keys = jax.random.split(key, cfg.n_sparse + 2)
+    tables = {
+        f"table_{i}": jax.random.normal(
+            keys[i], (cfg.padded_rows(rows), cfg.embed_dim), jnp.float32)
+        / (cfg.embed_dim ** 0.5)
+        for i, rows in enumerate(cfg.row_counts)
+    }
+    bot = mlp_params(keys[-2], [cfg.n_dense] + list(cfg.bot_mlp))
+    f = cfg.n_fields
+    d_int = f * (f - 1) // 2 + cfg.embed_dim
+    top = mlp_params(keys[-1], [d_int] + list(cfg.top_mlp))
+    return {"tables": tables, "bot": bot, "top": top}
+
+
+def _interact(fields):
+    """fields: (B, F, D) -> (B, F(F-1)/2) strictly-lower-tri dot products
+    (bf16 inputs, fp32 MXU accumulation)."""
+    B, F, D = fields.shape
+    z = jnp.einsum("bfd,bgd->bfg", fields, fields,
+                   preferred_element_type=jnp.float32)
+    ii, jj = np.tril_indices(F, k=-1)
+    return z[:, ii, jj]
+
+
+def dlrm_apply(params, dense, sparse, cfg: DLRMConfig):
+    """dense: (B, n_dense) float; sparse: (B, n_sparse) int32 -> logits (B,).
+
+    Batch is sharded over the *whole* mesh (wide_batch; MLPerf DLRM
+    practice): the MLP compute data-parallelizes 256-way and embedding
+    grads stay row-local instead of dense-all-reducing (§Perf C2)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    dense = shard(dense, ("wide_batch", None))
+    x_bot = mlp_apply(params["bot"], dense, act=jax.nn.relu, final_act=True)
+    embs = []
+    for i in range(cfg.n_sparse):
+        tbl = params["tables"][f"table_{i}"]
+        # NOTE (§Perf C3/C5, refuted): forcing bf16 onto the gather
+        # redistribution (convert-before-gather, with/without an
+        # optimization barrier) does NOT change the wire — GSPMD emits the
+        # masked-select + all-reduce in the table dtype regardless. A true
+        # fix needs a manual shard_map all-to-all dispatch (future work).
+        embs.append(tbl[sparse[:, i]].astype(cdt))
+    fields = jnp.stack([x_bot.astype(cdt)] + embs, axis=1)  # (B, F, D)
+    fields = shard(fields, ("wide_batch", None, None))  # stays bf16 on the wire
+    inter = _interact(fields).astype(jnp.float32)
+    top_in = jnp.concatenate([x_bot, inter], axis=-1)
+    out = mlp_apply(params["top"], top_in, act=jax.nn.relu)
+    return out[:, 0]
+
+
+def dlrm_loss(params, dense, sparse, labels, cfg: DLRMConfig):
+    logits = dlrm_apply(params, dense, sparse, cfg)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def retrieval_scores(query_emb, candidate_embs, k=100):
+    """retrieval_cand shape: one query vs n_candidates item vectors.
+
+    Batched dot scoring (no loop) + top-k, the production retrieval path."""
+    scores = candidate_embs @ query_emb  # (n_cand,)
+    return jax.lax.top_k(scores, k)

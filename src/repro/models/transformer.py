@@ -1,0 +1,468 @@
+"""Decoder-only transformer covering the five assigned LM architectures:
+dense GQA (qwen2/yi), Gemma-2 (alternating local/global attention, logit
+softcaps, post-norms), and MoE (phi-3.5-MoE 16e top-2, OLMoE 64e top-8).
+
+Functional: params are pytrees; layers are stacked on a leading dim and
+scanned (keeps HLO size O(1) in depth — 60-layer yi-34b compiles fast);
+remat policy is configurable. Sharding is expressed via logical axis names
+(repro.distributed.sharding) so the same model lowers on 1 device, one pod
+(data×model) and multi-pod (pod×data×model) meshes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import chunked_cross_entropy, dense_init, rms_norm, rope
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_group: int = 2048
+    # gemma-2 extras
+    local_window: int | None = None    # if set, layers alternate local/global
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    post_norms: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # numerics / lowering
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"                # none | full | dots
+    ce_chunk: int = 256
+    scan_layers: bool = True
+    attn_chunk_q: int = 512            # flash-style chunking kicks in when
+    attn_chunk_k: int = 1024           # q length exceeds attn_chunk_q
+    context_parallel: bool = False     # shard q-sequence over 'model' inside
+                                       # attention (K/V all-gathered) — the
+                                       # §Perf A2 optimization; essential when
+                                       # head counts don't divide the TP axis
+    seq_parallel_residual: bool = False  # §Perf A3 — REFUTED on this mesh:
+                                         # GSPMD falls back to involuntary
+                                         # full remat on the stream
+                                         # transitions (collective 59->257 s)
+
+    @property
+    def alternating(self) -> bool:
+        return self.local_window is not None
+
+    @property
+    def layers_leading(self) -> tuple:
+        return (self.n_layers // 2, 2) if self.alternating else (self.n_layers,)
+
+    def n_params(self) -> int:
+        d, h, kv, dh, f, v = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim, self.d_ff, self.vocab
+        attn = d * h * dh + 2 * d * kv * dh + h * dh * d
+        if self.n_experts:
+            ffn = self.n_experts * 3 * d * f + d * self.n_experts
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * v * d + d
+
+    def n_active_params(self) -> int:
+        if not self.n_experts:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        dense_like = self.n_params() - self.n_layers * (self.n_experts - self.top_k) * 3 * d * f
+        return dense_like
+
+
+# ---------------------------------------------------------------- params
+def init_params(cfg: TransformerConfig, key) -> dict:
+    keys = iter(jax.random.split(key, 64))
+    d, h, kv, dh, f, v = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.d_ff, cfg.vocab)
+    L = cfg.layers_leading
+
+    def stacked(shape, k, scale=None):
+        scale = scale if scale is not None else 1.0 / (shape[0] ** 0.5)
+        return jax.random.normal(k, L + shape, cfg.dtype) * scale
+
+    layer = {
+        "ln_attn": jnp.zeros(L + (d,), cfg.dtype),
+        "wq": stacked((d, h * dh), next(keys)),
+        "wk": stacked((d, kv * dh), next(keys)),
+        "wv": stacked((d, kv * dh), next(keys)),
+        "wo": stacked((h * dh, d), next(keys)),
+        "ln_mlp": jnp.zeros(L + (d,), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        layer["bq"] = jnp.zeros(L + (h * dh,), cfg.dtype)
+        layer["bk"] = jnp.zeros(L + (kv * dh,), cfg.dtype)
+        layer["bv"] = jnp.zeros(L + (kv * dh,), cfg.dtype)
+    if cfg.post_norms:
+        layer["ln_attn_post"] = jnp.zeros(L + (d,), cfg.dtype)
+        layer["ln_mlp_post"] = jnp.zeros(L + (d,), cfg.dtype)
+    if cfg.n_experts:
+        layer["router"] = stacked((d, cfg.n_experts), next(keys))
+        layer["w_gate_e"] = stacked((cfg.n_experts, d, f), next(keys), scale=1.0 / d ** 0.5)
+        layer["w_up_e"] = stacked((cfg.n_experts, d, f), next(keys), scale=1.0 / d ** 0.5)
+        layer["w_down_e"] = stacked((cfg.n_experts, f, d), next(keys), scale=1.0 / f ** 0.5)
+    else:
+        layer["w_gate"] = stacked((d, f), next(keys))
+        layer["w_up"] = stacked((d, f), next(keys))
+        layer["w_down"] = stacked((f, d), next(keys))
+    return {
+        "embed": jax.random.normal(next(keys), (v, d), cfg.dtype) * 0.02,
+        "layers": layer,
+        "ln_final": jnp.zeros((d,), cfg.dtype),
+        "w_vocab": jax.random.normal(next(keys), (d, v), cfg.dtype) * (1.0 / d ** 0.5),
+    }
+
+
+# ---------------------------------------------------------------- attention
+def _attention(x, p, cfg: TransformerConfig, positions, *, window, cache=None,
+               cache_index=None):
+    B, S, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    group = h // kv
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, kv, group, dh)
+    k = k.reshape(B, S, kv, dh)
+    v = v.reshape(B, S, kv, dh)
+    q = rope(q.reshape(B, S, kv * group, dh), positions, cfg.rope_theta).reshape(B, S, kv, group, dh)
+    k = rope(k, positions, cfg.rope_theta)
+    ctx_par = cfg.context_parallel and cache is None and S > cfg.attn_chunk_q
+    if ctx_par:
+        # context parallelism: q-sequence sharded over the TP axis inside
+        # the flash chunks, K/V replicated within it (one small all-gather
+        # per layer) — scores shard over 'model' even when head counts
+        # don't divide the TP axis (yi: 56 heads, qwen2: 12)
+        k = shard(k, ("batch", None, None, None))
+        v = shard(v, ("batch", None, None, None))
+    else:
+        q = shard(q, ("batch", None, "kv_heads", None, None))
+        k = shard(k, ("batch", None, "kv_heads", None))
+
+    if cache is not None:
+        ck, cv = cache  # (B, Smax, kv, dh)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        k_att, v_att = ck, cv
+        Skv = ck.shape[1]
+        k_pos = jnp.arange(Skv)
+        q_pos = positions  # (B, S) absolute
+        new_cache = (ck, cv)
+    else:
+        k_att, v_att = k, v
+        Skv = S
+        k_pos = jnp.arange(S)
+        q_pos = positions
+        new_cache = None
+
+    scale = dh ** -0.5
+    if S > cfg.attn_chunk_q and S % cfg.attn_chunk_q == 0:
+        out = _flash_jnp(q, k_att, v_att, q_pos, k_pos, window=window,
+                         softcap=cfg.attn_softcap, scale=scale,
+                         chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+                         seq_shard=ctx_par)
+    else:
+        # keep K/V in cache dtype with fp32 MXU accumulation: an explicit
+        # .astype(f32) on k_att gets hoisted OUT of the layer scan by XLA,
+        # materializing an fp32 copy of the entire stacked KV cache
+        # (measured: 3 x 5.6 GB/device on gemma2 decode_32k)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k_att,
+                            preferred_element_type=jnp.float32) * scale
+        if cfg.attn_softcap is not None:
+            scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+        # scores: (B, kv, group, S, Skv); mask broadcast (B, 1, 1, S, Skv)
+        mask = (q_pos[:, :, None] >= k_pos[None, None, :])[:, None, None]
+        if window is not None:
+            mask &= (k_pos[None, None, :] > q_pos[:, :, None] - window)[:, None, None]
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v_att.dtype), v_att,
+                         preferred_element_type=jnp.float32)
+    out = out.reshape(B, S, h * dh).astype(x.dtype)
+    return out @ p["wo"], new_cache
+
+
+def _flash_jnp(q, k, v, q_pos, k_pos, *, window, softcap, scale,
+               chunk_q, chunk_k, seq_shard=False):
+    """Memory-efficient attention: double scan (q chunks × kv chunks) with
+    an online softmax — the pure-jnp twin of kernels/flash_attention.py,
+    used on long sequences so no S×S score tensor is ever materialized.
+
+    q: (B, S, kv, g, dh); k, v: (B, Skv, kv, dh); returns (B, S, kv, g, dh).
+    """
+    B, S, kvh, g, dh = q.shape
+    Skv = k.shape[1]
+    ck = chunk_k if Skv % chunk_k == 0 else Skv
+    nq, nk = S // chunk_q, Skv // ck
+    qs = jnp.moveaxis(q.reshape(B, nq, chunk_q, kvh, g, dh), 1, 0)
+    qps = jnp.moveaxis(q_pos.reshape(B, nq, chunk_q), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, ck, kvh, dh), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, ck, kvh, dh), 1, 0)
+    kps = k_pos.reshape(nk, ck)
+    if seq_shard:
+        # context parallelism: each q chunk's rows shard over 'model'
+        qs = shard(qs, (None, "batch", "seq_model", None, None, None))
+
+    def q_step(_, qc):
+        q_blk, qp = qc  # (B, Cq, kv, g, dh), (B, Cq)
+
+        def kv_step(carry, kc):
+            m, l, acc = carry
+            k_blk, v_blk, kp = kc
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = (qp[:, :, None] >= kp[None, None, :])[:, None, None]
+            if window is not None:
+                mask &= (kp[None, None, :] > qp[:, :, None] - window)[:, None, None]
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask, p, 0.0)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, kvh, g, chunk_q), -1e30, jnp.float32),
+            jnp.zeros((B, kvh, g, chunk_q), jnp.float32),
+            jnp.zeros((B, kvh, g, chunk_q, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (ks, vs, kps))
+        o = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+        o = jnp.moveaxis(o, 3, 1)  # (B, Cq, kv, g, dh)
+        if seq_shard:
+            o = shard(o, ("batch", "seq_model", None, None, None))
+        return None, o
+
+    _, out = jax.lax.scan(q_step, None, (qs, qps))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, kvh, g, dh)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------- FFN / MoE
+def _residual_names(cfg) -> tuple:
+    # sequence-parallel residual stream (Megatron-SP): outside attention all
+    # ops are per-token, so the (B, S, D) stream could shard over 'model' on
+    # S. Measured (§Perf A3): GSPMD handles the stream<->matmul transitions
+    # with involuntary full remat — 4.4× MORE collective — so default off.
+    if cfg.context_parallel and cfg.seq_parallel_residual:
+        return ("batch", "seq_model", None)
+    return ("batch", None, None)
+
+
+def _dense_ffn(x, p, cfg):
+    gate = jax.nn.silu(x @ p["w_gate"])
+    up = x @ p["w_up"]
+    y = (gate * up) @ p["w_down"]
+    return shard(y, _residual_names(cfg))
+
+
+def _moe_ffn(x, p, cfg: TransformerConfig):
+    """GShard grouped dispatch, fully parallel layout (§Perf B1–B3).
+
+    Token groups are a *tensor axis sharded over the data mesh axis* (not a
+    scan): with experts on 'model', every stage — one-hot dispatch, expert
+    GEMMs, weighted combine — is device-local for the (group-shard, expert-
+    shard) pair it lives on. The earlier scanned-group variant replicated
+    the expert GEMMs across the data axis (16× redundant compute, §B2) or
+    all-reduced full combine outputs per group (§B2'). Dispatch/combine
+    tensors are bf16, routing positions exact int32 cumsum (§B1).
+    Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    G = min(cfg.moe_group, B * S)
+    tokens = x.reshape(-1, d)
+    n = tokens.shape[0] // G
+    tokens = tokens.reshape(n, G, d)
+    tokens = shard(tokens, ("batch", None, None))
+    C = max(int(k * G / E * cfg.capacity_factor), k)
+
+    cdt = cfg.dtype  # bf16 at scale; fp32 in reduced configs (CPU-executable)
+    logits = jnp.einsum("ngd,de->nge", tokens, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                            # (n, G, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    onehot_i = jax.nn.one_hot(idx, E, dtype=jnp.int32)              # (n, G, k, E)
+    flat = onehot_i.reshape(n, G * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                           # (n, G*k, E)
+    pos = (pos * flat).sum(-1).reshape(n, G, k)
+    keep = pos < C
+    onehot = onehot_i.astype(cdt)
+    disp = jnp.einsum("ngke,ngkc->ngec",
+                      onehot * keep[..., None].astype(cdt),
+                      jax.nn.one_hot(pos, C, dtype=cdt))      # (n, G, E, C)
+    disp = shard(disp, ("batch", None, "experts", None))
+    xe = jnp.einsum("ngec,ngd->necd", disp, tokens.astype(cdt),
+                    preferred_element_type=jnp.float32).astype(cdt)
+    xe = shard(xe, ("batch", "experts", None, None))
+    hidden = jax.nn.silu(jnp.einsum(
+        "necd,edf->necf", xe, p["w_gate_e"].astype(cdt),
+        preferred_element_type=jnp.float32)) \
+        * jnp.einsum("necd,edf->necf", xe, p["w_up_e"].astype(cdt),
+                     preferred_element_type=jnp.float32)
+    ye = jnp.einsum("necf,efd->necd", hidden.astype(cdt),
+                    p["w_down_e"].astype(cdt),
+                    preferred_element_type=jnp.float32).astype(cdt)
+    ye = shard(ye, ("batch", "experts", None, None))
+    gate_e = jnp.einsum("ngke,ngk->nge", onehot.astype(jnp.float32), gates * keep)
+    y = jnp.einsum("ngec,nge,necd->ngd", disp, gate_e.astype(cdt), ye,
+                   preferred_element_type=jnp.float32)
+    # load-balance aux loss (Switch): E * mean(top1 fraction) . mean(prob)
+    frac = onehot_i[:, :, 0].astype(jnp.float32).mean((0, 1))
+    aux = E * jnp.sum(frac * probs.mean((0, 1)))
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------- layers
+def _layer(x, p, cfg: TransformerConfig, positions, *, window, cache=None, cache_index=None):
+    a_in = rms_norm(x, p["ln_attn"])
+    attn, new_cache = _attention(a_in, p, cfg, positions, window=window,
+                                 cache=cache, cache_index=cache_index)
+    if cfg.post_norms:
+        attn = rms_norm(attn, p["ln_attn_post"])
+    x = x + attn
+    x = shard(x, _residual_names(cfg))
+    m_in = rms_norm(x, p["ln_mlp"])
+    if cfg.n_experts:
+        mlp, aux = _moe_ffn(m_in, p, cfg)
+    else:
+        mlp, aux = _dense_ffn(m_in, p, cfg), jnp.float32(0.0)
+    if cfg.post_norms:
+        mlp = rms_norm(mlp, p["ln_mlp_post"])
+    return x + mlp, aux, new_cache
+
+
+def _remat(fn, cfg: TransformerConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _stack_scan(x, params, cfg: TransformerConfig, positions, caches=None, cache_index=None):
+    """Scan over (stacked) layers; handles gemma2-style (L/2, 2) alternation."""
+
+    def step(carry, xs):
+        xc, aux_acc = carry
+        p_layer, cache_l = xs
+
+        if cfg.alternating:
+            windows = (cfg.local_window, None)
+            new_cache_l = []
+            for sub in range(2):
+                p_sub = jax.tree.map(lambda a: a[sub], p_layer)
+                c_sub = None if cache_l is None else jax.tree.map(lambda a: a[sub], cache_l)
+                xc, aux, nc = _layer(xc, p_sub, cfg, positions, window=windows[sub],
+                                     cache=c_sub, cache_index=cache_index)
+                aux_acc = aux_acc + aux
+                new_cache_l.append(nc)
+            nc_stacked = (None if caches is None else
+                          jax.tree.map(lambda *a: jnp.stack(a), *new_cache_l))
+            return (xc, aux_acc), nc_stacked
+        else:
+            xc, aux, nc = _layer(xc, p_layer, cfg, positions, window=None,
+                                 cache=cache_l, cache_index=cache_index)
+            return (xc, aux_acc + aux), nc
+
+    step = _remat(step, cfg)
+    xs = (params["layers"], caches) if caches is not None else (params["layers"], None)
+    if caches is None:
+        (x, aux), _ = jax.lax.scan(lambda c, pl: step(c, (pl, None)),
+                                   (x, jnp.float32(0.0)), params["layers"])
+        return x, aux, None
+    (x, aux), new_caches = jax.lax.scan(step, (x, jnp.float32(0.0)), xs)
+    return x, aux, new_caches
+
+
+# ---------------------------------------------------------------- entry points
+def forward_logits(params, tokens, cfg: TransformerConfig):
+    """Teacher-forced logits (B, S, V) — testing/serving prefill path."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, _aux, _ = _stack_scan(x, params, cfg, positions)
+    x = rms_norm(x, params["ln_final"])
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        params["w_vocab"].astype(jnp.float32))
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def forward_loss(params, tokens, targets, cfg: TransformerConfig):
+    """Training forward: tokens/targets (B, S) -> scalar loss."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = shard(x, _residual_names(cfg))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, aux, _ = _stack_scan(x, params, cfg, positions)
+    x = rms_norm(x, params["ln_final"])
+    loss = chunked_cross_entropy(x, params["w_vocab"], targets,
+                                 chunk=cfg.ce_chunk, softcap=cfg.final_softcap)
+    return loss + 0.01 * aux / max(cfg.n_layers, 1)
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    shape = cfg.layers_leading + (batch, max_len, kv, dh)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def prefill_step(params, tokens, cfg: TransformerConfig, max_len: int | None = None):
+    """Serving prefill: run the full prompt, materialize the KV cache, and
+    return (last-position logits (B, V), cache). `max_len` reserves cache
+    room beyond the prompt for subsequent decode_steps."""
+    cfg = replace(cfg, remat="none")  # no grads in serving; remat only copies
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = shard(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    caches = init_cache(cfg, B, max_len)
+    x, _aux, new_caches = _stack_scan(x, params, cfg, positions,
+                                      caches=caches, cache_index=0)
+    x_last = rms_norm(x[:, -1], params["ln_final"])
+    logits = (x_last @ params["w_vocab"]).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, new_caches
+
+
+def decode_step(params, cache, tokens, cur_index, cfg: TransformerConfig):
+    """One-token decode: tokens (B,) int32, cur_index scalar — returns
+    (logits (B, V), new_cache). KV cache is (L..., B, Smax, kv, dh)."""
+    cfg = replace(cfg, remat="none")  # no grads in serving; remat only copies
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :].astype(cfg.dtype)  # (B, 1, D)
+    positions = jnp.full((B, 1), cur_index, dtype=jnp.int32)
+    caches = cache
+    x, _aux, new_caches = _stack_scan(x, params, cfg, positions,
+                                      caches=caches, cache_index=cur_index)
+    x = rms_norm(x, params["ln_final"])
+    logits = (x[:, 0] @ params["w_vocab"]).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, new_caches

@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (
+    HW,
+    collective_wire_bytes,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
+
+__all__ = ["HW", "collective_wire_bytes", "model_flops", "parse_collectives", "roofline_terms"]

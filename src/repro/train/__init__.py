@@ -1,0 +1,24 @@
+"""Training substrate: optimizer, loop, checkpoint/restart, fault tolerance,
+gradient compression."""
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state, schedule
+from repro.train.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.compression import (
+    CompressionConfig,
+    compress_gradients,
+    compress_int8,
+    compress_topk,
+    init_residual,
+)
+from repro.train.fault_tolerance import (
+    ElasticPlan,
+    FailureInjector,
+    HeartbeatMonitor,
+    StragglerDetector,
+    data_skip_offset,
+)
+from repro.train.loop import Trainer, TrainerConfig, WorkerFailure

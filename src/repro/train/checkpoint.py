@@ -1,0 +1,167 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout: <dir>/step_<N>/ containing manifest.json (pytree structure, shapes,
+dtypes) + one .npy per leaf. Writes go to step_<N>.tmp and are committed
+with a single atomic rename — a crash mid-save never corrupts the previous
+checkpoint. `AsyncCheckpointer` snapshots to host (device_get) on the
+training thread and writes on a worker thread, overlapping I/O with compute.
+
+Restore is *elastic*: leaves are loaded as host numpy and re-placed under
+whatever mesh/sharding the restoring job uses (`device_put` with the target
+sharding), so a checkpoint taken on N chips restores onto M.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+# npy-serializable stand-ins for ml_dtypes types
+_EXOTIC_VIEWS = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        items.append((path, leaf))
+    return items, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Blocking atomic save; returns the committed path."""
+    items, treedef = _flatten(tree)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    for i, (path, leaf) in enumerate(items):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        dtype_name = str(arr.dtype)
+        if dtype_name in _EXOTIC_VIEWS:  # bf16/fp8: npy can't serialize them
+            np.save(os.path.join(tmp, fname), arr.view(_EXOTIC_VIEWS[dtype_name]))
+        else:
+            np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"path": path, "file": fname, "shape": list(arr.shape), "dtype": dtype_name}
+        )
+    manifest["treedef"] = jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
+    with open(os.path.join(tmp, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int | None = None,
+                       shardings: Any = None) -> tuple[Any, int]:
+    """Load (tree, step). If `shardings` (a matching pytree of Sharding or
+    PartitionSpec-resolved shardings) is given, leaves are placed with it —
+    the elastic-remesh path."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    leaves = []
+    for rec in manifest["leaves"]:
+        arr = np.load(os.path.join(path, rec["file"]))
+        if rec["dtype"] in _EXOTIC_VIEWS:
+            import ml_dtypes
+
+            arr = arr.view(getattr(ml_dtypes, rec["dtype"]))
+        leaves.append(arr)
+    # rebuild the tree from paths (robust to treedef serialization versions)
+    tree = _unflatten_from_paths([(rec["path"], leaf) for rec, leaf in
+                                  zip(manifest["leaves"], leaves)])
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, manifest["step"]
+
+
+def _unflatten_from_paths(items):
+    root: dict = {}
+    for path, leaf in items:
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return _listify(root)
+
+
+def _listify(node):
+    """Convert dicts whose keys are 0..n-1 back into lists."""
+    if not isinstance(node, dict):
+        return node
+    out = {k: _listify(v) for k, v in node.items()}
+    keys = list(out.keys())
+    if keys and all(k.isdigit() for k in keys):
+        idx = sorted(int(k) for k in keys)
+        if idx == list(range(len(idx))):
+            return [out[str(i)] for i in idx]
+    return out
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint I/O with training; keeps the last `keep` steps."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save(self, step: int, tree: Any):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree)
+                self._gc()
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,98 @@
+"""Gradient compression with error feedback (distributed-optimization layer).
+
+Two codecs, both pytree transforms applied before the gradient all-reduce:
+
+* int8 quantization: per-tensor absmax scale, ~4× wire reduction vs fp32;
+* top-k sparsification: keep the k largest-magnitude entries per tensor
+  (values + int32 indices), Deep-Gradient-Compression style.
+
+Both maintain an *error-feedback* residual (the un-transmitted remainder is
+added back into the next step's gradient), which is what keeps convergence
+intact — tests train a quadratic and a tiny transformer to verify.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------- int8
+def quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8(grads, residual):
+    """Returns (wire_tree {q, scale}, decoded_grads, new_residual)."""
+
+    def leaf(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(gf)
+        dec = dequantize_int8(q, scale)
+        return (q, scale), dec, gf - dec
+
+    out = jax.tree.map(leaf, grads, residual)
+    wire = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    dec = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    res = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    return wire, dec, res
+
+
+# ---------------------------------------------------------------- top-k
+def compress_topk(grads, residual, frac=0.01):
+    """Keep ceil(frac·n) largest-|g| entries per tensor, with error feedback."""
+
+    def leaf(g, r):
+        gf = g.astype(jnp.float32) + r
+        flat = gf.reshape(-1)
+        k = max(int(flat.shape[0] * frac), 1)
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        sel = flat[idx]
+        dec = jnp.zeros_like(flat).at[idx].set(sel).reshape(gf.shape)
+        return (sel, idx.astype(jnp.int32)), dec, gf - dec
+
+    out = jax.tree.map(leaf, grads, residual)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    wire = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    dec = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    res = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return wire, dec, res
+
+
+def wire_bytes(wire_tree) -> int:
+    """Serialized size of the compressed representation."""
+    total = 0
+    for leaf in jax.tree.leaves(wire_tree):
+        total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    codec: str = "none"      # none | int8 | topk
+    topk_frac: float = 0.01
+
+
+def compress_gradients(grads, residual, cfg: CompressionConfig):
+    """Dispatch; returns (decoded_grads, new_residual, wire_bytes_factor)."""
+    if cfg.codec == "none":
+        return grads, residual, 1.0
+    if cfg.codec == "int8":
+        _, dec, res = compress_int8(grads, residual)
+        return dec, res, 0.25
+    if cfg.codec == "topk":
+        _, dec, res = compress_topk(grads, residual, cfg.topk_frac)
+        return dec, res, cfg.topk_frac * 2  # values + indices
+    raise ValueError(cfg.codec)

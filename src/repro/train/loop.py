@@ -1,0 +1,116 @@
+"""The training loop: jitted step + checkpoint/restart + straggler hooks +
+gradient compression, composed into a `Trainer` that the examples and the
+multi-node driver (`repro.launch.train`) share.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.train.compression import CompressionConfig, compress_gradients, init_residual
+from repro.train.fault_tolerance import FailureInjector, StragglerDetector
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str | None = None
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+    compression: CompressionConfig = field(default_factory=CompressionConfig)
+
+
+class Trainer:
+    """loss_fn(params, batch) -> scalar; data: iterator of batch pytrees."""
+
+    def __init__(self, loss_fn: Callable, params: Any, cfg: TrainerConfig,
+                 failure_injector: FailureInjector | None = None):
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        self.params = params
+        self.opt_state = init_opt_state(params, cfg.opt)
+        self.residual = init_residual(params) if cfg.compression.codec != "none" else None
+        self.step = 0
+        self.straggler = StragglerDetector()
+        self.injector = failure_injector
+        self.ckpt = AsyncCheckpointer(cfg.checkpoint_dir, cfg.keep_checkpoints) \
+            if cfg.checkpoint_dir else None
+        self.metrics_log: list[dict] = []
+
+        comp = cfg.compression
+
+        def train_step(params, opt_state, residual, batch):
+            loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+            if comp.codec != "none":
+                grads, residual, _ = compress_gradients(grads, residual, comp)
+            params, opt_state, metrics = adamw_update(params, grads, opt_state, cfg.opt)
+            return params, opt_state, residual, loss, metrics
+
+        self._step_fn = jax.jit(train_step, donate_argnums=(0, 1, 2))
+
+    # ------------------------------------------------------------- restart
+    def maybe_restore(self) -> bool:
+        if not self.cfg.checkpoint_dir:
+            return False
+        step = latest_step(self.cfg.checkpoint_dir)
+        if step is None:
+            return False
+        state, step = restore_checkpoint(self.cfg.checkpoint_dir, step)
+        self.params = state["params"]
+        self.opt_state = state["opt_state"]
+        if self.residual is not None and "residual" in state:
+            self.residual = state["residual"]
+        self.step = step
+        return True
+
+    def _save(self):
+        if self.ckpt is None:
+            return
+        state = {"params": self.params, "opt_state": self.opt_state}
+        if self.residual is not None:
+            state["residual"] = self.residual
+        self.ckpt.save(self.step, state)
+
+    # ---------------------------------------------------------------- run
+    def run(self, data: Iterator, steps: int | None = None) -> list[dict]:
+        steps = steps if steps is not None else self.cfg.total_steps
+        end = self.step + steps
+        while self.step < end:
+            if self.injector and self.injector.failures_at(self.step):
+                # failure event: drain in-flight checkpoint I/O so recovery
+                # sees the last *committed* step, then surface the failure
+                if self.ckpt is not None:
+                    self.ckpt.wait()
+                raise WorkerFailure(self.step)
+            batch = next(data)
+            t0 = time.monotonic()
+            self.params, self.opt_state, self.residual, loss, metrics = self._step_fn(
+                self.params, self.opt_state, self.residual, batch)
+            loss = float(loss)
+            dt = time.monotonic() - t0
+            self.straggler.observe(0, dt)
+            self.step += 1
+            if self.step % self.cfg.log_every == 0 or self.step == end:
+                rec = {"step": self.step, "loss": loss, "sec_per_step": dt,
+                       "lr": float(metrics["lr"]), "grad_norm": float(metrics["grad_norm"])}
+                self.metrics_log.append(rec)
+            if self.cfg.checkpoint_dir and self.step % self.cfg.checkpoint_every == 0:
+                self._save()
+        if self.ckpt is not None:
+            self._save()
+            self.ckpt.wait()
+        return self.metrics_log
+
+
+class WorkerFailure(RuntimeError):
+    def __init__(self, step):
+        super().__init__(f"injected worker failure at step {step}")
+        self.step = step

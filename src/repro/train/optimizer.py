@@ -1,0 +1,113 @@
+"""Optimizers (pure JAX pytree transforms) with mixed-precision discipline:
+bf16 compute params, fp32 master + moments (ZeRO-1-shardable — see
+repro.distributed.sharding.zero1_spec).
+
+`adamw` for dense params; `mixed_dlrm` applies plain SGD to embedding
+tables (MLPerf practice — Adam moments on 178M-row tables would double the
+table memory) and AdamW to the MLPs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    sgd_paths: tuple = ()  # path substrings optimized with plain SGD (no moments)
+
+
+def _is_sgd(path: str, cfg: AdamWConfig) -> bool:
+    return any(s in path for s in cfg.sgd_paths)
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k.key) if hasattr(k, "key") else str(k.idx) for k in kp) for kp, _ in flat]
+    return paths, [v for _, v in flat], treedef
+
+
+def schedule(step, cfg: AdamWConfig):
+    """Linear warmup + cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    paths, leaves, treedef = _paths(params)
+
+    def moments(path, p):
+        if _is_sgd(path, cfg):
+            return None
+        return jnp.zeros(p.shape, jnp.float32)
+
+    # copy=True: for fp32 params astype would alias the param buffer, and an
+    # aliased master breaks donation (same buffer donated twice)
+    master = [jnp.array(p, dtype=jnp.float32, copy=True) for p in leaves]
+    m = [moments(pa, p) for pa, p in zip(paths, leaves)]
+    v = [moments(pa, p) for pa, p in zip(paths, leaves)]
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree_util.tree_unflatten(treedef, master),
+        "m": jax.tree_util.tree_unflatten(treedef, m),
+        "v": jax.tree_util.tree_unflatten(treedef, v),
+    }
+
+
+def global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)))
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(step, cfg)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    paths, g_leaves, treedef = _paths(grads)
+    p_leaves = jax.tree.leaves(params)
+    mast_leaves = jax.tree.leaves(opt_state["master"])
+    m_leaves, _ = jax.tree_util.tree_flatten(opt_state["m"], is_leaf=lambda x: x is None)
+    v_leaves, _ = jax.tree_util.tree_flatten(opt_state["v"], is_leaf=lambda x: x is None)
+
+    new_p, new_mast, new_m, new_v = [], [], [], []
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    for path, p, g, mast, m, v in zip(paths, p_leaves, g_leaves, mast_leaves, m_leaves, v_leaves):
+        gf = g.astype(jnp.float32) * clip
+        if m is None:  # plain SGD leaf (embedding tables)
+            upd = lr * gf
+            nm, nv = None, None
+        else:
+            nm = cfg.b1 * m + (1 - cfg.b1) * gf
+            nv = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+            upd = lr * (nm / b1c) / (jnp.sqrt(nv / b2c) + cfg.eps)
+            if cfg.weight_decay and p.ndim >= 2:
+                upd = upd + lr * cfg.weight_decay * mast
+        nmast = mast - upd
+        new_mast.append(nmast)
+        new_p.append(nmast.astype(p.dtype))
+        new_m.append(nm)
+        new_v.append(nv)
+
+    unf = partial(jax.tree_util.tree_unflatten, treedef)
+    return (
+        unf(new_p),
+        {"step": step, "master": unf(new_mast), "m": unf(new_m), "v": unf(new_v)},
+        {"lr": lr, "grad_norm": gnorm},
+    )

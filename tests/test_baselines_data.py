@@ -1,0 +1,121 @@
+"""Baselines (k2-triples, HDT-BT) parity + data layer (synthetic, rdf,
+GraphStore, sampler)."""
+import numpy as np
+import pytest
+
+from repro.baselines import HDTBitmapTriples, K2Triples, ntriples_size_bytes
+from repro.core import Hypergraph, LabelTable, query_oracle
+from repro.data import (
+    GraphStore,
+    NeighborSampler,
+    parse_ntriples,
+    rdf_like,
+    version_graph,
+    web_graph,
+    write_ntriples,
+)
+
+PATTERNS = ["spo", "sp?", "s?o", "s??", "?po", "?p?", "??o", "???"]
+
+
+def _bind(pattern, s, p, o):
+    return (
+        s if pattern[0] == "s" else None,
+        p if pattern[1] == "p" else None,
+        o if pattern[2] == "o" else None,
+    )
+
+
+@pytest.fixture(scope="module")
+def small_rdf():
+    ds = rdf_like(n_nodes=80, n_edges=300, n_preds=5, seed=1)
+    return ds
+
+
+def test_baseline_query_parity(small_rdf):
+    ds = small_rdf
+    table = LabelTable.terminals([2] * ds.n_preds)
+    g = Hypergraph.from_triples(ds.triples, ds.n_nodes)
+    k2 = K2Triples(ds.triples, ds.n_nodes, ds.n_preds)
+    hdt = HDTBitmapTriples(ds.triples, ds.n_nodes, ds.n_preds)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        t = ds.triples[rng.integers(0, len(ds.triples))]
+        s, p, o = int(t[0]), int(t[1]), int(t[2])
+        for pattern in PATTERNS:
+            qs, qp, qo = _bind(pattern, s, p, o)
+            want = sorted(query_oracle(g, qs, qp, qo))
+            assert sorted(k2.query(qs, qp, qo)) == want, f"k2 {pattern}"
+            assert sorted(hdt.query(qs, qp, qo)) == want, f"hdt {pattern}"
+
+
+def test_baseline_sizes_positive(small_rdf):
+    ds = small_rdf
+    k2 = K2Triples(ds.triples, ds.n_nodes, ds.n_preds)
+    hdt = HDTBitmapTriples(ds.triples, ds.n_nodes, ds.n_preds)
+    raw = ntriples_size_bytes(ds.triples)
+    assert 0 < k2.size_in_bytes() < raw
+    assert 0 < hdt.size_in_bytes() < raw
+
+
+def test_synthetic_generators_shapes():
+    for ds in [rdf_like(seed=2), web_graph(seed=2), version_graph(seed=2)]:
+        assert ds.n_triples > 0
+        assert ds.triples.shape[1] == 3
+        assert ds.triples[:, 0].max() < ds.n_nodes
+        assert ds.triples[:, 1].max() < ds.n_preds
+        assert ds.triples[:, 2].max() < ds.n_nodes
+        # deduplicated
+        assert len(np.unique(ds.triples, axis=0)) == ds.n_triples
+    vg = version_graph(seed=3)
+    assert vg.node_labels is not None and (vg.node_labels >= 0).any()
+
+
+def test_ntriples_roundtrip(tmp_path):
+    ds = rdf_like(n_nodes=40, n_edges=100, n_preds=3, seed=5)
+    path = tmp_path / "g.nt"
+    write_ntriples(str(path), ds.triples)
+    triples, node_names, pred_names = parse_ntriples(str(path))
+    assert len(triples) == ds.n_triples
+    # ids are assigned in file order; compare as string triple sets
+    orig = {(f"<http://ex.org/n{s}>", f"<http://ex.org/p{p}>", f"<http://ex.org/n{o}>")
+            for s, p, o in ds.triples}
+    got = {(node_names[s], pred_names[p], node_names[o]) for s, p, o in triples}
+    assert got == orig
+
+
+def test_graph_store_roundtrip_and_queries():
+    ds = rdf_like(n_nodes=60, n_edges=200, n_preds=4, seed=7)
+    store = GraphStore.from_triples(ds.triples, ds.n_nodes, ds.n_preds)
+    g = Hypergraph.from_triples(ds.triples, ds.n_nodes)
+    # compressed neighborhood queries match a scan
+    for v in np.unique(ds.triples[:, 0])[:10]:
+        want = np.unique(ds.triples[ds.triples[:, 0] == v, 2])
+        assert np.array_equal(store.neighbors_out(int(v)), want)
+    # CSR view matches the triple multiset
+    indptr, indices = store.csr()
+    assert indptr[-1] == ds.n_triples
+    senders, receivers = store.edge_index()
+    got = sorted(zip(senders.tolist(), receivers.tolist()))
+    want = sorted(zip(ds.triples[:, 0].tolist(), ds.triples[:, 2].tolist()))
+    assert got == want
+
+
+def test_neighbor_sampler_fanout():
+    ds = web_graph(n_nodes=500, n_edges=3000, seed=9)
+    store = GraphStore.from_triples(ds.triples, ds.n_nodes, ds.n_preds)
+    indptr, indices = store.csc()  # sample in-neighbors
+    sampler = NeighborSampler(indptr, indices, fanouts=(15, 10))
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(ds.n_nodes, 32, replace=False)
+    batch = sampler.sample(seeds, rng)
+    assert len(batch.blocks) == 2
+    assert len(batch.node_ids) >= len(seeds)
+    for blk, fan in zip(batch.blocks, (15, 10)):
+        assert len(blk.senders) == len(blk.receivers)
+        # every sampled edge is a real edge of the graph
+    # fanout bound: per receiver at most `fanout` sampled in-neighbors
+    blk = batch.blocks[0]
+    if len(blk.receivers):
+        _, counts = np.unique(blk.receivers, return_counts=True)
+        assert counts.max() <= 15

@@ -1,0 +1,182 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.segment_matmul import build_csr_blocks
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,d",
+    [
+        (1, 4, 4, 128, 128, 64),     # MHA square
+        (2, 8, 2, 128, 128, 64),     # GQA 4:1
+        (1, 4, 1, 64, 256, 32),      # MQA decode-ish (Sq < Sk)
+        (1, 2, 2, 256, 256, 128),
+    ],
+)
+def test_flash_attention_sweep(b, hq, hkv, sq, sk, d, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("window", [None, 64, 128])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_flash_attention_window_softcap(window, softcap):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, window=window, softcap=softcap,
+                              block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- spmm
+@pytest.mark.parametrize("n,e,d", [(200, 1000, 64), (777, 3000, 128), (64, 64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_csr_spmm_sweep(n, e, d, dtype):
+    rng = np.random.default_rng(3)
+    senders = rng.integers(0, n, e)
+    receivers = rng.integers(0, n, e)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    src_idx, local_dst = build_csr_blocks(senders, receivers, n, block_n=128)
+    got = ops.csr_spmm(x, jnp.asarray(src_idx), jnp.asarray(local_dst), n)
+    # kernel accumulates in fp32 (MXU preferred type); compare against an
+    # fp32-accumulated oracle, cast back to the kernel's output dtype
+    want = ref.spmm_ref(x.astype(jnp.float32), jnp.asarray(senders), jnp.asarray(receivers), n).astype(dtype)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **(_tol(dtype) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)),
+    )
+
+
+def test_csr_spmm_isolated_nodes():
+    n = 300
+    senders = np.array([0, 1, 2])
+    receivers = np.array([5, 5, 7])
+    x = jnp.ones((n, 128), jnp.float32)
+    src_idx, local_dst = build_csr_blocks(senders, receivers, n)
+    got = ops.csr_spmm(x, jnp.asarray(src_idx), jnp.asarray(local_dst), n)
+    assert float(got[5, 0]) == 2.0 and float(got[7, 0]) == 1.0
+    assert float(jnp.abs(got).sum()) == 3 * 128
+
+
+# ---------------------------------------------------------------- embedding bag
+@pytest.mark.parametrize("v,d,b,l", [(1000, 64, 256, 1), (5000, 128, 128, 8), (64, 256, 256, 3)])
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_embedding_bag_sweep(v, d, b, l, combiner):
+    rng = np.random.default_rng(4)
+    table = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    idx = rng.integers(0, v, (b, l))
+    idx[rng.random((b, l)) < 0.2] = -1  # ragged bags
+    idx = jnp.asarray(idx, jnp.int32)
+    got = ops.embedding_bag(table, idx, combiner=combiner)
+    want = ref.embedding_bag_ref(table, idx, combiner=combiner)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- dot interaction
+@pytest.mark.parametrize("b,f,d", [(128, 27, 128), (256, 8, 64), (128, 4, 16)])
+def test_dot_interaction_sweep(b, f, d):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(b, f, d)), jnp.float32)
+    got = ops.dot_interaction(x)
+    want = ref.dot_interaction_ref(x)
+    assert got.shape == (b, f * (f - 1) // 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- digram count
+@pytest.mark.parametrize("n,k", [(256, 4), (512, 8), (256, 16)])
+def test_digram_pair_counts_sweep(n, k):
+    rng = np.random.default_rng(6)
+    its = rng.integers(0, 50, (n, k)).astype(np.int32)
+    cnts = rng.integers(1, 10, (n, k)).astype(np.int32)
+    pad = rng.random((n, k)) < 0.3
+    its[pad] = -1
+    cnts[pad] = 0
+    got_lo, got_hi, got_c = ops.digram_pair_counts(jnp.asarray(its), jnp.asarray(cnts))
+    want_lo, want_hi, want_c = ref.digram_pair_counts_ref(jnp.asarray(its), jnp.asarray(cnts))
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    valid = np.asarray(got_c) > 0
+    np.testing.assert_array_equal(np.asarray(got_lo)[valid], np.asarray(want_lo)[valid])
+    np.testing.assert_array_equal(np.asarray(got_hi)[valid], np.asarray(want_hi)[valid])
+
+
+def test_digram_kernel_matches_host_counter():
+    """Kernel output aggregated over nodes == repro.core.digram counts."""
+    from repro.core import LabelTable, digram_counts
+    from repro.core.digram import node_it_counts
+    from tests.test_itr_core import random_hypergraph
+
+    rng = np.random.default_rng(7)
+    g, table = random_hypergraph(rng, n_nodes=30, n_edges=100)
+    v, it, c = node_it_counts(g, table)
+    # build padded per-node (K) arrays
+    k = 16
+    uniq, inv = np.unique(v, return_inverse=True)
+    its = np.full((len(uniq), k), -1, np.int32)
+    cs = np.zeros((len(uniq), k), np.int32)
+    slot = np.zeros(len(uniq), np.int64)
+    for row, (node_i, it_i, c_i) in enumerate(zip(inv, it, c)):
+        its[node_i, slot[node_i]] = it_i
+        cs[node_i, slot[node_i]] = c_i
+        slot[node_i] += 1
+    n_pad = ((len(uniq) + 255) // 256) * 256
+    its = np.pad(its, ((0, n_pad - len(uniq)), (0, 0)), constant_values=-1)
+    cs = np.pad(cs, ((0, n_pad - len(uniq)), (0, 0)))
+    lo, hi, cnt = ops.digram_pair_counts(jnp.asarray(its), jnp.asarray(cs))
+    lo, hi, cnt = np.asarray(lo), np.asarray(hi), np.asarray(cnt)
+    sel = cnt > 0
+    keys = (lo[sel].astype(np.int64) << 32) | hi[sel].astype(np.int64)
+    agg = {}
+    for kk, cc in zip(keys.tolist(), cnt[sel].tolist()):
+        agg[kk] = agg.get(kk, 0) + cc
+    want_keys, want_cnts = digram_counts(g, table, cap=None)
+    assert agg == dict(zip(want_keys.tolist(), want_cnts.tolist()))
+
+
+# ---------------------------------------------------------------- bitvec rank
+@pytest.mark.parametrize("nbits,q", [(4096, 1024), (100_000, 2048)])
+def test_bitvec_rank_sweep(nbits, q):
+    from repro.core.succinct import BitVector
+
+    rng = np.random.default_rng(8)
+    bits = rng.integers(0, 2, nbits).astype(np.uint8)
+    bv = BitVector(bits)
+    pos = rng.integers(0, nbits, q).astype(np.int32)
+    words = jnp.asarray(bv.words)
+    ranks = jnp.asarray(bv.word_ranks[:-1].astype(np.int32))
+    got = ops.bitvec_rank(words, ranks, jnp.asarray(pos))
+    want = bv.rank1(pos.astype(np.int64))
+    np.testing.assert_array_equal(np.asarray(got), want.astype(np.int32))
+    # and the jnp ref oracle agrees too
+    want2 = ref.bitvec_rank_ref(words, ranks, jnp.asarray(pos))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want2))

@@ -1,0 +1,200 @@
+"""Per-architecture smoke tests (reduced configs, one forward/train step on
+CPU, shape + finite checks) plus model-level correctness properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import dlrm as dlrm_mod
+from repro.models import gnn as gnn_mod
+from repro.models import transformer as tf_mod
+
+LM_ARCHS = [a for a, s in ARCHS.items() if s.family == "lm"]
+GNN_ARCHS = [a for a, s in ARCHS.items() if s.family == "gnn"]
+
+
+def _gnn_batch(rng, n=40, e=160, d_feat=8, d_edge=4):
+    return dict(
+        x=jnp.asarray(rng.normal(size=(n, d_feat)), jnp.float32),
+        ef=jnp.asarray(rng.normal(size=(e, d_edge)), jnp.float32),
+        senders=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        receivers=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        species=jnp.asarray(rng.integers(0, 4, n), jnp.int32),
+        pos=jnp.asarray(rng.normal(size=(n, 3)) * 2, jnp.float32),
+        n=n,
+    )
+
+
+# ------------------------------------------------------------ LM smoke
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    cfg = get_arch(arch).reduced()
+    params = tf_mod.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=1)
+    loss, grads = jax.value_and_grad(lambda p: tf_mod.forward_loss(p, tokens, targets, cfg))(params)
+    assert jnp.isfinite(loss), arch
+    assert all(jnp.isfinite(g).all() for g in jax.tree.leaves(grads)), arch
+    # one SGD step moves the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
+    loss2 = tf_mod.forward_loss(params2, tokens, targets, cfg)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_decode_shapes(arch):
+    cfg = get_arch(arch).reduced()
+    params = tf_mod.init_params(cfg, jax.random.PRNGKey(0))
+    cache = tf_mod.init_cache(cfg, batch=2, max_len=16)
+    logits, cache2 = tf_mod.decode_step(params, cache, jnp.array([1, 2], jnp.int32), 0, cfg)
+    assert logits.shape == (2, cfg.vocab)
+    assert jnp.isfinite(logits).all()
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+def test_decode_matches_teacher_forcing():
+    """Greedy decode logits == teacher-forced forward logits, step by step."""
+    cfg = get_arch("gemma2-9b").reduced()  # exercises local/global + softcaps
+    params = tf_mod.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    S = 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, S)), jnp.int32)
+    full = tf_mod.forward_logits(params, tokens, cfg)  # (2, S, V)
+    cache = tf_mod.init_cache(cfg, batch=2, max_len=S)
+    for t in range(S):
+        step_logits, cache = tf_mod.decode_step(params, cache, tokens[:, t], t, cfg)
+        np.testing.assert_allclose(
+            np.asarray(step_logits), np.asarray(full[:, t]), rtol=2e-3, atol=2e-3,
+        )
+
+
+def test_moe_decode_matches_teacher_forcing():
+    # capacity_factor high enough that no token is dropped in either the
+    # grouped (teacher-forced) or per-token (decode) dispatch — capacity
+    # dropping is group-size dependent by construction, so parity is only
+    # defined drop-free
+    import dataclasses
+
+    cfg = dataclasses.replace(get_arch("olmoe-1b-7b").reduced(), capacity_factor=16.0)
+    params = tf_mod.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    S = 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, S)), jnp.int32)
+    full = tf_mod.forward_logits(params, tokens, cfg)
+    cache = tf_mod.init_cache(cfg, batch=2, max_len=S)
+    for t in range(S):
+        step_logits, cache = tf_mod.decode_step(params, cache, tokens[:, t], t, cfg)
+        np.testing.assert_allclose(
+            np.asarray(step_logits), np.asarray(full[:, t]), rtol=2e-3, atol=2e-3,
+        )
+
+
+# ------------------------------------------------------------ GNN smoke
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_smoke(arch):
+    cfg = get_arch(arch).reduced()
+    rng = np.random.default_rng(0)
+    b = _gnn_batch(rng)
+    key = jax.random.PRNGKey(0)
+    if arch == "gcn-cora":
+        params = gnn_mod.gcn_init(cfg, key, 8, 7)
+        out = gnn_mod.gcn_apply(params, b["x"], b["senders"], b["receivers"], b["n"], cfg)
+        assert out.shape == (b["n"], 7)
+    elif arch == "gatedgcn":
+        params = gnn_mod.gatedgcn_init(cfg, key, 8, 4, 7)
+        out = gnn_mod.gatedgcn_apply(params, b["x"], b["ef"], b["senders"], b["receivers"], b["n"], cfg)
+        assert out.shape == (b["n"], 7)
+    elif arch == "meshgraphnet":
+        params = gnn_mod.meshgraphnet_init(cfg, key, 8, 4, 3)
+        out = gnn_mod.meshgraphnet_apply(params, b["x"], b["ef"], b["senders"], b["receivers"], b["n"], cfg)
+        assert out.shape == (b["n"], 3)
+    else:  # nequip
+        params = gnn_mod.nequip_init(cfg, key, n_species=4)
+        out = gnn_mod.nequip_apply(params, b["species"], b["pos"], b["senders"], b["receivers"], b["n"], cfg)
+        assert out.shape == (b["n"], 1)
+    assert jnp.isfinite(out).all()
+
+
+def test_nequip_equivariance_property():
+    """Scalar outputs invariant under random E(3) transforms (rotation +
+    translation); this is the irrep-correctness test for the tensor product."""
+    cfg = get_arch("nequip").reduced()
+    rng = np.random.default_rng(3)
+    b = _gnn_batch(rng)
+    params = gnn_mod.nequip_init(cfg, jax.random.PRNGKey(3), n_species=4)
+    f = lambda pos: gnn_mod.nequip_apply(params, b["species"], pos, b["senders"], b["receivers"], b["n"], cfg)
+    base = f(b["pos"])
+    for seed in range(3):
+        r = np.random.default_rng(seed)
+        q, _ = np.linalg.qr(r.normal(size=(3, 3)))
+        if np.linalg.det(q) < 0:
+            q[:, 0] *= -1
+        shift = jnp.asarray(r.normal(size=(3,)), jnp.float32)
+        got = f(b["pos"] @ jnp.asarray(q.T, jnp.float32) + shift)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-4, atol=1e-4)
+
+
+def test_gnn_gradients_flow():
+    cfg = get_arch("gatedgcn").reduced()
+    rng = np.random.default_rng(4)
+    b = _gnn_batch(rng)
+    params = gnn_mod.gatedgcn_init(cfg, jax.random.PRNGKey(4), 8, 4, 7)
+    labels = jnp.asarray(rng.integers(0, 7, b["n"]), jnp.int32)
+
+    def loss_fn(p):
+        logits = gnn_mod.gatedgcn_apply(p, b["x"], b["ef"], b["senders"], b["receivers"], b["n"], cfg)
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(b["n"]), labels])
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert jnp.isfinite(loss)
+    gn = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert gn > 0
+
+
+# ------------------------------------------------------------ DLRM smoke
+def test_dlrm_smoke_train_step():
+    cfg = get_arch("dlrm-mlperf").reduced()
+    params = dlrm_mod.dlrm_init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B = 32
+    dense = jnp.asarray(rng.normal(size=(B, cfg.n_dense)), jnp.float32)
+    sparse = jnp.asarray(
+        np.stack([rng.integers(0, r, B) for r in cfg.row_counts], axis=1), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, 2, B), jnp.float32)
+    loss, grads = jax.value_and_grad(
+        lambda p: dlrm_mod.dlrm_loss(p, dense, sparse, labels, cfg))(params)
+    assert jnp.isfinite(loss)
+    assert all(jnp.isfinite(g).all() for g in jax.tree.leaves(grads))
+    logits = dlrm_mod.dlrm_apply(params, dense, sparse, cfg)
+    assert logits.shape == (B,)
+
+
+def test_dlrm_retrieval():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    cands = jnp.asarray(rng.normal(size=(1000, 16)), jnp.float32)
+    scores, idx = dlrm_mod.retrieval_scores(q, cands, k=10)
+    want = np.argsort(-np.asarray(cands @ q))[:10]
+    np.testing.assert_array_equal(np.asarray(idx), want)
+
+
+def test_full_configs_param_counts():
+    """Published parameter counts sanity: yi ~34B, gemma2 ~9B, qwen2 ~1.5B,
+    phi3.5 ~42B total, olmoe ~7B total; DLRM ~22.8B (91GB/4)."""
+    approx = {
+        "yi-34b": (34e9, 0.10),
+        "gemma2-9b": (9e9, 0.35),       # counts include the 256k-vocab embeddings
+        "qwen2-1.5b": (1.5e9, 0.30),
+        "phi3.5-moe-42b-a6.6b": (42e9, 0.10),
+        "olmoe-1b-7b": (7e9, 0.10),
+    }
+    for arch, (want, tol) in approx.items():
+        cfg = get_arch(arch).config()
+        got = cfg.n_params()
+        assert abs(got - want) / want < tol, f"{arch}: {got:.3e} vs {want:.3e}"
+    # MoE active params < total
+    phi = get_arch("phi3.5-moe-42b-a6.6b").config()
+    assert phi.n_active_params() < phi.n_params()
+    assert 5e9 < phi.n_active_params() < 9e9

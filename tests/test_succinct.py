@@ -1,0 +1,169 @@
+"""Unit + property tests for the succinct layer (bitvector/EF/delta/k2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.succinct import (
+    BitVector,
+    EliasFano,
+    K2Tree,
+    delta_decode,
+    delta_encode,
+    gamma_decode,
+    gamma_encode,
+    pack_bits,
+    unpack_bits,
+)
+
+
+# ---------------- bitvector ----------------
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    for n in [0, 1, 31, 32, 33, 100, 1024, 4097]:
+        bits = rng.integers(0, 2, n).astype(np.uint8)
+        assert np.array_equal(unpack_bits(pack_bits(bits), n), bits)
+
+
+def test_rank_select_against_naive():
+    rng = np.random.default_rng(1)
+    bits = rng.integers(0, 2, 1000).astype(np.uint8)
+    bv = BitVector(bits)
+    cum = np.concatenate([[0], np.cumsum(bits)])
+    for i in [0, 1, 31, 32, 33, 500, 999, 1000]:
+        assert int(bv.rank1(i)) == cum[i]
+        assert int(bv.rank0(i)) == i - cum[i]
+    ones = np.flatnonzero(bits)
+    got = bv.select1(np.arange(len(ones)))
+    assert np.array_equal(got, ones)
+
+
+def test_rank_batched():
+    bits = np.array([1, 0, 1, 1, 0, 0, 1], dtype=np.uint8)
+    bv = BitVector(bits)
+    idx = np.arange(8)
+    expect = np.concatenate([[0], np.cumsum(bits)])
+    assert np.array_equal(bv.rank1(idx), expect)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=300))
+def test_bitvector_properties(bools):
+    bits = np.array(bools, dtype=np.uint8)
+    bv = BitVector(bits)
+    assert np.array_equal(bv.to_numpy(), bits)
+    n_ones = int(bits.sum())
+    assert bv.n_ones == n_ones
+    if n_ones:
+        sel = bv.select1(np.arange(n_ones))
+        # rank(select(j)) == j and bit at select(j) is 1
+        assert np.array_equal(bv.rank1(sel), np.arange(n_ones))
+        assert np.all(bv.access(sel) == 1)
+
+
+# ---------------- elias-fano ----------------
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=10_000), min_size=0, max_size=200))
+def test_elias_fano_roundtrip(vals):
+    vals = np.sort(np.array(vals, dtype=np.int64))
+    ef = EliasFano(vals)
+    assert np.array_equal(ef.to_numpy(), vals)
+
+
+def test_elias_fano_access_and_rank():
+    vals = np.array([2, 3, 5, 7, 11, 13, 24, 24, 60], dtype=np.int64)
+    ef = EliasFano(vals)
+    assert int(ef.access(4)) == 11
+    assert np.array_equal(ef.access(np.array([0, 8])), np.array([2, 60]))
+    assert ef.rank_leq(24) == 8
+    assert ef.rank_leq(1) == 0
+    assert ef.rank_leq(100) == 9
+
+
+def test_elias_fano_compresses_dense_runs():
+    vals = np.repeat(np.arange(100), 50)  # 5000 values, universe 100
+    ef = EliasFano(vals)
+    assert ef.size_in_bytes() < 5000 * 4  # far smaller than raw int32
+
+
+# ---------------- gamma / delta ----------------
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=2**40), min_size=0, max_size=200))
+def test_delta_roundtrip(vals):
+    vals = np.array(vals, dtype=np.uint64)
+    words, nbits = delta_encode(vals)
+    out = delta_decode(words, nbits, len(vals))
+    assert np.array_equal(out, vals)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=2**30), min_size=1, max_size=100))
+def test_gamma_roundtrip(vals):
+    vals = np.array(vals, dtype=np.uint64)
+    words, nbits = gamma_encode(vals)
+    assert np.array_equal(gamma_decode(words, nbits, len(vals)), vals)
+
+
+def test_delta_is_compact_for_small_values():
+    vals = np.ones(1000, dtype=np.uint64)  # delta(1) = 1 bit
+    words, nbits = delta_encode(vals)
+    assert nbits == 1000
+
+
+# ---------------- k2 tree ----------------
+def _random_matrix(rng, n, m, density):
+    nnz = max(1, int(n * m * density))
+    r = rng.integers(0, n, nnz)
+    c = rng.integers(0, m, nnz)
+    return r, c
+
+
+@pytest.mark.parametrize("k", [2, 4])
+@pytest.mark.parametrize("shape", [(8, 8), (10, 17), (64, 3), (1, 1), (100, 100)])
+def test_k2_dense_roundtrip(k, shape):
+    rng = np.random.default_rng(42)
+    n, m = shape
+    r, c = _random_matrix(rng, n, m, 0.05)
+    t = K2Tree(r, c, n, m, k=k)
+    dense = np.zeros((n, m), dtype=np.uint8)
+    dense[r, c] = 1
+    assert np.array_equal(t.to_dense(), dense)
+
+
+def test_k2_row_col_queries():
+    rng = np.random.default_rng(7)
+    n, m = 50, 70
+    r, c = _random_matrix(rng, n, m, 0.03)
+    t = K2Tree(r, c, n, m)
+    dense = np.zeros((n, m), dtype=np.uint8)
+    dense[r, c] = 1
+    for i in range(n):
+        assert np.array_equal(t.row(i), np.flatnonzero(dense[i]))
+    for j in range(m):
+        assert np.array_equal(t.col(j), np.flatnonzero(dense[:, j]))
+    for i in range(0, n, 7):
+        for j in range(0, m, 11):
+            assert t.access(i, j) == dense[i, j]
+
+
+def test_k2_empty():
+    t = K2Tree(np.zeros(0), np.zeros(0), 16, 16)
+    assert t.n_points == 0
+    assert len(t.row(3)) == 0
+    assert t.access(0, 0) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30)), min_size=0, max_size=60),
+    st.sampled_from([2, 3, 4]),
+)
+def test_k2_property(points, k):
+    n = m = 31
+    r = np.array([p[0] for p in points], dtype=np.int64)
+    c = np.array([p[1] for p in points], dtype=np.int64)
+    t = K2Tree(r, c, n, m, k=k)
+    dense = np.zeros((n, m), dtype=np.uint8)
+    if len(points):
+        dense[r, c] = 1
+    assert np.array_equal(t.to_dense(), dense)
+    assert t.n_points == int(dense.sum())
