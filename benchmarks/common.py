@@ -58,16 +58,41 @@ def _bind(pattern, s, p, o):
 # and still report per-query averages
 QUERIES_PER_PATTERN = {"???": 5, "?p?": 50, "?po": 100, "??o": 100}
 
+# batched execution amortizes per-query overhead, so the batch path runs the
+# full 500 everywhere except ???, which materializes the entire decompressed
+# graph per query (result volume, not engine speed, is the bound there)
+BATCH_QUERIES_PER_PATTERN = {"???": 50}
 
-def time_queries(engine, ds, pattern: str, n_queries: int = 500, seed: int = 0):
-    """Average µs per query (paper Figure 4 protocol: 500 random queries)."""
+
+def time_queries(engine, ds, pattern: str, n_queries: int = 500, seed: int = 0,
+                 query_fn=None):
+    """Average µs per query (paper Figure 4 protocol: 500 random queries).
+
+    `query_fn` overrides the per-query callable (default `engine.query`) —
+    e.g. `engine.query_scalar` to time the pre-batching reference path.
+    """
     n_queries = min(n_queries, QUERIES_PER_PATTERN.get(pattern, n_queries))
+    query = query_fn if query_fn is not None else engine.query
     rng = np.random.default_rng(seed)
     rows = ds.triples[rng.integers(0, len(ds.triples), n_queries)]
     t0 = time.perf_counter()
     n_results = 0
     for s, p, o in rows:
         qs, qp, qo = _bind(pattern, int(s), int(p), int(o))
-        n_results += len(engine.query(qs, qp, qo))
+        n_results += len(query(qs, qp, qo))
     dt = time.perf_counter() - t0
     return dt / n_queries * 1e6, n_results
+
+
+def time_query_batch(engine, ds, pattern: str, n_queries: int = 500, seed: int = 0):
+    """One `query_batch_arrays` call for the whole workload (array-native
+    serving path). Returns (µs per query, n_results, queries/second)."""
+    n_queries = min(n_queries, BATCH_QUERIES_PER_PATTERN.get(pattern, n_queries))
+    rng = np.random.default_rng(seed)
+    rows = ds.triples[rng.integers(0, len(ds.triples), n_queries)]
+    bound = [_bind(pattern, int(s), int(p), int(o)) for s, p, o in rows]
+    s_arr, p_arr, o_arr = (list(col) for col in zip(*bound))
+    t0 = time.perf_counter()
+    r_q, r_l, _, _ = engine.query_batch_arrays(s_arr, p_arr, o_arr)
+    dt = time.perf_counter() - t0
+    return dt / n_queries * 1e6, int(len(r_l)), n_queries / dt if dt > 0 else 0.0

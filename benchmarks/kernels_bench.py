@@ -13,6 +13,32 @@ from repro.kernels import ops, ref
 from repro.kernels.segment_matmul import build_csr_blocks
 
 
+def _k2_batched_row_bench(rng, n_rows=256, iters=3):
+    """Time one batched multi-row k²-tree expansion with the bitvector rank
+    routed through the Pallas kernel (interpret off-TPU) vs pure numpy."""
+    from repro.core.succinct import K2Tree, set_rank_backend
+
+    n = m = 2048
+    r = rng.integers(0, n, 20000)
+    c = rng.integers(0, m, 20000)
+    tree = K2Tree(r, c, n, m)
+    qs = rng.integers(0, n, n_rows).astype(np.int64)
+
+    def run_once():
+        return tree.rows_many(qs)
+
+    timings = {}
+    for backend in ("pallas", "numpy"):
+        old = set_rank_backend(backend)
+        run_once()  # warmup (compilation / caches)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            run_once()
+        timings[backend] = (time.perf_counter() - t0) / iters * 1e6
+        set_rank_backend(old)
+    return (f"k2_rows_batched_{n_rows}r", timings["pallas"], timings["numpy"])
+
+
 def _time(fn, *args, iters=5):
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
     out = fn(*args)
@@ -61,6 +87,15 @@ def run(quiet=False):
     pos = jnp.asarray(rng.integers(0, 4096 * 32, 1024), jnp.int32)
     rows.append(("bitvec_rank_1024q", _time(ops.bitvec_rank, words, ranks, pos),
                  _time(jax.jit(ref.bitvec_rank_ref), words, ranks, pos)))
+
+    # non-multiple-of-block batch: exercises the pad-to-boundary path
+    pos_odd = jnp.asarray(rng.integers(0, 4096 * 32, 1000), jnp.int32)
+    rows.append(("bitvec_rank_1000q_pad", _time(ops.bitvec_rank, words, ranks, pos_odd),
+                 _time(jax.jit(ref.bitvec_rank_ref), words, ranks, pos_odd)))
+
+    # batched k²-tree multi-row traversal (the query-engine hot loop): one
+    # level-synchronous sweep for 256 rows, rank routed pallas vs numpy
+    rows.append(_k2_batched_row_bench(rng, n_rows=256))
 
     out = []
     for name, k_us, r_us in rows:

@@ -3,18 +3,38 @@ geo-coordinates-en stand-in, per engine (ITR vs k²-triples vs HDT-BT).
 
 The paper's claim under test: ITR answers every pattern except ?P? faster
 than (or comparable to) the baselines, in milliseconds.
+
+Beyond the paper: the batched engine (`query_batch_arrays`, one
+level-synchronous frontier for the whole workload) is timed against the
+seed per-query worklist (`query_scalar`) on the same workload, and the
+results land in `BENCH_query_latency.json` — per-pattern µs, speedups, and
+an aggregate `batch_throughput_qps` — so the serving-perf trajectory is
+tracked from PR 1 onward.
 """
 from __future__ import annotations
 
-from benchmarks.common import PATTERNS, build_all, time_queries
+import json
+from pathlib import Path
+
+from benchmarks.common import (
+    BATCH_QUERIES_PER_PATTERN,
+    PATTERNS,
+    QUERIES_PER_PATTERN,
+    build_all,
+    time_queries,
+    time_query_batch,
+)
 from repro.data.synthetic import PAPER_DATASETS
 
 
-def run(dataset="geo-coordinates-en", n_queries=500, quiet=False):
+def run(dataset="geo-coordinates-en", n_queries=500, quiet=False,
+        json_path="BENCH_query_latency.json"):
     ds = PAPER_DATASETS[dataset]()
     built = build_all(ds)
     built.pop("raw_bytes")
+    itr = built["ITR"]["engine"]
     rows = []
+    bench = {"dataset": dataset, "n_queries": n_queries, "patterns": {}}
     for pattern in PATTERNS:
         row = {"pattern": pattern}
         checks = {}
@@ -22,13 +42,54 @@ def run(dataset="geo-coordinates-en", n_queries=500, quiet=False):
             us, n_res = time_queries(b["engine"], ds, pattern, n_queries)
             row[method] = us
             checks[method] = n_res
+        # seed per-query reference path (pre-batching worklist)
+        scalar_us, scalar_n = time_queries(
+            itr, ds, pattern, n_queries, query_fn=itr.query_scalar)
+        checks["ITR-scalar"] = scalar_n
+        # batched throughput on the full workload
+        bat_us, bat_n, qps = time_query_batch(itr, ds, pattern, n_queries)
+        # batched parity on the same capped sample as the per-query engines
+        # (the timing run above already IS that sample unless caps differ)
+        n_par = min(n_queries, QUERIES_PER_PATTERN.get(pattern, n_queries))
+        n_bat = min(n_queries, BATCH_QUERIES_PER_PATTERN.get(pattern, n_queries))
+        if n_par == n_bat:
+            checks["ITR-batched"] = bat_n
+        else:
+            _, par_n, _ = time_query_batch(itr, ds, pattern, n_par)
+            checks["ITR-batched"] = par_n
         # engines must agree on result counts (correctness guard)
         assert len(set(checks.values())) == 1, f"{pattern}: result mismatch {checks}"
+        row["ITR-batched"] = bat_us
+        speedup = scalar_us / bat_us if bat_us > 0 else float("inf")
+        bench["patterns"][pattern] = {
+            "scalar_us": scalar_us,
+            "batched_us": bat_us,
+            "speedup_vs_scalar": speedup,
+            "batch_qps": qps,
+            "n_results_batched": bat_n,
+            "baseline_us": {m: row[m] for m in built},
+        }
         rows.append(row)
         if not quiet:
             times = " ".join(f"{m}={row[m]:9.1f}us" for m in built)
-            print(f"fig4 {pattern} {times}  (n={checks['ITR']})")
+            print(f"fig4 {pattern} {times} batched={bat_us:9.1f}us "
+                  f"({speedup:5.1f}x vs scalar)  (n={checks['ITR']})")
+    _finalize_throughput(bench, n_queries)
+    Path(json_path).write_text(json.dumps(bench, indent=2))
+    if not quiet:
+        print(f"batch_throughput_qps={bench['batch_throughput_qps']:.0f} -> {json_path}")
     return rows
+
+
+def _finalize_throughput(bench: dict, n_queries: int) -> None:
+    """Aggregate qps = total batched queries / total batched wall time."""
+    total_q = 0
+    total_s = 0.0
+    for pat, p in bench["patterns"].items():
+        nq = min(n_queries, BATCH_QUERIES_PER_PATTERN.get(pat, n_queries))
+        total_q += nq
+        total_s += p["batched_us"] * nq / 1e6
+    bench["batch_throughput_qps"] = total_q / total_s if total_s > 0 else 0.0
 
 
 if __name__ == "__main__":

@@ -42,6 +42,16 @@ def main() -> None:
         for m, v in row.items():
             if m != "pattern":
                 print(f"fig4/{row['pattern']}/{m},{v:.1f},us_per_query")
+    # batched-engine trajectory (written by query_latency.run)
+    try:
+        import json
+
+        bench = json.loads(open("BENCH_query_latency.json").read())
+        print(f"fig4/batch_throughput_qps,{bench['batch_throughput_qps']:.0f},qps")
+        for pat, p in bench["patterns"].items():
+            print(f"fig4/{pat}/speedup_vs_scalar,{p['speedup_vs_scalar']:.2f},x")
+    except Exception as e:
+        print(f"# BENCH_query_latency.json unavailable: {e}", file=sys.stderr)
     p = plus[0]
     print(f"itr_plus/ttt-win/gain,{p['plus_gain']:.4f},fraction")
     for row in abl["loop_rules"]:

@@ -5,6 +5,7 @@ from repro.core.digram import DigramCounter, digram_counts, digram_key, incidenc
 from repro.core.grammar import Grammar, Rule
 from repro.core.repair import RepairConfig, RepairStats, compress
 from repro.core.encode import EncodedGrammar, encode
+from repro.core.flatten import FlatGrammar
 from repro.core.query import TripleQueryEngine, query_oracle
 from repro.core.itr_plus import attach_node_labels, strip_node_labels
 
@@ -22,6 +23,7 @@ __all__ = [
     "compress",
     "EncodedGrammar",
     "encode",
+    "FlatGrammar",
     "TripleQueryEngine",
     "query_oracle",
     "attach_node_labels",

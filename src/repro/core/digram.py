@@ -195,12 +195,14 @@ class DigramCounter:
             elif c == 0:
                 self.pair_counts.pop(k, None)
 
-    def pop_best(self, skip: set | None = None) -> tuple[int, int] | None:
-        """(digram_key, count) with the highest current count, or None.
+    def peek_pop(self, skip: set | None = None) -> tuple[int, int] | None:
+        """Pop the current best (digram_key, count) OFF the heap, or None.
 
-        Lazy-deletion max-heap: stale entries (count changed since push) are
-        reinserted at their current count; digrams in `skip` (e.g. excluded
-        by the max-rank bound) are dropped.
+        The returned entry is *removed*; callers scanning candidates (e.g.
+        the "savings" selection) must return it via :meth:`push_back` when
+        done. Lazy-deletion max-heap: stale entries (count changed since
+        push) are reinserted at their current count; digrams in `skip`
+        (e.g. excluded by the max-rank bound) are dropped permanently.
         """
         while self._heap:
             negc, key = heapq.heappop(self._heap)
@@ -210,9 +212,20 @@ class DigramCounter:
             if cur != -negc:
                 heapq.heappush(self._heap, (-cur, key))
                 continue
-            heapq.heappush(self._heap, (negc, key))  # keep for future queries
             return key, cur
         return None
+
+    def push_back(self, key: int, count: int) -> None:
+        """Return an entry obtained from :meth:`peek_pop` to the heap."""
+        heapq.heappush(self._heap, (-count, key))
+
+    def pop_best(self, skip: set | None = None) -> tuple[int, int] | None:
+        """(digram_key, count) with the highest current count, or None.
+        Non-destructive: the entry stays on the heap for future queries."""
+        item = self.peek_pop(skip)
+        if item is not None:
+            self.push_back(*item)
+        return item
 
     def as_arrays(self) -> tuple[np.ndarray, np.ndarray]:
         items = [(k, c) for k, c in self.pair_counts.items() if c > 0]

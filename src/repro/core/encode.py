@@ -63,14 +63,20 @@ class EncodedGrammar:
             fns.append(pi)
             pos += 1 + rank
         fn_ids = delta_decode(*self.edge_fn_stream, self.n_edges).astype(np.int64) - 1
-        # reconstruct edges: zeta from incidence column, nodes = zeta[pi]
-        edge_nodes = []
-        for j in range(self.n_edges):
-            zeta = self.incidence.col(j)
-            pi = fns[fn_ids[j]]
-            edge_nodes.append(zeta[pi])
-        offsets = np.concatenate([[0], np.cumsum([len(t) for t in edge_nodes])]).astype(np.int64)
-        flat = np.concatenate(edge_nodes) if edge_nodes else np.zeros(0, np.int64)
+        # reconstruct edges: zeta from ONE batched incidence-column traversal
+        # (all edges at once), nodes = zeta[pi] as a flat ragged gather
+        eidx, zeta_flat = self.incidence.cols_many(np.arange(self.n_edges, dtype=np.int64))
+        zeta_counts = np.bincount(eidx, minlength=self.n_edges).astype(np.int64)
+        zeta_starts = np.cumsum(zeta_counts) - zeta_counts
+        fn_flat = np.concatenate(fns) if fns else np.zeros(0, np.int64)
+        fn_lens = np.asarray(self.fn_lengths, dtype=np.int64)
+        fn_starts = np.cumsum(fn_lens) - fn_lens
+        ranks = fn_lens[fn_ids] if self.n_edges else np.zeros(0, np.int64)
+        ends = np.cumsum(ranks)
+        slot = np.arange(int(ranks.sum()), dtype=np.int64) - np.repeat(ends - ranks, ranks)
+        pi_vals = fn_flat[np.repeat(fn_starts[fn_ids], ranks) + slot]
+        flat = zeta_flat[np.repeat(zeta_starts, ranks) + pi_vals]
+        offsets = np.concatenate([[0], ends]).astype(np.int64)
         start = Hypergraph(self.n_nodes, labels.astype(np.int64), flat, offsets)
 
         # rules

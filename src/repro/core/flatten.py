@@ -1,0 +1,128 @@
+"""Flattened (array-native) view of an SL-HR grammar for batch queries.
+
+The per-query worklist in the seed engine walked `grammar.rules` dicts and
+Python lists — one attribute lookup and one tuple allocation per expanded
+edge. For batch execution we flatten everything once, at engine build time,
+into CSR arrays so that expanding *every* nonterminal edge of a frontier is
+a handful of `np.repeat`/`np.take` gathers:
+
+  rule_index[label]          -> dense rule slot (-1 for terminals/absent)
+  edge_offsets[r:r+2]        -> slice of rule r's RHS edges
+  edge_labels[j]             -> child label of RHS edge j
+  param_offsets[j:j+2]       -> slice of edge j's parameter positions
+  params[...]                -> indices into the parent edge's node tuple
+  nt_gen[r, p]               -> rule r (transitively) emits terminal p
+                                (the paper's NT matrix, decompressed from
+                                its k²-tree into a dense bitset at build)
+
+`expand` is the level-synchronous step: given a ragged frontier of
+nonterminal edges (labels / nodes_flat / offsets) plus any number of
+aligned per-edge payload columns (query ids), it instantiates all RHS
+edges of all frontier edges in one shot.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.grammar import Grammar
+
+
+def _ragged_arange(counts: np.ndarray) -> np.ndarray:
+    """[0..counts[0]), [0..counts[1]), ... concatenated."""
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    ends = np.cumsum(counts)
+    return np.arange(total, dtype=np.int64) - np.repeat(ends - counts, counts)
+
+
+@dataclass
+class FlatGrammar:
+    """CSR arrays for rule bodies + NT-reachability bitsets."""
+
+    n_terminals: int
+    rule_index: np.ndarray     # int64[n_labels]: label -> rule slot or -1
+    rule_labels: np.ndarray    # int64[n_rules]: slot -> label
+    edge_offsets: np.ndarray   # int64[n_rules+1]
+    edge_labels: np.ndarray    # int64[total_rhs_edges]
+    edge_ranks: np.ndarray     # int64[total_rhs_edges]
+    param_offsets: np.ndarray  # int64[total_rhs_edges+1]
+    params: np.ndarray         # int64[total_params]
+    nt_gen: np.ndarray         # bool[n_rules, n_terminals]
+
+    @property
+    def n_rules(self) -> int:
+        return len(self.rule_labels)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_grammar(cls, grammar: Grammar) -> "FlatGrammar":
+        T = grammar.table.n_terminals
+        n_labels = grammar.table.n_labels
+        rule_labels = np.array(sorted(grammar.rules.keys()), dtype=np.int64)
+        rule_index = np.full(n_labels, -1, dtype=np.int64)
+        rule_index[rule_labels] = np.arange(len(rule_labels))
+
+        e_labels, e_ranks, p_chunks, e_counts = [], [], [], []
+        for lbl in rule_labels:
+            rhs = grammar.rules[int(lbl)].rhs
+            e_counts.append(rhs.n_edges)
+            e_labels.append(rhs.labels)
+            e_ranks.append(rhs.ranks())
+            p_chunks.append(rhs.nodes_flat)
+        if rule_labels.size:
+            edge_labels = np.concatenate(e_labels).astype(np.int64)
+            edge_ranks = np.concatenate(e_ranks).astype(np.int64)
+            params = np.concatenate(p_chunks).astype(np.int64)
+        else:
+            edge_labels = edge_ranks = params = np.zeros(0, dtype=np.int64)
+        edge_offsets = np.concatenate([[0], np.cumsum(e_counts)]).astype(np.int64) \
+            if e_counts else np.zeros(1, dtype=np.int64)
+        param_offsets = np.concatenate([[0], np.cumsum(edge_ranks)]).astype(np.int64)
+
+        # NT matrix rows, in rule-slot order (nt_generates rows are label-T)
+        gen = grammar.nt_generates()
+        if rule_labels.size:
+            nt_gen = gen[rule_labels - T]
+        else:
+            nt_gen = np.zeros((0, T), dtype=bool)
+        return cls(T, rule_index, rule_labels, edge_offsets, edge_labels,
+                   edge_ranks, param_offsets, params, nt_gen)
+
+    # ------------------------------------------------------------------
+    def generates(self, labels: np.ndarray, preds: np.ndarray) -> np.ndarray:
+        """Vectorized NT[label, p]: does each (nonterminal label, terminal p)
+        pair hold? Labels must be nonterminals with a rule slot."""
+        if self.nt_gen.size == 0:
+            return np.zeros(len(labels), dtype=bool)
+        return self.nt_gen[self.rule_index[labels], preds]
+
+    def expand(
+        self,
+        labels: np.ndarray,
+        nodes_flat: np.ndarray,
+        offsets: np.ndarray,
+        *payload: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, tuple[np.ndarray, ...]]:
+        """One frontier level: instantiate every RHS edge of every NT edge.
+
+        labels/nodes_flat/offsets describe a ragged batch of nonterminal
+        edges; payload columns (e.g. query ids) are carried to the children.
+        Returns (child_labels, child_nodes_flat, child_offsets, payloads).
+        """
+        slots = self.rule_index[labels]
+        counts = self.edge_offsets[slots + 1] - self.edge_offsets[slots]
+        parent = np.repeat(np.arange(len(labels), dtype=np.int64), counts)
+        # RHS edge id of each child: rule's edge slice, ragged
+        rei = np.repeat(self.edge_offsets[slots], counts) + _ragged_arange(counts)
+        child_labels = self.edge_labels[rei]
+        child_ranks = self.edge_ranks[rei]
+        # child node tuple = parent_nodes[rhs params]; all flat gathers
+        pidx = np.repeat(self.param_offsets[rei], child_ranks) + _ragged_arange(child_ranks)
+        parent_starts = offsets[:-1][parent]
+        child_nodes = nodes_flat[np.repeat(parent_starts, child_ranks) + self.params[pidx]]
+        child_offsets = np.concatenate([[0], np.cumsum(child_ranks)]).astype(np.int64)
+        out_payload = tuple(col[parent] for col in payload)
+        return child_labels, child_nodes, child_offsets, out_payload

@@ -3,23 +3,35 @@
 Patterns: any subset of (S, P, O) bound. Case analysis per the paper:
 
 * S or O bound  -> decompress one row of the start graph's incidence-matrix
-  k²-tree (no full decompression) to seed the worklist with incident edges.
+  k²-tree (no full decompression) to seed the frontier with incident edges.
 * only P bound  -> seed with start-graph edges labeled P (binary search on
   the Elias–Fano label list) plus edges of every nonterminal A whose NT
   matrix row says A can generate P.
 * nothing bound -> all start edges (equivalent to decompression).
 
-The worklist expands a nonterminal edge only if its attachment nodes can
-still contain bound S/O and NT[label, P] holds — pruned expansion is what
-makes queries fast on the grammar.
+Execution is *batched and level-synchronous*: `query_batch` runs many
+(S,P,O) patterns in one frontier by carrying a query-id column. Each
+iteration expands ALL nonterminal edges at once through the flattened
+grammar's CSR gathers (`repro.core.flatten`), applies the S/O-containment
+and NT[label,P] prunes as boolean masks, and partitions terminals into the
+result buffer. Seeding uses the k²-tree's batched multi-row expansion, so
+one traversal serves every S/O-bound query in the batch — pruned expansion
+plus batching is what makes queries fast on the grammar.
+
+`query` is a batch of one; `query_scalar` keeps the seed per-query Python
+worklist as the parity/benchmark reference.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.encode import EncodedGrammar, encode
+from repro.core.flatten import FlatGrammar, _ragged_arange
 from repro.core.grammar import Grammar
+from repro.core.hypergraph import _ragged_take
 from repro.core.succinct import K2Tree
+
+_EMPTY = np.zeros(0, dtype=np.int64)
 
 
 class TripleQueryEngine:
@@ -38,17 +50,22 @@ class TripleQueryEngine:
         else:
             self.nt_k2 = None
         self._nt_rows: dict[int, set] = {}
-        # decoded rule bodies (label, params) per nonterminal, memoized arrays
+        # flattened grammar: CSR rule bodies + NT bitsets for batch expansion
+        self.flat = FlatGrammar.from_grammar(grammar)
+        # start graph in label-sorted order, struct-of-arrays (frontier seeds
+        # and expansions are pure gathers over these)
+        self._start_sorted = grammar.start.gather_edges(
+            np.argsort(grammar.start.labels, kind="stable"))
+        g = self._start_sorted
+        self._sorted_labels = g.labels
+        self._sorted_ranks = g.ranks()
+        self._sorted_offsets = g.offsets
+        self._sorted_nodes = g.nodes_flat
+        # decoded rule bodies for the scalar reference path
         self._rules = {
             lbl: [(int(r.rhs.labels[j]), r.rhs.edge_nodes(j)) for j in range(r.rhs.n_edges)]
             for lbl, r in grammar.rules.items()
         }
-        # per-edge start-graph reconstruction caches; materialized once as
-        # python lists so the per-query hot loop does O(1) lookups instead
-        # of numpy slicing per edge (paper-side hillclimb, EXPERIMENTS §Perf)
-        self._start_sorted = grammar.start.gather_edges(np.argsort(grammar.start.labels, kind="stable"))
-        self._sorted_labels = self._start_sorted.labels
-        g = self._start_sorted
         self._edge_cache = [
             (int(g.labels[j]), g.nodes_flat[g.offsets[j]:g.offsets[j + 1]])
             for j in range(g.n_edges)
@@ -79,9 +96,161 @@ class TripleQueryEngine:
             return np.zeros(0, dtype=np.int64)
         return self.encoded.incidence.row(node)
 
-    # -- main entry ------------------------------------------------------
+    # -- batched seeding -------------------------------------------------
+    def _seed_batch(self, s: np.ndarray, p: np.ndarray, o: np.ndarray):
+        """Start-graph edge ids seeding each query; returns (qids, edge_ids)."""
+        nq = len(s)
+        all_qids, all_eids = [], []
+
+        so = (s >= 0) | (o >= 0)
+        so_q = np.flatnonzero(so)
+        if so_q.size:
+            nodes = np.where(s[so_q] >= 0, s[so_q], o[so_q])
+            idx, eids = self.encoded.incidence.rows_many(nodes)
+            all_qids.append(so_q[idx])
+            all_eids.append(eids)
+
+        p_only = ~so & (p >= 0)
+        p_q = np.flatnonzero(p_only)
+        if p_q.size:
+            pq = p[p_q]
+            # seed labels: the terminal P itself + every NT generating P
+            seed_labels = [pq]
+            owners = [p_q]
+            valid = (pq >= 0) & (pq < self.T)
+            if self.flat.n_rules and valid.any():
+                ntmask = self.flat.nt_gen[:, np.clip(pq, 0, self.T - 1)].T  # (nq, R)
+                ntmask &= valid[:, None]
+                qi, ri = np.nonzero(ntmask)
+                seed_labels.append(self.flat.rule_labels[ri])
+                owners.append(p_q[qi])
+            lbls = np.concatenate(seed_labels)
+            own = np.concatenate(owners)
+            lo = np.searchsorted(self._sorted_labels, lbls, side="left")
+            hi = np.searchsorted(self._sorted_labels, lbls, side="right")
+            counts = hi - lo
+            all_eids.append(np.repeat(lo, counts) + _ragged_arange(counts))
+            all_qids.append(np.repeat(own, counts))
+
+        open_q = np.flatnonzero(~so & (p < 0))
+        if open_q.size:
+            E = len(self._sorted_labels)
+            all_eids.append(np.tile(np.arange(E, dtype=np.int64), len(open_q)))
+            all_qids.append(np.repeat(open_q, E))
+
+        if not all_qids:
+            return _EMPTY, _EMPTY
+        return np.concatenate(all_qids), np.concatenate(all_eids)
+
+    # -- batched frontier ------------------------------------------------
+    def _run_batch(self, s: np.ndarray, p: np.ndarray, o: np.ndarray):
+        """Level-synchronous frontier over all queries at once.
+
+        Duplicate (S,P,O) patterns in the batch — common under real traffic
+        and dominant for the unselective ?P?/??? patterns — are executed
+        once and their results replicated per query id at the end.
+
+        Returns result arrays (qids, labels, nodes_flat, offsets) of the
+        matching terminal edges, ragged, unordered across queries.
+        """
+        if len(s) > 1:  # dedup never helps a batch of one
+            key = np.stack([s, p, o], axis=1)
+            uniq, inv = np.unique(key, axis=0, return_inverse=True)
+            if len(uniq) < len(s):
+                u_res = self._run_batch_unique(uniq[:, 0], uniq[:, 1], uniq[:, 2])
+                return _replicate_results(u_res, inv.reshape(-1))
+        return self._run_batch_unique(s, p, o)
+
+    def _run_batch_unique(self, s: np.ndarray, p: np.ndarray, o: np.ndarray):
+        qids, eids = self._seed_batch(s, p, o)
+        labels = self._sorted_labels[eids]
+        ranks = self._sorted_ranks[eids]
+        take = _ragged_take(self._sorted_offsets, eids, ranks)
+        nodes = self._sorted_nodes[take]
+        offsets = np.concatenate([[0], np.cumsum(ranks)]).astype(np.int64)
+
+        out = []  # (qids, labels, nodes, offsets) chunks of matched terminals
+        guard = 0
+        while len(labels):
+            guard += 1
+            assert guard <= self.flat.n_rules + 2, "frontier expansion did not terminate"
+            is_nt = labels >= self.T
+
+            # terminals: match filter -> result buffer
+            t_sel = ~is_nt
+            if t_sel.any():
+                tl, tn, to, (tq,) = _ragged_select(labels, nodes, offsets, t_sel, qids)
+                tr = np.diff(to)
+                first = _slot(tn, to, tr, 0)
+                second = _slot(tn, to, tr, 1)
+                sq, pq, oq = s[tq], p[tq], o[tq]
+                match = (pq < 0) | (tl == pq)
+                match &= (sq < 0) | ((tr >= 1) & (first == sq))
+                match &= (oq < 0) | ((tr >= 2) & (second == oq))
+                if match.any():
+                    ml, mn, mo, (mq,) = _ragged_select(tl, tn, to, match, tq)
+                    out.append((mq, ml, mn, mo))
+
+            if not is_nt.any():
+                break
+            # nonterminals: S/O-containment and NT[label,P] prunes as masks
+            nl, nn, no, (nq,) = _ragged_select(labels, nodes, offsets, is_nt, qids)
+            nr = np.diff(no)
+            sq, pq, oq = s[nq], p[nq], o[nq]
+            keep = np.ones(len(nl), dtype=bool)
+            if (sq >= 0).any():
+                keep &= (sq < 0) | _contains(nn, no, nr, sq)
+            if (oq >= 0).any():
+                keep &= (oq < 0) | _contains(nn, no, nr, oq)
+            if (pq >= 0).any():
+                valid_p = (pq >= 0) & (pq < self.T)
+                gen = self.flat.generates(nl, np.clip(pq, 0, max(self.T - 1, 0)))
+                keep &= (pq < 0) | (valid_p & gen)
+            if not keep.any():
+                break
+            el, en, eo, (eq,) = _ragged_select(nl, nn, no, keep, nq)
+            labels, nodes, offsets, (qids,) = self.flat.expand(el, en, eo, eq)
+
+        if not out:
+            return _EMPTY, _EMPTY, _EMPTY, np.zeros(1, dtype=np.int64)
+        r_q = np.concatenate([c[0] for c in out])
+        r_l = np.concatenate([c[1] for c in out])
+        r_n = np.concatenate([c[2] for c in out])
+        r_counts = np.concatenate([np.diff(c[3]) for c in out])
+        r_o = np.concatenate([[0], np.cumsum(r_counts)]).astype(np.int64)
+        return r_q, r_l, r_n, r_o
+
+    # -- main entries ----------------------------------------------------
+    def query_batch_arrays(self, s_arr, p_arr, o_arr):
+        """Array-native batch query. -1 (or None) marks an unbound slot.
+
+        Returns (qids, labels, nodes_flat, offsets): matching terminal edge
+        i belongs to query qids[i], has label labels[i] and node tuple
+        nodes_flat[offsets[i]:offsets[i+1]].
+        """
+        s, p, o = _normalize_batch(s_arr, p_arr, o_arr)
+        return self._run_batch(s, p, o)
+
+    def query_batch(self, s_arr, p_arr, o_arr) -> list[list[tuple]]:
+        """Batch query returning, per query, (label, (v0..vk)) tuples —
+        identical contents to `query_scalar`/`query_oracle` per query."""
+        s, p, o = _normalize_batch(s_arr, p_arr, o_arr)
+        r_q, r_l, r_n, r_o = self._run_batch(s, p, o)
+        results: list[list[tuple]] = [[] for _ in range(len(s))]
+        order = np.argsort(r_q, kind="stable")
+        for i in order:
+            q = int(r_q[i])
+            results[q].append(
+                (int(r_l[i]), tuple(int(v) for v in r_n[r_o[i]:r_o[i + 1]])))
+        return results
+
     def query(self, s: int | None, p: int | None, o: int | None) -> list[tuple]:
         """Return matching terminal edges as (label, (v0..vk)) tuples."""
+        return self.query_batch([s], [p], [o])[0]
+
+    def query_scalar(self, s: int | None, p: int | None, o: int | None) -> list[tuple]:
+        """Seed per-query worklist (reference implementation; benchmarks use
+        it as the pre-batching baseline, tests as a parity oracle)."""
         if s is not None or o is not None:
             r = s if s is not None else o
             seeds = [self._edge(int(j)) for j in self._row_edges(int(r))]
@@ -123,15 +292,116 @@ class TripleQueryEngine:
         return True
 
     # -- convenience -----------------------------------------------------
+    def neighbors_out_batch(self, vs) -> list[np.ndarray]:
+        """Per v: distinct objects (outgoing neighborhood), one batch."""
+        vs = self._sanitize_nodes(vs)
+        r_q, _, r_n, r_o = self._run_batch(
+            vs, np.full(len(vs), -1, np.int64), np.full(len(vs), -1, np.int64))
+        return _group_slot(r_q, r_n, r_o, len(vs), slot=1)
+
+    def neighbors_in_batch(self, vs) -> list[np.ndarray]:
+        """Per v: distinct subjects (incoming neighborhood), one batch."""
+        vs = self._sanitize_nodes(vs)
+        r_q, _, r_n, r_o = self._run_batch(
+            np.full(len(vs), -1, np.int64), np.full(len(vs), -1, np.int64), vs)
+        return _group_slot(r_q, r_n, r_o, len(vs), slot=0)
+
+    def _sanitize_nodes(self, vs) -> np.ndarray:
+        """Negative node ids would read as 'unbound' — remap them to an
+        out-of-range row so they yield empty results instead."""
+        vs = np.asarray(vs, dtype=np.int64)
+        return np.where(vs < 0, self.encoded.incidence.n_rows, vs)
+
     def neighbors_out(self, v: int) -> np.ndarray:
         """v ? ? -> distinct objects (outgoing neighborhood)."""
-        res = self.query(v, None, None)
-        return np.unique(np.array([e[1][1] for e in res if len(e[1]) >= 2], dtype=np.int64))
+        return self.neighbors_out_batch([v])[0]
 
     def neighbors_in(self, v: int) -> np.ndarray:
         """? ? v -> distinct subjects (incoming neighborhood)."""
-        res = self.query(None, None, v)
-        return np.unique(np.array([e[1][0] for e in res if len(e[1]) >= 2], dtype=np.int64))
+        return self.neighbors_in_batch([v])[0]
+
+
+# ----------------------------------------------------------------------
+def _normalize_batch(s_arr, p_arr, o_arr) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """None/-1-sentinel columns -> aligned int64 arrays with -1 = unbound."""
+    if s_arr is None and p_arr is None and o_arr is None:
+        raise ValueError(
+            "at least one of s/p/o must be an array — with all three None the "
+            "batch size is unknown (for all-unbound queries pass [None] * n)")
+    cols = []
+    n = max(len(c) for c in (s_arr, p_arr, o_arr) if c is not None)
+    for c in (s_arr, p_arr, o_arr):
+        if c is None:
+            cols.append(np.full(n, -1, dtype=np.int64))
+        else:
+            cols.append(np.array([-1 if v is None else int(v) for v in c], dtype=np.int64)
+                        if isinstance(c, (list, tuple)) else np.asarray(c, dtype=np.int64))
+    s, p, o = cols
+    assert len(s) == len(p) == len(o), "query columns must be aligned"
+    return s, p, o
+
+
+def _ragged_select(labels, nodes, offsets, mask, *payload):
+    """Select edges where mask holds from a ragged (labels, nodes, offsets)
+    batch; payload columns are filtered alongside."""
+    idx = np.flatnonzero(mask)
+    ranks = np.diff(offsets)[idx]
+    take = _ragged_take(offsets, idx, ranks)
+    new_offsets = np.concatenate([[0], np.cumsum(ranks)]).astype(np.int64)
+    return labels[idx], nodes[take], new_offsets, tuple(c[idx] for c in payload)
+
+
+def _slot(nodes, offsets, ranks, m: int) -> np.ndarray:
+    """nodes[offsets[e] + m] per edge, -1 where rank <= m (no branch)."""
+    pos = offsets[:-1] + m
+    safe = np.minimum(pos, max(len(nodes) - 1, 0))
+    vals = nodes[safe] if len(nodes) else np.full(len(ranks), -1, np.int64)
+    return np.where(ranks > m, vals, -1)
+
+
+def _contains(nodes, offsets, ranks, targets) -> np.ndarray:
+    """Per edge e: does target[e] occur among its nodes? (segment any)"""
+    n_edges = len(ranks)
+    seg = np.repeat(np.arange(n_edges, dtype=np.int64), ranks)
+    hits = nodes == np.repeat(targets, ranks)
+    return np.bincount(seg[hits], minlength=n_edges).astype(bool)
+
+
+def _replicate_results(u_res, inv: np.ndarray):
+    """Map result arrays of deduped queries back to the full batch: original
+    query q receives a copy of unique-query inv[q]'s results (all gathers)."""
+    u_q, u_l, u_n, u_o = u_res
+    n_uniq = int(inv.max()) + 1 if len(inv) else 0
+    order = np.argsort(u_q, kind="stable")
+    u_q, u_l = u_q[order], u_l[order]
+    u_ranks = np.diff(u_o)[order]
+    take = _ragged_take(u_o, order, u_ranks)
+    u_n = u_n[take]
+    u_o = np.concatenate([[0], np.cumsum(u_ranks)]).astype(np.int64)
+    # per-unique-query result segment
+    counts = np.bincount(u_q, minlength=n_uniq)
+    starts = np.cumsum(counts) - counts
+    # edge indices (into the sorted unique results) for each original query
+    out_counts = counts[inv]
+    eidx = np.repeat(starts[inv], out_counts) + _ragged_arange(out_counts)
+    r_q = np.repeat(np.arange(len(inv), dtype=np.int64), out_counts)
+    r_l = u_l[eidx]
+    ranks = u_ranks[eidx]
+    r_n = u_n[_ragged_take(u_o, eidx, ranks)]
+    r_o = np.concatenate([[0], np.cumsum(ranks)]).astype(np.int64)
+    return r_q, r_l, r_n, r_o
+
+
+def _group_slot(r_q, r_n, r_o, nq: int, slot: int) -> list[np.ndarray]:
+    """Distinct node at tuple position `slot`, grouped per query id —
+    one dedup + one split over the whole result set, not a scan per query."""
+    ranks = np.diff(r_o)
+    vals = _slot(r_n, r_o, ranks, slot)
+    ok = ranks > slot
+    qv = np.unique(np.stack([r_q[ok], vals[ok]], axis=1), axis=0) \
+        if ok.any() else np.zeros((0, 2), dtype=np.int64)
+    bounds = np.searchsorted(qv[:, 0], np.arange(nq + 1, dtype=np.int64))
+    return [qv[bounds[q]:bounds[q + 1], 1] for q in range(nq)]
 
 
 def query_oracle(graph, s, p, o) -> list[tuple]:

@@ -121,21 +121,19 @@ def _select_digram(counter, table, it_offsets, skip, config):
             return key, cnt
     elif config.selection == "savings":
         # scan candidates in count order; savings <= 2*cnt - 5, so we can
-        # stop scanning once that bound cannot beat the best found.
-        import heapq
-
+        # stop scanning once that bound cannot beat the best found. Each
+        # candidate is popped off the heap (peek_pop) so the next one is
+        # visible, and all are returned via push_back when the scan ends.
         popped = []
         best_key, best_score, best_cnt = None, 0, 0
         while True:
-            item = counter.pop_best(skip)
+            item = counter.peek_pop(skip)
             if item is None:
                 break
             key, cnt = item
+            popped.append(item)
             if 2 * cnt - 5 <= best_score:
                 break
-            # temporarily remove from heap to see the next one
-            heapq.heappop(counter._heap)
-            popped.append((-cnt, key))
             it1, it2 = split_digram(key)
             a1, _ = split_it(it1, it_offsets)
             a2, _ = split_it(it2, it_offsets)
@@ -146,8 +144,8 @@ def _select_digram(counter, table, it_offsets, skip, config):
             score = _savings(cnt, r1, r2)
             if score > best_score:
                 best_key, best_score, best_cnt = key, score, cnt
-        for entry in popped:
-            heapq.heappush(counter._heap, entry)
+        for key, cnt in popped:
+            counter.push_back(key, cnt)
         if best_key is None or best_score <= 0:
             return None
         return best_key, best_cnt

@@ -4,7 +4,13 @@ All structures report `size_in_bytes()` so compression benchmarks account the
 true serialized footprint, and expose numpy-side query paths (the hot batched
 paths additionally have Pallas kernels in `repro.kernels`).
 """
-from repro.core.succinct.bitvector import BitVector, pack_bits, unpack_bits
+from repro.core.succinct.bitvector import (
+    BitVector,
+    get_rank_backend,
+    pack_bits,
+    set_rank_backend,
+    unpack_bits,
+)
 from repro.core.succinct.elias_fano import EliasFano
 from repro.core.succinct.delta_code import (
     delta_decode,
@@ -16,6 +22,8 @@ from repro.core.succinct.k2tree import K2Tree
 
 __all__ = [
     "BitVector",
+    "get_rank_backend",
+    "set_rank_backend",
     "pack_bits",
     "unpack_bits",
     "EliasFano",

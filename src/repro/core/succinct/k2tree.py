@@ -70,6 +70,12 @@ class K2Tree:
         self.levels = levels
 
     # ---------------- queries ----------------
+    # The row/col expansion is *batched*: many fixed coordinates traverse the
+    # tree together, level-synchronously, carrying a query-id column; each
+    # level issues ONE vectorized rank1 over the concatenated child bit
+    # positions (the k²-tree hot op — routable to the Pallas kernel via
+    # `repro.core.succinct.bitvector.set_rank_backend`).
+
     def access(self, r: int, c: int) -> int:
         k, k2 = self.k, self.k * self.k
         block = 0
@@ -84,47 +90,70 @@ class K2Tree:
 
     def row(self, r: int) -> np.ndarray:
         """All columns c with M[r, c] = 1, without decompressing the matrix."""
-        return self._line(r, axis=0)
+        return self._lines(np.array([r], dtype=np.int64), axis=0)[1]
 
     def col(self, c: int) -> np.ndarray:
         """All rows r with M[r, c] = 1."""
-        return self._line(c, axis=1)
+        return self._lines(np.array([c], dtype=np.int64), axis=1)[1]
 
-    def _line(self, fixed: int, axis: int) -> np.ndarray:
+    def rows_many(self, rs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Batched row expansion: one traversal for many rows.
+
+        Returns (idx, cols): query rs[idx[i]] has a 1 at column cols[i];
+        pairs are sorted by (idx, col). Out-of-range rows yield no pairs.
+        """
+        return self._lines(rs, axis=0)
+
+    def cols_many(self, cs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Batched column expansion; see :meth:`rows_many`."""
+        return self._lines(cs, axis=1)
+
+    def _lines(self, fixed: np.ndarray, axis: int) -> tuple[np.ndarray, np.ndarray]:
         k, k2 = self.k, self.k * self.k
-        blocks = np.array([0], dtype=np.int64)
-        prefixes = np.array([0], dtype=np.int64)  # free-axis coordinate prefix
+        fixed = np.asarray(fixed, dtype=np.int64)
+        limit_fixed = self.n_rows if axis == 0 else self.n_cols
+        limit_free = self.n_cols if axis == 0 else self.n_rows
+        ok = (fixed >= 0) & (fixed < limit_fixed)
+        qids = np.flatnonzero(ok).astype(np.int64)
+        fvals = fixed[qids]
+        blocks = np.zeros(len(qids), dtype=np.int64)
+        prefixes = np.zeros(len(qids), dtype=np.int64)  # free-axis coordinate prefix
+        free = np.arange(k, dtype=np.int64)
+        empty = (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
         for t in range(self.h):
             if len(blocks) == 0:
-                return np.zeros(0, dtype=np.int64)
+                return empty
             scale = k ** (self.h - 1 - t)
-            fixed_digit = fixed // scale % k
+            fixed_digit = fvals // scale % k
             # candidate children: fixed axis digit fixed, free axis digit 0..k-1
-            free = np.arange(k, dtype=np.int64)
             if axis == 0:  # row query: row digit fixed, col digit free
-                child = fixed_digit * k + free
+                child = fixed_digit[:, None] * k + free[None, :]
             else:  # col query: col digit fixed, row digit free
-                child = free * k + fixed_digit
-            bitpos = (blocks[:, None] * k2 + child[None, :]).reshape(-1)
+                child = free[None, :] * k + fixed_digit[:, None]
+            bitpos = (blocks[:, None] * k2 + child).reshape(-1)
             new_prefix = (prefixes[:, None] * k + free[None, :]).reshape(-1)
+            new_qids = np.repeat(qids, k)
+            new_fvals = np.repeat(fvals, k)
             lv = self.levels[t]
             valid = bitpos < lv.n
             setbit = np.zeros(len(bitpos), dtype=bool)
             if valid.any():
                 setbit[valid] = lv.access(bitpos[valid]).astype(bool)
-            bitpos, new_prefix = bitpos[setbit], new_prefix[setbit]
+            bitpos = bitpos[setbit]
+            qids, fvals, prefixes = new_qids[setbit], new_fvals[setbit], new_prefix[setbit]
             if t < self.h - 1:
-                blocks = lv.rank1(bitpos)
-                prefixes = new_prefix
+                blocks = lv.rank1(bitpos)  # one batched rank per level
             else:
-                limit = self.n_cols if axis == 0 else self.n_rows
-                return np.sort(new_prefix[new_prefix < limit])
-        return np.zeros(0, dtype=np.int64)
+                keep = prefixes < limit_free
+                qids, coords = qids[keep], prefixes[keep]
+                order = np.lexsort((coords, qids))
+                return qids[order], coords[order]
+        return empty
 
     def to_dense(self) -> np.ndarray:
         out = np.zeros((self.n_rows, self.n_cols), dtype=np.uint8)
-        for r in range(self.n_rows):
-            out[r, self.row(r)] = 1
+        r_idx, cols = self.rows_many(np.arange(self.n_rows, dtype=np.int64))
+        out[r_idx, cols] = 1
         return out
 
     def size_in_bytes(self) -> int:

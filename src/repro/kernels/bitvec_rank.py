@@ -32,20 +32,30 @@ def _rank_kernel(pos_ref, words_ref, ranks_ref, o_ref):
 
 def bitvec_rank(words, word_ranks, positions, *, block_q=1024, interpret=False):
     """words: (W,) uint32; word_ranks: (W,) int32 exclusive prefix;
-    positions: (Q,) int32 with pos/32 < W. Returns rank1 at each position."""
+    positions: (Q,) int32 with pos/32 < W. Returns rank1 at each position.
+
+    Q may be any size: positions are padded up to the block boundary (pad
+    queries re-read position 0, always in-bounds) and the pad is sliced off.
+    """
     (W,) = words.shape
     (Q,) = positions.shape
+    if Q == 0:
+        return jnp.zeros(0, jnp.int32)
     block_q = min(block_q, Q)
-    assert Q % block_q == 0
-    return pl.pallas_call(
+    pad = (-Q) % block_q
+    if pad:
+        positions = jnp.pad(positions, (0, pad))
+    qp = Q + pad
+    out = pl.pallas_call(
         _rank_kernel,
-        grid=(Q // block_q,),
+        grid=(qp // block_q,),
         in_specs=[
             pl.BlockSpec((block_q,), lambda i: (i,)),
             pl.BlockSpec((W,), lambda i: (0,)),
             pl.BlockSpec((W,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((block_q,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((Q,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((qp,), jnp.int32),
         interpret=interpret,
     )(positions, words, word_ranks)
+    return out[:Q] if pad else out

@@ -1,3 +1,4 @@
 from repro.serve.engine import GenerationResult, ServeEngine
+from repro.serve.triple_service import ServiceStats, TripleQueryService
 
-__all__ = ["ServeEngine", "GenerationResult"]
+__all__ = ["ServeEngine", "GenerationResult", "TripleQueryService", "ServiceStats"]

@@ -1,0 +1,99 @@
+"""Batched triple-query serving on the compressed grammar.
+
+Production traffic arrives as independent (S,P,O) lookups; answering them
+one at a time wastes the engine's batch path. `TripleQueryService`
+accumulates submitted patterns into a pending micro-batch and executes the
+whole batch in ONE level-synchronous frontier (`TripleQueryEngine
+.query_batch_arrays`), so per-request Python overhead is paid once per
+flush instead of once per query. `query_many` is the synchronous
+convenience wrapper (submit-all + flush).
+
+The service is numpy-only — it runs wherever the engine runs — and keeps
+rolling throughput stats so serving dashboards can track queries/second.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.query import TripleQueryEngine
+
+
+@dataclass
+class ServiceStats:
+    queries: int = 0
+    batches: int = 0
+    results: int = 0
+    total_s: float = 0.0
+    last_batch_qps: float = 0.0
+
+    @property
+    def qps(self) -> float:
+        return self.queries / self.total_s if self.total_s > 0 else 0.0
+
+
+@dataclass
+class _Pending:
+    s: list = field(default_factory=list)
+    p: list = field(default_factory=list)
+    o: list = field(default_factory=list)
+
+
+class TripleQueryService:
+    """Micro-batching front end over a :class:`TripleQueryEngine`.
+
+    `submit` returns a ticket (index into the next flush); `flush` runs the
+    pending batch and returns one result list per ticket. `max_batch`
+    bounds a single frontier's width: larger pending sets are executed in
+    chunks so memory stays flat under unselective patterns.
+    """
+
+    def __init__(self, engine: TripleQueryEngine, max_batch: int = 1024):
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.stats = ServiceStats()
+        self._pending = _Pending()
+
+    # -- request plane ---------------------------------------------------
+    def submit(self, s: int | None, p: int | None, o: int | None) -> int:
+        """Queue one (S,P,O) pattern; returns its ticket in the next flush."""
+        ticket = len(self._pending.s)
+        self._pending.s.append(-1 if s is None else int(s))
+        self._pending.p.append(-1 if p is None else int(p))
+        self._pending.o.append(-1 if o is None else int(o))
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending.s)
+
+    def flush(self) -> list[list[tuple]]:
+        """Execute all pending queries; returns results indexed by ticket."""
+        batch, self._pending = self._pending, _Pending()
+        n = len(batch.s)
+        if n == 0:
+            return []
+        s = np.asarray(batch.s, dtype=np.int64)
+        p = np.asarray(batch.p, dtype=np.int64)
+        o = np.asarray(batch.o, dtype=np.int64)
+        out: list[list[tuple]] = []
+        t0 = time.perf_counter()
+        for lo in range(0, n, self.max_batch):
+            hi = min(lo + self.max_batch, n)
+            out.extend(self.engine.query_batch(s[lo:hi], p[lo:hi], o[lo:hi]))
+            self.stats.batches += 1
+        dt = time.perf_counter() - t0
+        self.stats.queries += n
+        self.stats.results += sum(len(r) for r in out)
+        self.stats.total_s += dt
+        self.stats.last_batch_qps = n / dt if dt > 0 else 0.0
+        return out
+
+    # -- synchronous convenience ----------------------------------------
+    def query_many(self, patterns) -> list[list[tuple]]:
+        """patterns: iterable of (s, p, o) with None = unbound."""
+        for s, p, o in patterns:
+            self.submit(s, p, o)
+        return self.flush()

@@ -240,6 +240,101 @@ def test_query_parity_all_patterns(seed):
         assert len(got) >= 1  # the probe triple itself always matches
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_query_batch_parity_all_patterns_random_hypergraph(seed):
+    """query_batch == query_oracle per query, all 8 patterns in ONE batch,
+    on mixed-rank random hypergraphs (not just triples)."""
+    rng = np.random.default_rng(seed)
+    g, table = random_hypergraph(rng, n_nodes=14, n_edges=50)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar)
+    s = int(rng.integers(0, 14))
+    p = int(rng.integers(0, 3))
+    o = int(rng.integers(0, 14))
+    bound = [_bind(pattern, s, p, o) for pattern in PATTERNS]
+    ss, pp, oo = (list(col) for col in zip(*bound))
+    batch = engine.query_batch(ss, pp, oo)
+    for i, pattern in enumerate(PATTERNS):
+        qs, qp, qo = bound[i]
+        want = sorted(query_oracle(g, qs, qp, qo))
+        assert sorted(batch[i]) == want, f"pattern {pattern} diverges from oracle"
+        # the scalar reference path must agree too
+        assert sorted(engine.query_scalar(qs, qp, qo)) == want
+
+
+def test_query_batch_duplicate_queries_replicate():
+    """Deduped execution must hand every duplicate its full result set."""
+    rng = np.random.default_rng(5)
+    triples = np.stack(
+        [rng.integers(0, 15, 80), rng.integers(0, 3, 80), rng.integers(0, 15, 80)],
+        axis=1,
+    )
+    table = LabelTable.terminals([2] * 3)
+    g = Hypergraph.from_triples(triples, 15)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar)
+    p = int(triples[0, 1])
+    batch = engine.query_batch([None] * 4, [p, p, None, p], [None] * 4)
+    want_p = sorted(query_oracle(g, None, p, None))
+    want_all = sorted(query_oracle(g, None, None, None))
+    assert sorted(batch[0]) == want_p
+    assert sorted(batch[1]) == want_p
+    assert sorted(batch[2]) == want_all
+    assert sorted(batch[3]) == want_p
+
+
+def test_query_batch_all_none_is_an_error():
+    triples = np.array([[0, 0, 1]])
+    table = LabelTable.terminals([2])
+    grammar, _ = compress(Hypergraph.from_triples(triples, 2), table)
+    engine = TripleQueryEngine(grammar)
+    with pytest.raises(ValueError, match="batch size"):
+        engine.query_batch(None, None, None)
+    # the documented spelling of an all-unbound batch works
+    assert len(engine.query_batch([None], None, None)[0]) == 1
+
+
+def test_query_batch_arrays_layout():
+    triples = np.array([[0, 0, 1], [1, 0, 2], [0, 1, 2]])
+    table = LabelTable.terminals([2, 2])
+    g = Hypergraph.from_triples(triples, 3)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar)
+    r_q, r_l, r_n, r_o = engine.query_batch_arrays([0, None], [None, 0], [None, None])
+    assert len(r_o) == len(r_l) + 1
+    # query 0 (s=0): edges 0(0,1) and 1(0,2); query 1 (p=0): edges 0(0,1), 0(1,2)
+    got0 = sorted((int(r_l[i]), tuple(r_n[r_o[i]:r_o[i + 1]].tolist()))
+                  for i in np.flatnonzero(r_q == 0))
+    got1 = sorted((int(r_l[i]), tuple(r_n[r_o[i]:r_o[i + 1]].tolist()))
+                  for i in np.flatnonzero(r_q == 1))
+    assert got0 == [(0, (0, 1)), (1, (0, 2))]
+    assert got1 == [(0, (0, 1)), (0, (1, 2))]
+
+
+def test_triple_query_service_micro_batching():
+    from repro.serve.triple_service import TripleQueryService
+
+    rng = np.random.default_rng(9)
+    triples = np.stack(
+        [rng.integers(0, 12, 60), rng.integers(0, 2, 60), rng.integers(0, 12, 60)],
+        axis=1,
+    )
+    table = LabelTable.terminals([2, 2])
+    g = Hypergraph.from_triples(triples, 12)
+    grammar, _ = compress(g, table)
+    service = TripleQueryService(TripleQueryEngine(grammar), max_batch=3)
+    patterns = [(int(s), None, None) for s, _, _ in triples[:7]]
+    patterns.append((None, 0, None))
+    out = service.query_many(patterns)
+    assert len(out) == 8
+    for res, (s, p, o) in zip(out, patterns):
+        assert sorted(res) == sorted(query_oracle(g, s, p, o))
+    assert service.stats.queries == 8
+    assert service.stats.batches == 3  # ceil(8 / max_batch=3)
+    assert service.pending == 0
+
+
 def test_neighborhood_queries():
     triples = np.array([[0, 0, 1], [0, 1, 2], [3, 0, 0], [2, 1, 0]])
     table = LabelTable.terminals([2, 2])

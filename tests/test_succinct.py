@@ -152,6 +152,84 @@ def test_k2_empty():
     assert t.access(0, 0) == 0
 
 
+def test_k2_batched_rows_cols_vs_dense():
+    """rows_many/cols_many: one traversal for many lines == dense oracle,
+    including out-of-range and duplicate queries."""
+    rng = np.random.default_rng(3)
+    n, m = 37, 61
+    r, c = _random_matrix(rng, n, m, 0.06)
+    t = K2Tree(r, c, n, m)
+    dense = np.zeros((n, m), dtype=np.uint8)
+    dense[r, c] = 1
+
+    qs = np.array([0, 5, 5, -1, 36, 200, 12], dtype=np.int64)
+    idx, cols = t.rows_many(qs)
+    for qi in range(len(qs)):
+        got = cols[idx == qi]
+        want = np.flatnonzero(dense[qs[qi]]) if 0 <= qs[qi] < n else np.zeros(0)
+        assert np.array_equal(got, want), f"row query {qi} ({qs[qi]})"
+
+    qs = np.array([60, 0, 3, 3, -5], dtype=np.int64)
+    idx, rows_ = t.cols_many(qs)
+    for qi in range(len(qs)):
+        got = rows_[idx == qi]
+        want = np.flatnonzero(dense[:, qs[qi]]) if 0 <= qs[qi] < m else np.zeros(0)
+        assert np.array_equal(got, want), f"col query {qi} ({qs[qi]})"
+
+    # full-matrix batched expansion == to_dense == dense
+    assert np.array_equal(t.to_dense(), dense)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_k2_batched_matches_scalar(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 26, 19
+    r, c = _random_matrix(rng, n, m, 0.08)
+    t = K2Tree(r, c, n, m, k=int(rng.integers(2, 4)))
+    qs = rng.integers(0, n, 8).astype(np.int64)
+    idx, cols = t.rows_many(qs)
+    for qi in range(len(qs)):
+        assert np.array_equal(cols[idx == qi], t.row(int(qs[qi])))
+
+
+def test_pallas_rank_backend_parity():
+    """The Pallas bitvec_rank route must agree with the numpy rank path
+    (numpy is the parity oracle), including i == n and odd batch sizes."""
+    from repro.core.succinct import set_rank_backend
+
+    rng = np.random.default_rng(11)
+    bits = rng.integers(0, 2, 4097).astype(np.uint8)
+    bv = BitVector(bits)
+    # odd-sized batch (not a multiple of the kernel block) + boundary values
+    pos = np.concatenate([rng.integers(0, bv.n + 1, 997), [0, bv.n]]).astype(np.int64)
+    want = bv._rank1_numpy(pos)
+    old = set_rank_backend("pallas")
+    try:
+        got = bv.rank1(pos)
+    finally:
+        set_rank_backend(old)
+    assert np.array_equal(got, want)
+
+
+def test_kernel_bitvec_rank_arbitrary_batch_sizes():
+    """The kernel itself pads non-multiple-of-block position batches."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.kernels.bitvec_rank import bitvec_rank
+
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, 2048).astype(np.uint8)
+    bv = BitVector(bits)
+    words = jnp.asarray(np.concatenate([bv.words, np.zeros(1, np.uint32)]))
+    ranks = jnp.asarray(bv.word_ranks.astype(np.int32))
+    for q in [1, 7, 64, 100, 1023]:
+        pos = rng.integers(0, bv.n, q).astype(np.int32)
+        out = bitvec_rank(words, ranks, jnp.asarray(pos), block_q=64, interpret=True)
+        assert np.array_equal(np.asarray(out), bv._rank1_numpy(pos.astype(np.int64)))
+
+
 @settings(max_examples=25, deadline=None)
 @given(
     st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30)), min_size=0, max_size=60),
