@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from repro.core import Hypergraph, LabelTable, RepairConfig, compress, encode
 from repro.core.ablations import loop_rule_transform
-from repro.data.synthetic import PAPER_DATASETS, web_graph
+from repro.data.synthetic import PAPER_DATASETS
 
 
 def run_loop_rules(quiet=False):

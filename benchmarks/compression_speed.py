@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core import Hypergraph, LabelTable, compress
 from repro.data.synthetic import rdf_like

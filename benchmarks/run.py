@@ -2,13 +2,18 @@
 
 Prints `name,value,derived` CSV lines per benchmark so results are grep-able
 (`python -m benchmarks.run > bench_output.txt`).
+
+`--smoke` runs every section on tiny inputs with one repetition and never
+overwrites the tracked BENCH_*.json artifacts — it exists so CI can prove
+the harness still executes end to end without paying full benchmark time.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     from benchmarks import (
         compression_ratio,
         compression_speed,
@@ -18,9 +23,12 @@ def main() -> None:
     )
 
     print("== Table 1b / Figure 3: compression ratio per dataset ==")
-    fig3 = compression_ratio.run()
+    fig3 = compression_ratio.run(datasets=["ttt-win"] if smoke else compression_ratio.DATASETS)
     print("\n== Figure 4: triple-query latency (500 queries/pattern) ==")
-    fig4 = query_latency.run()
+    if smoke:
+        fig4 = query_latency.run(n_queries=25, scale=0.02, json_path=None)
+    else:
+        fig4 = query_latency.run()
     print("\n== §ITR+: node-label hyperedges (ttt-win) ==")
     plus = itr_plus_bench.run()
     print("\n== ablations: §Handling loops + mfd selection ==")
@@ -28,7 +36,7 @@ def main() -> None:
 
     abl = ablations.run()
     print("\n== compression throughput ==")
-    speed = compression_speed.run()
+    speed = compression_speed.run(sizes=(2000,) if smoke else (2000, 8000, 32000))
     print("\n== kernel micro-bench (CPU interpret) ==")
     kerns = kernels_bench.run()
 
@@ -42,16 +50,22 @@ def main() -> None:
         for m, v in row.items():
             if m != "pattern":
                 print(f"fig4/{row['pattern']}/{m},{v:.1f},us_per_query")
-    # batched-engine trajectory (written by query_latency.run)
-    try:
-        import json
+    # batched-engine trajectory (written by query_latency.run; in smoke mode
+    # the file is not rewritten, so skip rather than report stale numbers)
+    if not smoke:
+        try:
+            import json
 
-        bench = json.loads(open("BENCH_query_latency.json").read())
-        print(f"fig4/batch_throughput_qps,{bench['batch_throughput_qps']:.0f},qps")
-        for pat, p in bench["patterns"].items():
-            print(f"fig4/{pat}/speedup_vs_scalar,{p['speedup_vs_scalar']:.2f},x")
-    except Exception as e:
-        print(f"# BENCH_query_latency.json unavailable: {e}", file=sys.stderr)
+            bench = json.loads(open("BENCH_query_latency.json").read())
+            print(f"fig4/batch_throughput_qps,{bench['batch_throughput_qps']:.0f},qps")
+            for pat, p in bench["patterns"].items():
+                print(f"fig4/{pat}/speedup_vs_scalar,{p['speedup_vs_scalar']:.2f},x")
+            for pat, p in bench.get("warm_cache", {}).get("patterns", {}).items():
+                print(f"fig4/{pat}/warm_speedup_vs_uncached,{p['warm_speedup_vs_uncached']:.2f},x")
+            for pat, p in bench.get("crossover_dispatch", {}).get("patterns", {}).items():
+                print(f"fig4/{pat}/dispatched_vs_scalar,{p['dispatched_vs_scalar']:.2f},x")
+        except Exception as e:
+            print(f"# BENCH_query_latency.json unavailable: {e}", file=sys.stderr)
     p = plus[0]
     print(f"itr_plus/ttt-win/gain,{p['plus_gain']:.4f},fraction")
     for row in abl["loop_rules"]:
@@ -63,19 +77,24 @@ def main() -> None:
     for row in kerns:
         print(f"kernel/{row['kernel']},{row['pallas_interpret_us']:.1f},us_per_call")
 
-    # roofline summary if the dry-run has produced results
-    try:
-        from benchmarks import roofline_report
+    # roofline summary if the dry-run has produced results (skipped in smoke:
+    # it only reports on artifacts a TPU dry-run would have left behind)
+    if not smoke:
+        try:
+            from benchmarks import roofline_report
 
-        rows = roofline_report.run(quiet=True)
-        ok = [r for r in rows if r.get("ok")]
-        if ok:
-            print(f"roofline/cells_ok,{len(ok)},count")
-            for r in ok:
-                print(f"roofline/{r['arch']}/{r['shape']}/dominant,{r['dominant']},bottleneck")
-    except Exception as e:  # dry-run not yet executed
-        print(f"# roofline skipped: {e}", file=sys.stderr)
+            rows = roofline_report.run(quiet=True)
+            ok = [r for r in rows if r.get("ok")]
+            if ok:
+                print(f"roofline/cells_ok,{len(ok)},count")
+                for r in ok:
+                    print(f"roofline/{r['arch']}/{r['shape']}/dominant,{r['dominant']},bottleneck")
+        except Exception as e:  # dry-run not yet executed
+            print(f"# roofline skipped: {e}", file=sys.stderr)
 
 
 if __name__ == "__main__":
-    main()
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny graphs, 1 repetition, no JSON overwrite")
+    main(smoke=parser.parse_args().smoke)

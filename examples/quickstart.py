@@ -3,7 +3,6 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.baselines import ntriples_size_bytes
 from repro.core import (

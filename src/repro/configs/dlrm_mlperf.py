@@ -1,7 +1,7 @@
 """dlrm-mlperf [arXiv:1906.00091]: MLPerf DLRM over Criteo-1TB; 13 dense,
 26 sparse fields, embed_dim=128, bot 13-512-256-128, top 1024-1024-512-256-1,
 dot interaction."""
-from repro.models.dlrm import CRITEO_TB_ROWS, DLRMConfig
+from repro.models.dlrm import DLRMConfig
 
 
 def config() -> DLRMConfig:

@@ -38,6 +38,78 @@ def _ragged_arange(counts: np.ndarray) -> np.ndarray:
     return np.arange(total, dtype=np.int64) - np.repeat(ends - counts, counts)
 
 
+class FrontierArena:
+    """Preallocated, geometrically-grown buffers for ragged result batches.
+
+    The frontier loop emits one chunk of matched terminal edges per level;
+    collecting them in Python lists and concatenating at the end reallocates
+    and copies every level's chunks again on every query. The arena instead
+    slice-assigns each chunk into place, doubling capacity only when a chunk
+    overflows it, so steady-state accumulation is one memcpy per level and
+    zero allocations. One arena lives on the engine and is reused by every
+    `query_batch_arrays` call; `finish()` returns right-sized copies, so the
+    returned result arrays never alias the next query's scratch space.
+    """
+
+    def __init__(self, edge_cap: int = 1024, node_cap: int = 4096):
+        self._q = np.empty(max(edge_cap, 1), dtype=np.int64)
+        self._l = np.empty(max(edge_cap, 1), dtype=np.int64)
+        self._r = np.empty(max(edge_cap, 1), dtype=np.int64)
+        self._n = np.empty(max(node_cap, 1), dtype=np.int64)
+        self.n_edges = 0
+        self.n_nodes = 0
+
+    @property
+    def edge_capacity(self) -> int:
+        return len(self._q)
+
+    @property
+    def node_capacity(self) -> int:
+        return len(self._n)
+
+    def reset(self) -> None:
+        self.n_edges = 0
+        self.n_nodes = 0
+
+    @staticmethod
+    def _grown(buf: np.ndarray, live: int, needed: int) -> np.ndarray:
+        cap = len(buf)
+        while cap < needed:
+            cap *= 2
+        new = np.empty(cap, dtype=np.int64)
+        new[:live] = buf[:live]
+        return new
+
+    def push(self, qids: np.ndarray, labels: np.ndarray, ranks: np.ndarray,
+             nodes: np.ndarray) -> None:
+        """Append one chunk of edges (qids/labels/ranks aligned, nodes flat)."""
+        ne = self.n_edges + len(labels)
+        nn = self.n_nodes + len(nodes)
+        if ne > len(self._q):
+            self._q = self._grown(self._q, self.n_edges, ne)
+            self._l = self._grown(self._l, self.n_edges, ne)
+            self._r = self._grown(self._r, self.n_edges, ne)
+        if nn > len(self._n):
+            self._n = self._grown(self._n, self.n_nodes, nn)
+        self._q[self.n_edges:ne] = qids
+        self._l[self.n_edges:ne] = labels
+        self._r[self.n_edges:ne] = ranks
+        self._n[self.n_nodes:nn] = nodes
+        self.n_edges = ne
+        self.n_nodes = nn
+
+    def finish(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(qids, labels, nodes_flat, offsets) copies of the live region;
+        resets the arena for the next query."""
+        ne, nn = self.n_edges, self.n_nodes
+        offsets = np.zeros(ne + 1, dtype=np.int64)
+        np.cumsum(self._r[:ne], out=offsets[1:])
+        out = (self._q[:ne].copy(), self._l[:ne].copy(),
+               self._n[:nn].copy(), offsets)
+        self.reset()
+        return out
+
+
 @dataclass
 class FlatGrammar:
     """CSR arrays for rule bodies + NT-reachability bitsets."""

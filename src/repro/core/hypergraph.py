@@ -13,7 +13,7 @@ nonterminals introduced by compression are appended after.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -13,31 +13,70 @@ Execution is *batched and level-synchronous*: `query_batch` runs many
 (S,P,O) patterns in one frontier by carrying a query-id column. Each
 iteration expands ALL nonterminal edges at once through the flattened
 grammar's CSR gathers (`repro.core.flatten`), applies the S/O-containment
-and NT[label,P] prunes as boolean masks, and partitions terminals into the
-result buffer. Seeding uses the k²-tree's batched multi-row expansion, so
-one traversal serves every S/O-bound query in the batch — pruned expansion
-plus batching is what makes queries fast on the grammar.
+and NT[label,P] prunes as boolean masks, and partitions terminals into a
+preallocated result arena (`FrontierArena`) that is reused across calls.
+Seeding uses the k²-tree's batched multi-row expansion, so one traversal
+serves every S/O-bound query in the batch — pruned expansion plus batching
+is what makes queries fast on the grammar.
+
+The serving path is cache- and width-aware:
+
+* a cross-request :class:`QueryResultCache` (LRU over (S,P,O) patterns,
+  with a dedicated ``?P?`` segment) turns repeats *across* micro-batches
+  into gathers — streaming dedup, not just in-batch dedup;
+* cache-missing work narrower than the engine's measured crossover width
+  routes to the per-query `query_scalar` worklist when every pattern is
+  selective (S or O bound) — tiny frontiers pay more in numpy per-level
+  overhead than the worklist pays in Python. The width is calibrated at
+  engine build and overridable via ``ITR_QUERY_CROSSOVER``.
 
 `query` is a batch of one; `query_scalar` keeps the seed per-query Python
 worklist as the parity/benchmark reference.
 """
 from __future__ import annotations
 
+import os
+import time
+
 import numpy as np
 
 from repro.core.encode import EncodedGrammar, encode
-from repro.core.flatten import FlatGrammar, _ragged_arange
+from repro.core.flatten import FlatGrammar, FrontierArena, _ragged_arange
 from repro.core.grammar import Grammar
 from repro.core.hypergraph import _ragged_take
+from repro.core.result_cache import QueryResultCache
 from repro.core.succinct import K2Tree
 
 _EMPTY = np.zeros(0, dtype=np.int64)
 
+# sentinel: "create a default QueryResultCache unless disabled by env"
+_DEFAULT_CACHE = object()
+
+# calibration cap: scalar routing never extends past this batch width
+_MAX_CROSSOVER = 8
+
+
+def _env_flag(name: str, default: bool) -> bool:
+    v = os.environ.get(name, "").strip().lower()
+    if not v:
+        return default
+    return v not in ("0", "off", "false", "no")
+
 
 class TripleQueryEngine:
-    """Query engine over a grammar + its succinct encoding."""
+    """Query engine over a grammar + its succinct encoding.
 
-    def __init__(self, grammar: Grammar, encoded: EncodedGrammar | None = None):
+    `cache` is the cross-request result cache (pass ``None`` to disable,
+    or your own :class:`QueryResultCache` to share/size it; the default is
+    engine-private and can be switched off with ``ITR_RESULT_CACHE=0``).
+    `crossover` is the batch width at/below which cache-missing selective
+    patterns run on the scalar worklist instead of the frontier (``None``
+    = read ``ITR_QUERY_CROSSOVER`` or calibrate at build; ``0`` = always
+    use the frontier).
+    """
+
+    def __init__(self, grammar: Grammar, encoded: EncodedGrammar | None = None,
+                 cache=_DEFAULT_CACHE, crossover: int | None = None):
         self.grammar = grammar
         self.encoded = encoded if encoded is not None else encode(grammar)
         self.T = grammar.table.n_terminals
@@ -70,6 +109,43 @@ class TripleQueryEngine:
             (int(g.labels[j]), g.nodes_flat[g.offsets[j]:g.offsets[j + 1]])
             for j in range(g.n_edges)
         ]
+        # result arena: shared across frontier levels, reused across calls
+        self._arena = FrontierArena()
+        if cache is _DEFAULT_CACHE:
+            cache = QueryResultCache() if _env_flag("ITR_RESULT_CACHE", True) else None
+        self.cache: QueryResultCache | None = cache
+        self.crossover = self._calibrate_crossover() if crossover is None else int(crossover)
+
+    # -- crossover calibration -------------------------------------------
+    def _calibrate_crossover(self) -> int:
+        """Measured batch width at/below which the scalar worklist beats a
+        frontier of the same width on a selective probe. A frontier of one
+        pays numpy per-level overhead on arrays of length ~1; the worklist
+        pays per-edge Python — which side wins depends on the grammar, so
+        measure it on this one instead of hardcoding."""
+        env = os.environ.get("ITR_QUERY_CROSSOVER", "").strip()
+        if env:
+            try:
+                return max(0, int(env))
+            except ValueError:
+                pass
+        g = self._start_sorted
+        if g.n_edges == 0 or len(g.nodes_flat) == 0:
+            return 1
+        probe = int(g.nodes_flat[0])
+        s1 = np.array([probe], dtype=np.int64)
+        u1 = np.full(1, -1, dtype=np.int64)
+        t_scalar = t_batch = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            self.query_scalar(probe, None, None)
+            t_scalar = min(t_scalar, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            self._run_batch_unique(s1, u1, u1)
+            t_batch = min(t_batch, time.perf_counter() - t0)
+        if t_scalar <= 0:
+            return 1
+        return int(np.clip(t_batch / t_scalar, 0, _MAX_CROSSOVER))
 
     # -- helpers --------------------------------------------------------
     def _nt_generates(self, label: int, p: int) -> bool:
@@ -144,22 +220,94 @@ class TripleQueryEngine:
 
     # -- batched frontier ------------------------------------------------
     def _run_batch(self, s: np.ndarray, p: np.ndarray, o: np.ndarray):
-        """Level-synchronous frontier over all queries at once.
+        """Cache-aware batch execution.
 
         Duplicate (S,P,O) patterns in the batch — common under real traffic
         and dominant for the unselective ?P?/??? patterns — are executed
-        once and their results replicated per query id at the end.
+        once and their results replicated per query id at the end. With a
+        result cache attached the dedup is *streaming*: unique patterns are
+        first looked up in the cross-request cache, only the misses run
+        (through the frontier, or the scalar worklist below the crossover
+        width), and their results are inserted for future batches.
 
         Returns result arrays (qids, labels, nodes_flat, offsets) of the
-        matching terminal edges, ragged, unordered across queries.
+        matching terminal edges, ragged, unordered across queries. The
+        arrays may share memory with cache entries — treat as read-only.
         """
-        if len(s) > 1:  # dedup never helps a batch of one
-            key = np.stack([s, p, o], axis=1)
-            uniq, inv = np.unique(key, axis=0, return_inverse=True)
-            if len(uniq) < len(s):
-                u_res = self._run_batch_unique(uniq[:, 0], uniq[:, 1], uniq[:, 2])
-                return _replicate_results(u_res, inv.reshape(-1))
+        cache = self.cache
+        n = len(s)
+        if cache is None:
+            if n > 1:  # dedup never helps a batch of one
+                key = np.stack([s, p, o], axis=1)
+                uniq, inv = np.unique(key, axis=0, return_inverse=True)
+                if len(uniq) < n:
+                    u_res = self._execute_unique(uniq[:, 0], uniq[:, 1], uniq[:, 2])
+                    return _replicate_results(u_res, inv.reshape(-1))
+            return self._execute_unique(s, p, o)
+
+        if n == 1:  # hot serving path: no stack/unique/split machinery
+            hit = cache.lookup(s[0], p[0], o[0])
+            if hit is None:
+                r_q, r_l, r_n, r_o = self._execute_unique(s, p, o)
+                hit = (r_l, r_n, r_o)  # all qids are 0 already
+                cache.insert(s[0], p[0], o[0], hit)
+            labels, nodes, offsets = hit
+            return np.zeros(len(labels), dtype=np.int64), labels, nodes, offsets
+
+        key = np.stack([s, p, o], axis=1)
+        uniq, inv = np.unique(key, axis=0, return_inverse=True)
+        inv = inv.reshape(-1)
+        nu = len(uniq)
+        entries: list = [None] * nu
+        miss: list[int] = []
+        for i in range(nu):
+            hit = cache.lookup(uniq[i, 0], uniq[i, 1], uniq[i, 2])
+            if hit is None:
+                miss.append(i)
+            else:
+                entries[i] = hit
+        if miss:
+            mi = np.asarray(miss, dtype=np.int64)
+            fresh = self._execute_unique(uniq[mi, 0], uniq[mi, 1], uniq[mi, 2])
+            for j, entry in enumerate(_split_per_query(fresh, len(mi))):
+                i = int(mi[j])
+                entries[i] = entry
+                cache.insert(uniq[i, 0], uniq[i, 1], uniq[i, 2], entry)
+        counts = np.array([len(e[0]) for e in entries], dtype=np.int64)
+        u_l = np.concatenate([e[0] for e in entries]) if nu else _EMPTY
+        u_n = np.concatenate([e[1] for e in entries]) if nu else _EMPTY
+        ranks = np.concatenate([np.diff(e[2]) for e in entries]) if nu else _EMPTY
+        u_o = np.concatenate([[0], np.cumsum(ranks)]).astype(np.int64)
+        return _replicate_sorted(u_l, u_n, ranks, u_o, counts, inv)
+
+    def _execute_unique(self, s: np.ndarray, p: np.ndarray, o: np.ndarray):
+        """Crossover dispatch: tiny all-selective batches take the scalar
+        worklist; everything else takes the level-synchronous frontier."""
+        w = len(s)
+        if 0 < w <= self.crossover and bool(np.all((s >= 0) | (o >= 0))):
+            return self._run_scalar_batch(s, p, o)
         return self._run_batch_unique(s, p, o)
+
+    def _run_scalar_batch(self, s: np.ndarray, p: np.ndarray, o: np.ndarray):
+        """Per-query worklist over a tiny batch, frontier-shaped results."""
+        qids: list[int] = []
+        labels: list[int] = []
+        ranks: list[int] = []
+        nodes: list[int] = []
+        for i in range(len(s)):
+            res = self.query_scalar(int(s[i]) if s[i] >= 0 else None,
+                                    int(p[i]) if p[i] >= 0 else None,
+                                    int(o[i]) if o[i] >= 0 else None)
+            for lbl, nd in res:
+                qids.append(i)
+                labels.append(lbl)
+                ranks.append(len(nd))
+                nodes.extend(nd)
+        if not labels:
+            return _EMPTY, _EMPTY, _EMPTY, np.zeros(1, dtype=np.int64)
+        offsets = np.concatenate([[0], np.cumsum(ranks)]).astype(np.int64)
+        return (np.asarray(qids, dtype=np.int64), np.asarray(labels, dtype=np.int64),
+                np.asarray(nodes, dtype=np.int64), offsets)
 
     def _run_batch_unique(self, s: np.ndarray, p: np.ndarray, o: np.ndarray):
         qids, eids = self._seed_batch(s, p, o)
@@ -169,14 +317,15 @@ class TripleQueryEngine:
         nodes = self._sorted_nodes[take]
         offsets = np.concatenate([[0], np.cumsum(ranks)]).astype(np.int64)
 
-        out = []  # (qids, labels, nodes, offsets) chunks of matched terminals
+        arena = self._arena  # engine-owned result arena, reused across calls
+        arena.reset()
         guard = 0
         while len(labels):
             guard += 1
             assert guard <= self.flat.n_rules + 2, "frontier expansion did not terminate"
             is_nt = labels >= self.T
 
-            # terminals: match filter -> result buffer
+            # terminals: match filter -> arena (one slice-assign per level)
             t_sel = ~is_nt
             if t_sel.any():
                 tl, tn, to, (tq,) = _ragged_select(labels, nodes, offsets, t_sel, qids)
@@ -188,8 +337,10 @@ class TripleQueryEngine:
                 match &= (sq < 0) | ((tr >= 1) & (first == sq))
                 match &= (oq < 0) | ((tr >= 2) & (second == oq))
                 if match.any():
-                    ml, mn, mo, (mq,) = _ragged_select(tl, tn, to, match, tq)
-                    out.append((mq, ml, mn, mo))
+                    midx = np.flatnonzero(match)
+                    mranks = tr[midx]
+                    take = _ragged_take(to, midx, mranks)
+                    arena.push(tq[midx], tl[midx], mranks, tn[take])
 
             if not is_nt.any():
                 break
@@ -211,14 +362,7 @@ class TripleQueryEngine:
             el, en, eo, (eq,) = _ragged_select(nl, nn, no, keep, nq)
             labels, nodes, offsets, (qids,) = self.flat.expand(el, en, eo, eq)
 
-        if not out:
-            return _EMPTY, _EMPTY, _EMPTY, np.zeros(1, dtype=np.int64)
-        r_q = np.concatenate([c[0] for c in out])
-        r_l = np.concatenate([c[1] for c in out])
-        r_n = np.concatenate([c[2] for c in out])
-        r_counts = np.concatenate([np.diff(c[3]) for c in out])
-        r_o = np.concatenate([[0], np.cumsum(r_counts)]).astype(np.int64)
-        return r_q, r_l, r_n, r_o
+        return arena.finish()
 
     # -- main entries ----------------------------------------------------
     def query_batch_arrays(self, s_arr, p_arr, o_arr):
@@ -226,7 +370,10 @@ class TripleQueryEngine:
 
         Returns (qids, labels, nodes_flat, offsets): matching terminal edge
         i belongs to query qids[i], has label labels[i] and node tuple
-        nodes_flat[offsets[i]:offsets[i+1]].
+        nodes_flat[offsets[i]:offsets[i+1]]. Treat the arrays as
+        READ-ONLY: with a result cache attached, single-query results
+        alias live cache entries (they are marked non-writeable, so an
+        in-place mutation raises instead of corrupting future answers).
         """
         s, p, o = _normalize_batch(s_arr, p_arr, o_arr)
         return self._run_batch(s, p, o)
@@ -246,6 +393,10 @@ class TripleQueryEngine:
 
     def query(self, s: int | None, p: int | None, o: int | None) -> list[tuple]:
         """Return matching terminal edges as (label, (v0..vk)) tuples."""
+        # cache-less selective single query below the crossover: the scalar
+        # worklist already produces tuples — skip the array round-trip
+        if self.cache is None and self.crossover >= 1 and (s is not None or o is not None):
+            return self.query_scalar(s, p, o)
         return self.query_batch([s], [p], [o])[0]
 
     def query_scalar(self, s: int | None, p: int | None, o: int | None) -> list[tuple]:
@@ -367,6 +518,27 @@ def _contains(nodes, offsets, ranks, targets) -> np.ndarray:
     return np.bincount(seg[hits], minlength=n_edges).astype(bool)
 
 
+def _split_per_query(res, nq: int) -> list[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Split batch result arrays into per-query (labels, nodes, offsets)
+    cache entries: one stable sort by query id, then slicing. Entries are
+    COPIES — a view would pin the whole batch's backing buffer for the
+    lifetime of the cache entry, defeating the cache's edge budget."""
+    r_q, r_l, r_n, r_o = res
+    order = np.argsort(r_q, kind="stable")
+    labels = r_l[order]
+    ranks = np.diff(r_o)[order]
+    nodes = r_n[_ragged_take(r_o, order, ranks)]
+    offsets = np.concatenate([[0], np.cumsum(ranks)]).astype(np.int64)
+    bounds = np.concatenate([[0], np.cumsum(np.bincount(r_q, minlength=nq))]).astype(np.int64)
+    out = []
+    for i in range(nq):
+        e0, e1 = bounds[i], bounds[i + 1]
+        n0 = offsets[e0]
+        out.append((labels[e0:e1].copy(), nodes[n0:offsets[e1]].copy(),
+                    offsets[e0:e1 + 1] - n0))
+    return out
+
+
 def _replicate_results(u_res, inv: np.ndarray):
     """Map result arrays of deduped queries back to the full batch: original
     query q receives a copy of unique-query inv[q]'s results (all gathers)."""
@@ -378,10 +550,16 @@ def _replicate_results(u_res, inv: np.ndarray):
     take = _ragged_take(u_o, order, u_ranks)
     u_n = u_n[take]
     u_o = np.concatenate([[0], np.cumsum(u_ranks)]).astype(np.int64)
-    # per-unique-query result segment
     counts = np.bincount(u_q, minlength=n_uniq)
+    return _replicate_sorted(u_l, u_n, u_ranks, u_o, counts, inv)
+
+
+def _replicate_sorted(u_l, u_n, u_ranks, u_o, counts, inv: np.ndarray):
+    """Replication core for unique results already grouped in unique-query
+    order (the cache-assembly path lands here directly — no argsort, no
+    pre-gather): `counts[u]` edges per unique query, `inv[q]` = the unique
+    query whose results original query q receives."""
     starts = np.cumsum(counts) - counts
-    # edge indices (into the sorted unique results) for each original query
     out_counts = counts[inv]
     eidx = np.repeat(starts[inv], out_counts) + _ragged_arange(out_counts)
     r_q = np.repeat(np.arange(len(inv), dtype=np.int64), out_counts)

@@ -15,7 +15,6 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.digram import (
-    DIGRAM_SHIFT,
     DigramCounter,
     incidences,
     split_digram,

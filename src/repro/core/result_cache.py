@@ -1,0 +1,163 @@
+"""Cross-request result cache for triple-pattern queries.
+
+Serving traffic repeats patterns across micro-batches, not just within
+one: the same hot entities are looked up by many requests, and dashboards
+re-issue the same ``?P?`` scans every refresh. In-batch dedup (PR 1) only
+collapses duplicates inside a single frontier; this module makes dedup
+*streaming* — an LRU keyed by the (S, P, O) pattern holds each pattern's
+result arrays so a repeat anywhere in the engine's lifetime is a gather,
+not a frontier traversal.
+
+Two segments share the budget accounting but evict independently:
+
+* **general** — every pattern with S or O bound (and the open ``???``).
+* **predicate** — patterns binding only P. ``?P?`` scans enumerate a
+  large slice of the graph, so one burst of selective point lookups would
+  otherwise evict exactly the entries that are most expensive to rebuild.
+  Giving them their own LRU keeps unique-predicate-heavy traffic warm
+  without riding on in-batch dedup alone.
+
+Entries are numpy triples ``(labels, nodes_flat, offsets)`` — the same
+ragged layout the batch engine produces — and are treated as immutable by
+both the cache and the engine. The grammar is immutable after build, so
+there is no invalidation protocol; ``clear()`` exists for benchmarks.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# one cached pattern: (labels, nodes_flat, offsets), offsets has len+1 rows
+CacheEntry = tuple[np.ndarray, np.ndarray, np.ndarray]
+
+_EMPTY = np.zeros(0, dtype=np.int64)
+_EMPTY_OFF = np.zeros(1, dtype=np.int64)
+
+EMPTY_ENTRY: CacheEntry = (_EMPTY, _EMPTY, _EMPTY_OFF)
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    inserts: int = 0
+    oversize_skips: int = 0
+    predicate_hits: int = 0  # subset of `hits` served by the ?P? segment
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.lookups
+        return self.hits / n if n else 0.0
+
+    def snapshot(self) -> "CacheStats":
+        return CacheStats(self.hits, self.misses, self.evictions,
+                          self.inserts, self.oversize_skips, self.predicate_hits)
+
+
+class _LruSegment:
+    """One LRU: bounded by entry count and by total cached result edges."""
+
+    def __init__(self, max_entries: int, max_edges: int):
+        self.max_entries = int(max_entries)
+        self.max_edges = int(max_edges)
+        self.entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
+        self.edges = 0  # total result edges held
+
+    def get(self, key: tuple) -> CacheEntry | None:
+        val = self.entries.get(key)
+        if val is not None:
+            self.entries.move_to_end(key)
+        return val
+
+    def put(self, key: tuple, value: CacheEntry) -> int:
+        """Insert (replacing any stale entry); returns evictions performed."""
+        n_edges = len(value[0])
+        old = self.entries.pop(key, None)
+        if old is not None:
+            self.edges -= len(old[0])
+        self.entries[key] = value
+        self.edges += n_edges
+        evicted = 0
+        while len(self.entries) > self.max_entries or \
+                (self.edges > self.max_edges and len(self.entries) > 1):
+            _, dropped = self.entries.popitem(last=False)
+            self.edges -= len(dropped[0])
+            evicted += 1
+        return evicted
+
+    def clear(self) -> None:
+        self.entries.clear()
+        self.edges = 0
+
+
+@dataclass
+class QueryResultCache:
+    """LRU over (S, P, O) -> result arrays, with a ``?P?`` sub-cache.
+
+    ``max_edges`` bounds the memory held per segment (in result edges, the
+    unit both segments' entries are made of); a single result larger than
+    ``max_entry_edges`` is never cached — one ``???`` materialization must
+    not be able to flush the whole cache.
+    """
+
+    max_entries: int = 4096
+    max_edges: int = 1 << 20
+    predicate_entries: int = 512
+    predicate_edges: int = 1 << 20
+    max_entry_edges: int = 1 << 18
+    stats: CacheStats = field(default_factory=CacheStats)
+
+    def __post_init__(self):
+        self._general = _LruSegment(self.max_entries, self.max_edges)
+        self._predicate = _LruSegment(self.predicate_entries, self.predicate_edges)
+
+    # -- routing ---------------------------------------------------------
+    @staticmethod
+    def _segment_key(s: int, p: int, o: int):
+        is_pred = s < 0 and o < 0 and p >= 0
+        return is_pred, (int(s), int(p), int(o))
+
+    def _segment(self, is_pred: bool) -> _LruSegment:
+        return self._predicate if is_pred else self._general
+
+    # -- engine API ------------------------------------------------------
+    def lookup(self, s: int, p: int, o: int) -> CacheEntry | None:
+        is_pred, key = self._segment_key(s, p, o)
+        val = self._segment(is_pred).get(key)
+        if val is None:
+            self.stats.misses += 1
+        else:
+            self.stats.hits += 1
+            if is_pred:
+                self.stats.predicate_hits += 1
+        return val
+
+    def insert(self, s: int, p: int, o: int, value: CacheEntry) -> None:
+        if len(value[0]) > self.max_entry_edges:
+            self.stats.oversize_skips += 1
+            return
+        for arr in value:  # entries may be returned to callers by reference:
+            arr.flags.writeable = False  # fail loudly on in-place mutation
+        is_pred, key = self._segment_key(s, p, o)
+        self.stats.evictions += self._segment(is_pred).put(key, value)
+        self.stats.inserts += 1
+
+    # -- introspection ---------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._general.entries) + len(self._predicate.entries)
+
+    @property
+    def cached_edges(self) -> int:
+        return self._general.edges + self._predicate.edges
+
+    def clear(self) -> None:
+        """Drop all entries (stats are kept; reassign `stats` to reset)."""
+        self._general.clear()
+        self._predicate.clear()

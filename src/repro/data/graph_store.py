@@ -7,6 +7,11 @@ Training hot paths (full-batch GNN adjacency, high-throughput fanout
 sampling) use a lazily *materialized* CSR view — decompressed once, cached —
 because a sampled-training step issues thousands of neighbor lookups per
 batch. Storage stays compressed; the CSR cache is working memory.
+
+Point lookups share the engine's cross-request result cache: a
+neighborhood query is the (v, ?, ?) / (?, ?, v) pattern, so hot entities
+hit the same LRU as triple-pattern traffic (`query_cache_stats` exposes
+hit/miss/eviction counters for serving dashboards).
 """
 from __future__ import annotations
 
@@ -22,12 +27,16 @@ from repro.core import (
 )
 
 
+_DEFAULT = object()  # "engine decides" sentinel: cache=None must mean OFF
+
+
 class GraphStore:
-    def __init__(self, grammar, stats=None):
+    def __init__(self, grammar, stats=None, cache=_DEFAULT):
         self.grammar = grammar
         self.stats = stats
         self.encoded = encode(grammar)
-        self.engine = TripleQueryEngine(grammar, self.encoded)
+        engine_kwargs = {} if cache is _DEFAULT else {"cache": cache}
+        self.engine = TripleQueryEngine(grammar, self.encoded, **engine_kwargs)
         self._csr = None
         self._csc = None
 
@@ -53,8 +62,19 @@ class GraphStore:
     def neighbors_in(self, v: int) -> np.ndarray:
         return self.engine.neighbors_in(v)
 
+    def neighbors_out_batch(self, vs) -> list[np.ndarray]:
+        """Batched `v ? ?` neighborhoods — one frontier, cache-shared."""
+        return self.engine.neighbors_out_batch(vs)
+
+    def neighbors_in_batch(self, vs) -> list[np.ndarray]:
+        return self.engine.neighbors_in_batch(vs)
+
     def triples(self, s=None, p=None, o=None) -> list[tuple]:
         return self.engine.query(s, p, o)
+
+    def query_cache_stats(self):
+        """Engine result-cache counters (None when caching is disabled)."""
+        return self.engine.cache.stats if self.engine.cache is not None else None
 
     def compressed_size_bytes(self) -> int:
         return self.encoded.size_in_bytes()

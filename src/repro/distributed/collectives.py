@@ -19,14 +19,33 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 
+def _shard_map(fn, **kwargs):
+    """`jax.shard_map` (jax >= 0.6) or its experimental predecessor."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, **kwargs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, **kwargs)
+
+
 def _active_mesh():
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        try:
+            m = get()
+        except Exception:
+            m = None
+        if m is not None and m.shape:
+            return m
+    # pre-0.5 jax: the ambient mesh lives in the `with mesh:` context
     try:
-        m = jax.sharding.get_abstract_mesh()
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
     except Exception:
-        return None
-    if m is None or not m.shape:
-        return None
-    return m
+        pass
+    return None
 
 
 def partitioned_segment_sum(msgs, receivers, n_nodes: int):
@@ -49,8 +68,15 @@ def partitioned_segment_sum(msgs, receivers, n_nodes: int):
         return jax.ops.segment_sum(msgs, receivers, num_segments=n_nodes)
     rows = n_nodes // n_dev
 
+    sizes = dict(mesh.shape)
+
     def local(m_loc, r_loc):
-        dev = jax.lax.axis_index(axes)
+        # linear device index over the flattened axes (row-major, matching
+        # P(axes) edge sharding); built per-axis so it works on every jax
+        # version — axis_index over a tuple of names is a newer addition
+        dev = jax.lax.axis_index(axes[0])
+        for a in axes[1:]:
+            dev = dev * sizes[a] + jax.lax.axis_index(a)
         lo = dev * rows
         rel = r_loc - lo
         # contract: 0 <= rel < rows (receiver-partitioned edges); clip is a
@@ -59,7 +85,7 @@ def partitioned_segment_sum(msgs, receivers, n_nodes: int):
         return jax.ops.segment_sum(m_loc, rel, num_segments=rows)
 
     spec_e = P(axes) if len(axes) > 1 else P(axes[0])
-    out = jax.shard_map(
+    out = _shard_map(
         local,
         mesh=mesh,
         in_specs=(P(spec_e[0], None), spec_e),

@@ -13,7 +13,6 @@ loop of the C implementation into a dense vectorized tile.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

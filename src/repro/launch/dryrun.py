@@ -10,14 +10,11 @@ import traceback
 import jax
 import numpy as np
 
-from repro.configs.registry import ARCHS, all_cells, get_arch
-from repro.launch.mesh import make_production_mesh
+from repro.configs.registry import all_cells, get_arch
+from repro.launch.mesh import make_production_mesh, resolve_in_shardings, set_global_mesh
 from repro.launch.steps import build_cell
 from repro.roofline.analysis import (
-    HW,
-    collective_wire_bytes,
     model_flops,
-    parse_collectives,
     roofline_terms,
 )
 
@@ -51,14 +48,15 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
              overrides: dict | None = None) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_devices = int(np.prod(list(mesh.shape.values())))
-    jax.set_mesh(mesh)
+    set_global_mesh(mesh)
     t0 = time.time()
     cell = build_cell(arch_id, shape_name, overrides=overrides)
     kw = {}
     if cell.meta and "out_shardings" in cell.meta:
-        kw["out_shardings"] = cell.meta["out_shardings"]
+        kw["out_shardings"] = resolve_in_shardings(mesh, cell.meta["out_shardings"])
     jitted = jax.jit(
-        cell.fn, in_shardings=cell.in_specs, donate_argnums=cell.donate_argnums, **kw
+        cell.fn, in_shardings=resolve_in_shardings(mesh, cell.in_specs),
+        donate_argnums=cell.donate_argnums, **kw
     )
     lowered = jitted.lower(*cell.args)
     t_lower = time.time() - t0

@@ -9,15 +9,48 @@ from __future__ import annotations
 import jax
 
 
+def auto_mesh(shape, axes):
+    """`jax.make_mesh` with Auto axis types across jax versions:
+    `jax.sharding.AxisType` only exists from jax 0.5; on older releases
+    Auto is already the default, so plain `make_mesh` is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
+def set_global_mesh(mesh):
+    """`jax.set_mesh` across versions. Pre-0.6 jax has no process-global
+    mesh setter; entering the mesh context (and deliberately never exiting —
+    call sites set the mesh once per process: tests, dry-runs, trainers)
+    gives the same ambient-mesh semantics."""
+    if hasattr(jax, "set_mesh"):
+        jax.set_mesh(mesh)
+    else:
+        mesh.__enter__()
+    return mesh
+
+
+def resolve_in_shardings(mesh, specs):
+    """`jax.jit` sharding args across versions: jax with the explicit-mesh
+    API (>= 0.6, detected via `jax.set_mesh`) accepts PartitionSpecs
+    directly against the ambient mesh; older jax requires concrete
+    `NamedSharding(mesh, spec)` objects. in_specs trees hold only
+    PartitionSpecs (P() = replicated), so the mapping is 1:1."""
+    if hasattr(jax, "set_mesh"):
+        return specs
+    P = jax.sharding.PartitionSpec
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s) if isinstance(s, P) else s,
+        specs, is_leaf=lambda s: isinstance(s, P))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return auto_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for smoke tests/examples."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return auto_mesh((1, 1), ("data", "model"))

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               resolve_in_shardings, set_global_mesh)
 from repro.launch.steps import build_cell
 from repro.train.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.train.fault_tolerance import StragglerDetector, data_skip_offset
@@ -66,9 +67,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     mesh = make_host_mesh() if args.host_mesh else make_production_mesh(multi_pod=args.multi_pod)
-    jax.set_mesh(mesh)
+    set_global_mesh(mesh)
     cell = build_cell(args.arch, args.shape, reduced=args.reduced)
-    step_fn = jax.jit(cell.fn, in_shardings=cell.in_specs,
+    step_fn = jax.jit(cell.fn, in_shardings=resolve_in_shardings(mesh, cell.in_specs),
                       donate_argnums=cell.donate_argnums)
 
     rng = np.random.default_rng(0)

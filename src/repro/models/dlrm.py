@@ -10,7 +10,7 @@ repro.kernels handles multi-hot for other datasets).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -10,15 +10,14 @@ remat policy is configurable. Sharding is expressed via logical axis names
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from functools import partial
+from dataclasses import dataclass, replace
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
-from repro.models.common import chunked_cross_entropy, dense_init, rms_norm, rope
+from repro.models.common import chunked_cross_entropy, rms_norm, rope
 
 
 @dataclass(frozen=True)

@@ -8,6 +8,13 @@ whole batch in ONE level-synchronous frontier (`TripleQueryEngine
 flush instead of once per query. `query_many` is the synchronous
 convenience wrapper (submit-all + flush).
 
+The engine's cross-request result cache makes dedup streaming: a pattern
+seen in any earlier flush (or earlier in this one) is answered from the
+cache instead of re-executing the frontier. Flush-time stats therefore
+separate *submitted* queries from *executed* unique patterns and *cache
+hits* — `qps` alone would hide the difference between a fast engine and a
+warm cache.
+
 The service is numpy-only — it runs wherever the engine runs — and keeps
 rolling throughput stats so serving dashboards can track queries/second.
 """
@@ -23,15 +30,32 @@ from repro.core.query import TripleQueryEngine
 
 @dataclass
 class ServiceStats:
+    """Rolling serving counters.
+
+    `queries` counts submitted patterns; `executed` counts unique patterns
+    that actually ran on the engine (frontier or scalar worklist); and
+    `cache_hits` counts unique patterns answered from the cross-request
+    result cache. In-batch duplicates are neither executed nor cache hits —
+    they ride on batch dedup — so `executed + cache_hits <= queries` per
+    flush, with equality only when every pattern in the flush is distinct.
+    """
+
     queries: int = 0
     batches: int = 0
     results: int = 0
+    executed: int = 0
+    cache_hits: int = 0
     total_s: float = 0.0
     last_batch_qps: float = 0.0
 
     @property
     def qps(self) -> float:
         return self.queries / self.total_s if self.total_s > 0 else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        n = self.executed + self.cache_hits
+        return self.cache_hits / n if n else 0.0
 
 
 @dataclass
@@ -70,7 +94,10 @@ class TripleQueryService:
         return len(self._pending.s)
 
     def flush(self) -> list[list[tuple]]:
-        """Execute all pending queries; returns results indexed by ticket."""
+        """Execute all pending queries; returns results indexed by ticket.
+
+        An empty flush is a no-op: no batch is counted, no time accrued.
+        """
         batch, self._pending = self._pending, _Pending()
         n = len(batch.s)
         if n == 0:
@@ -78,17 +105,30 @@ class TripleQueryService:
         s = np.asarray(batch.s, dtype=np.int64)
         p = np.asarray(batch.p, dtype=np.int64)
         o = np.asarray(batch.o, dtype=np.int64)
+        cache = self.engine.cache
+        before = cache.stats.snapshot() if cache is not None else None
         out: list[list[tuple]] = []
         t0 = time.perf_counter()
+        executed_uncached = 0
         for lo in range(0, n, self.max_batch):
             hi = min(lo + self.max_batch, n)
             out.extend(self.engine.query_batch(s[lo:hi], p[lo:hi], o[lo:hi]))
             self.stats.batches += 1
+            if before is None:  # no cache: in-batch dedup still collapses
+                executed_uncached += len(np.unique(
+                    np.stack([s[lo:hi], p[lo:hi], o[lo:hi]], axis=1), axis=0))
         dt = time.perf_counter() - t0
         self.stats.queries += n
         self.stats.results += sum(len(r) for r in out)
         self.stats.total_s += dt
         self.stats.last_batch_qps = n / dt if dt > 0 else 0.0
+        if before is not None:
+            # engine cache counters moved once per *unique* pattern: the
+            # hit delta is served-from-cache, the miss delta is executed
+            self.stats.cache_hits += cache.stats.hits - before.hits
+            self.stats.executed += cache.stats.misses - before.misses
+        else:
+            self.stats.executed += executed_uncached
         return out
 
     # -- synchronous convenience ----------------------------------------

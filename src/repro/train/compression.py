@@ -13,7 +13,6 @@ intact — tests train a quadratic and a tiny transformer to verify.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ consumed data deterministically).
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass, field
 
 

@@ -9,7 +9,6 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator
 
 import jax
-import jax.numpy as jnp
 
 from repro.train.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.train.compression import CompressionConfig, compress_gradients, init_residual

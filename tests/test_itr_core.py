@@ -20,7 +20,7 @@ from repro.core import (
     query_oracle,
     strip_node_labels,
 )
-from repro.core.digram import digram_key, incidences, split_digram, split_it
+from repro.core.digram import digram_key, split_digram, split_it
 
 
 # ---------------------------------------------------------------- helpers

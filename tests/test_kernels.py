@@ -1,5 +1,4 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -132,7 +131,7 @@ def test_digram_pair_counts_sweep(n, k):
 
 def test_digram_kernel_matches_host_counter():
     """Kernel output aggregated over nodes == repro.core.digram counts."""
-    from repro.core import LabelTable, digram_counts
+    from repro.core import digram_counts
     from repro.core.digram import node_it_counts
     from tests.test_itr_core import random_hypergraph
 

@@ -5,7 +5,7 @@ import jax
 import pytest
 
 from repro.configs import all_cells, get_arch
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, resolve_in_shardings, set_global_mesh
 from repro.launch.steps import build_cell
 
 # one representative shape per family kind keeps this under a minute
@@ -26,14 +26,14 @@ FAST_CELLS = [
 @pytest.fixture(scope="module", autouse=True)
 def host_mesh():
     mesh = make_host_mesh()
-    jax.set_mesh(mesh)
+    set_global_mesh(mesh)
     yield mesh
 
 
 @pytest.mark.parametrize("arch,shape", FAST_CELLS)
-def test_cell_lowers_and_compiles_reduced(arch, shape):
+def test_cell_lowers_and_compiles_reduced(arch, shape, host_mesh):
     cell = build_cell(arch, shape, reduced=True)
-    jitted = jax.jit(cell.fn, in_shardings=cell.in_specs,
+    jitted = jax.jit(cell.fn, in_shardings=resolve_in_shardings(host_mesh, cell.in_specs),
                      donate_argnums=cell.donate_argnums)
     compiled = jitted.lower(*cell.args).compile()
     assert compiled.cost_analysis() is not None

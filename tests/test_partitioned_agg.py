@@ -10,7 +10,6 @@ import sys
 import textwrap
 
 import numpy as np
-import pytest
 
 from repro.distributed.collectives import partition_edges, validate_partitioning
 
@@ -52,13 +51,12 @@ def test_partitioned_segment_sum_multidevice_subprocess():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         from repro.distributed.collectives import (partition_edges,
             partitioned_segment_sum, validate_partitioning)
+        from repro.launch.mesh import auto_mesh, set_global_mesh
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
-        jax.set_mesh(mesh)
+        mesh = auto_mesh((4, 2), ("data", "model"))
+        set_global_mesh(mesh)
         rng = np.random.default_rng(0)
         n, e = 64, 248
         s = rng.integers(0, n, e); r = rng.integers(0, n, e)

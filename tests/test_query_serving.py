@@ -1,0 +1,327 @@
+"""Serving-grade query path: frontier arena, cross-request result cache,
+crossover dispatch, service flush stats, batched neighborhood parity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FrontierArena,
+    Hypergraph,
+    LabelTable,
+    QueryResultCache,
+    TripleQueryEngine,
+    compress,
+    query_oracle,
+)
+from repro.serve.triple_service import TripleQueryService
+from tests.test_itr_core import random_hypergraph
+
+
+def _triple_engine(seed=0, n_nodes=15, n_preds=3, n_edges=80, **kwargs):
+    rng = np.random.default_rng(seed)
+    triples = np.stack(
+        [rng.integers(0, n_nodes, n_edges), rng.integers(0, n_preds, n_edges),
+         rng.integers(0, n_nodes, n_edges)], axis=1)
+    table = LabelTable.terminals([2] * n_preds)
+    g = Hypergraph.from_triples(triples, n_nodes)
+    grammar, _ = compress(g, table)
+    return TripleQueryEngine(grammar, **kwargs), g, triples
+
+
+# ---------------------------------------------------------------- arena
+def test_frontier_arena_growth_and_reuse():
+    arena = FrontierArena(edge_cap=2, node_cap=2)
+    arena.push(np.array([0, 0]), np.array([5, 6]), np.array([2, 1]),
+               np.array([10, 11, 12]))
+    arena.push(np.array([1]), np.array([7]), np.array([3]), np.array([1, 2, 3]))
+    q, l, n, o = arena.finish()
+    assert q.tolist() == [0, 0, 1]
+    assert l.tolist() == [5, 6, 7]
+    assert n.tolist() == [10, 11, 12, 1, 2, 3]
+    assert o.tolist() == [0, 2, 3, 6]
+    assert arena.edge_capacity >= 3 and arena.node_capacity >= 6
+    # finish() resets: the arena is immediately reusable
+    assert arena.n_edges == 0 and arena.n_nodes == 0
+    q2, l2, n2, o2 = arena.finish()
+    assert len(l2) == 0 and o2.tolist() == [0]
+    # earlier results were copies, untouched by further pushes
+    arena.push(np.array([9]), np.array([9]), np.array([1]), np.array([99]))
+    assert l.tolist() == [5, 6, 7]
+
+
+def test_engine_results_survive_arena_reuse():
+    engine, g, triples = _triple_engine(seed=1)
+    s0 = int(triples[0, 0])
+    r1 = engine.query_batch_arrays([s0], None, None)
+    saved = tuple(a.copy() for a in r1)
+    # a second, different query reuses the arena; first results must hold
+    engine.query_batch_arrays([None], [int(triples[1, 1])], None)
+    for a, b in zip(r1, saved):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------- cache unit
+def test_result_cache_lru_eviction_and_stats():
+    cache = QueryResultCache(max_entries=2, max_edges=1 << 20)
+    e = (np.array([1]), np.array([0, 1]), np.array([0, 2]))
+    assert cache.lookup(1, -1, -1) is None
+    cache.insert(1, -1, -1, e)
+    cache.insert(2, -1, -1, e)
+    assert cache.lookup(1, -1, -1) is not None  # refresh 1 -> 2 becomes LRU
+    cache.insert(3, -1, -1, e)                  # evicts 2
+    assert cache.lookup(2, -1, -1) is None
+    assert cache.lookup(3, -1, -1) is not None
+    st = cache.stats
+    assert st.evictions == 1 and st.inserts == 3
+    assert st.hits == 2 and st.misses == 2
+    assert st.hit_rate == pytest.approx(0.5)
+
+
+def test_result_cache_predicate_segment_is_isolated():
+    cache = QueryResultCache(max_entries=1, predicate_entries=4)
+    e = (np.array([1]), np.array([0, 1]), np.array([0, 2]))
+    cache.insert(-1, 0, -1, e)  # ?P? -> predicate segment
+    cache.insert(-1, 1, -1, e)
+    # a burst of selective inserts may thrash the general segment...
+    for s in range(5):
+        cache.insert(s, -1, -1, e)
+    # ...but the predicate segment stays warm
+    assert cache.lookup(-1, 0, -1) is not None
+    assert cache.lookup(-1, 1, -1) is not None
+    assert cache.stats.predicate_hits == 2
+
+
+def test_result_cache_edge_budget_and_oversize():
+    big = (np.arange(10), np.arange(20), np.arange(0, 22, 2))
+    cache = QueryResultCache(max_entries=100, max_edges=25, max_entry_edges=15)
+    for s in range(4):
+        cache.insert(s, -1, -1, big)  # 10 edges each; budget 25 -> evictions
+    assert cache.cached_edges <= 25
+    assert cache.stats.evictions >= 1
+    huge = (np.arange(16), np.arange(32), np.arange(0, 34, 2))
+    cache.insert(9, -1, -1, huge)  # > max_entry_edges: skipped
+    assert cache.lookup(9, -1, -1) is None
+    assert cache.stats.oversize_skips == 1
+
+
+# ---------------------------------------------------------------- engine+cache
+def test_cached_queries_match_oracle_and_count_hits():
+    engine, g, triples = _triple_engine(seed=2, cache=QueryResultCache(), crossover=0)
+    s0, p0 = int(triples[0, 0]), int(triples[0, 1])
+    want_s = sorted(query_oracle(g, s0, None, None))
+    want_p = sorted(query_oracle(g, None, p0, None))
+    assert sorted(engine.query(s0, None, None)) == want_s
+    assert sorted(engine.query(None, p0, None)) == want_p
+    miss0 = engine.cache.stats.misses
+    # repeats are cache hits and still exact
+    assert sorted(engine.query(s0, None, None)) == want_s
+    assert sorted(engine.query(None, p0, None)) == want_p
+    assert engine.cache.stats.hits >= 2
+    assert engine.cache.stats.misses == miss0
+    assert engine.cache.stats.predicate_hits >= 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cache_parity_random_hypergraph_batches(seed):
+    """Batches re-run against a warm cache must equal the oracle exactly,
+    including mixed hit/miss batches with duplicates."""
+    rng = np.random.default_rng(seed)
+    g, table = random_hypergraph(rng, n_nodes=14, n_edges=50)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar, cache=QueryResultCache(), crossover=0)
+    s = int(rng.integers(0, 14))
+    p = int(rng.integers(0, 3))
+    patterns = [(s, None, None), (None, p, None), (s, None, None),
+                (None, None, s), (None, None, None)]
+    ss, pp, oo = (list(c) for c in zip(*patterns))
+    first = engine.query_batch(ss, pp, oo)
+    second = engine.query_batch(ss, pp, oo)  # all-hit replay
+    # third: half warm, half fresh
+    patterns3 = patterns + [(None, None, int(rng.integers(0, 14)))]
+    s3, p3, o3 = (list(c) for c in zip(*patterns3))
+    third = engine.query_batch(s3, p3, o3)
+    for i, (qs, qp, qo) in enumerate(patterns3):
+        want = sorted(query_oracle(g, qs, qp, qo))
+        if i < len(patterns):
+            assert sorted(first[i]) == want
+            assert sorted(second[i]) == want
+        assert sorted(third[i]) == want
+    assert engine.cache.stats.hits > 0
+
+
+def test_cached_single_query_arrays_are_read_only():
+    """Single-query results alias live cache entries; mutation must raise
+    instead of corrupting future answers."""
+    engine, g, triples = _triple_engine(seed=11, cache=QueryResultCache(),
+                                        crossover=0)
+    s0 = int(triples[0, 0])
+    _, labels, nodes, _ = engine.query_batch_arrays([s0], None, None)
+    if len(nodes):
+        with pytest.raises(ValueError):
+            nodes[0] = 999
+        with pytest.raises(ValueError):
+            labels[0] = 999
+    # repeat (a cache hit) is uncorrupted and exact
+    assert sorted(engine.query(s0, None, None)) == \
+        sorted(query_oracle(g, s0, None, None))
+
+
+def test_cache_entries_do_not_pin_batch_buffers():
+    """Entries split from a miss batch must be copies: a view would keep
+    the whole batch's result arrays alive, defeating the edge budget."""
+    engine, g, triples = _triple_engine(seed=12, cache=QueryResultCache(),
+                                        crossover=0)
+    s0, s1 = int(triples[0, 0]), int(triples[1, 0])
+    p0 = int(triples[0, 1])
+    engine.query_batch_arrays([s0, s1, -1], [-1, -1, p0], [-1, -1, -1])
+    entries = list(engine.cache._general.entries.values()) + \
+        list(engine.cache._predicate.entries.values())
+    assert len(entries) == 3
+    for labels, nodes, offsets in entries:
+        assert labels.base is None and nodes.base is None
+
+
+def test_cache_disabled_engine_still_exact():
+    engine, g, triples = _triple_engine(seed=3, cache=None)
+    s0 = int(triples[0, 0])
+    want = sorted(query_oracle(g, s0, None, None))
+    assert sorted(engine.query(s0, None, None)) == want
+    assert engine.cache is None
+
+
+# ---------------------------------------------------------------- dispatch
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_crossover_dispatch_parity(seed):
+    """With the crossover forced wide, every selective pattern routes to the
+    scalar worklist — results must still equal the oracle, and unselective
+    patterns must still take the frontier."""
+    rng = np.random.default_rng(seed)
+    g, table = random_hypergraph(rng, n_nodes=12, n_edges=40)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar, cache=QueryResultCache(), crossover=8)
+    s = int(rng.integers(0, 12))
+    p = int(rng.integers(0, 3))
+    for qs, qp, qo in [(s, None, None), (None, None, s), (s, p, None),
+                       (None, p, s), (None, p, None), (None, None, None)]:
+        assert sorted(engine.query(qs, qp, qo)) == sorted(query_oracle(g, qs, qp, qo))
+
+
+def test_crossover_env_override(monkeypatch):
+    monkeypatch.setenv("ITR_QUERY_CROSSOVER", "5")
+    engine, _, _ = _triple_engine(seed=4)
+    assert engine.crossover == 5
+    monkeypatch.setenv("ITR_QUERY_CROSSOVER", "0")
+    engine, _, _ = _triple_engine(seed=4)
+    assert engine.crossover == 0
+
+
+def test_crossover_calibration_runs():
+    engine, _, _ = _triple_engine(seed=5)  # no override: measured at build
+    assert 0 <= engine.crossover <= 8
+
+
+# ---------------------------------------------------------------- service
+def _service(seed=6, **kwargs):
+    engine, g, triples = _triple_engine(seed=seed, cache=QueryResultCache(),
+                                        crossover=0)
+    return TripleQueryService(engine, **kwargs), g, triples
+
+
+def test_service_empty_flush_is_noop():
+    service, _, _ = _service()
+    assert service.flush() == []
+    st = service.stats
+    assert st.queries == 0 and st.batches == 0 and st.executed == 0
+    assert st.cache_hits == 0 and st.total_s == 0.0
+
+
+def test_service_counts_hits_separately_from_executed():
+    service, g, triples = _service(seed=7)
+    s0, s1 = int(triples[0, 0]), int(triples[1, 0])
+    # flush 1: three submissions, two unique patterns, nothing cached yet
+    service.submit(s0, None, None)
+    service.submit(s0, None, None)
+    service.submit(s1, None, None)
+    out = service.flush()
+    assert [sorted(r) for r in out] == [
+        sorted(query_oracle(g, s0, None, None)),
+        sorted(query_oracle(g, s0, None, None)),
+        sorted(query_oracle(g, s1, None, None))]
+    assert service.stats.queries == 3
+    assert service.stats.executed == 2   # unique patterns actually run
+    assert service.stats.cache_hits == 0
+    # flush 2: the same patterns again — all answered from the cache
+    service.submit(s0, None, None)
+    service.submit(s1, None, None)
+    service.flush()
+    assert service.stats.queries == 5
+    assert service.stats.executed == 2   # nothing new executed
+    assert service.stats.cache_hits == 2
+    assert service.stats.cache_hit_rate == pytest.approx(0.5)
+
+
+def test_service_streaming_dedup_across_chunks():
+    """max_batch splits one flush into micro-batches; a pattern executed in
+    chunk 1 must be a cache hit in chunk 2 (streaming dedup)."""
+    service, g, triples = _service(seed=8, max_batch=2)
+    s0, s1 = int(triples[0, 0]), int(triples[2, 0])
+    for s in (s0, s1, s0, s0):
+        service.submit(s, None, None)
+    out = service.flush()
+    assert len(out) == 4 and service.stats.batches == 2
+    assert service.stats.executed == 2
+    assert service.stats.cache_hits == 1  # chunk 2's unique s0 hit the cache
+    for r, s in zip(out, (s0, s1, s0, s0)):
+        assert sorted(r) == sorted(query_oracle(g, s, None, None))
+
+
+def test_service_without_cache_counts_unique_executed():
+    engine, g, triples = _triple_engine(seed=9, cache=None, crossover=0)
+    service = TripleQueryService(engine)
+    s0 = int(triples[0, 0])
+    service.submit(s0, None, None)
+    service.submit(s0, None, None)
+    service.flush()
+    assert service.stats.queries == 2
+    assert service.stats.executed == 1  # in-batch dedup still collapses
+    assert service.stats.cache_hits == 0
+
+
+# ---------------------------------------------------------------- neighbors
+def _scalar_neighbors(engine, v: int, slot: int) -> np.ndarray:
+    """Neighborhood oracle via the seed scalar worklist: distinct nodes in
+    tuple position `slot` of the edges matching (v ? ?) / (? ? v)."""
+    res = engine.query_scalar(v if slot == 1 else None, None,
+                              v if slot == 0 else None)
+    vals = {int(nodes[slot]) for _, nodes in res if len(nodes) > slot}
+    return np.array(sorted(vals), dtype=np.int64)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_neighbors_batch_parity_random_grammars(seed):
+    rng = np.random.default_rng(seed)
+    g, table = random_hypergraph(rng, n_nodes=13, n_edges=45)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar, cache=QueryResultCache(), crossover=0)
+    vs = rng.integers(0, 13, 6).tolist() + [0, 0]  # duplicates exercise dedup
+    outs = engine.neighbors_out_batch(vs)
+    ins = engine.neighbors_in_batch(vs)
+    assert len(outs) == len(vs) and len(ins) == len(vs)
+    for v, got_out, got_in in zip(vs, outs, ins):
+        np.testing.assert_array_equal(got_out, _scalar_neighbors(engine, int(v), 1))
+        np.testing.assert_array_equal(got_in, _scalar_neighbors(engine, int(v), 0))
+        # scalar convenience wrappers agree with the batch
+        np.testing.assert_array_equal(engine.neighbors_out(int(v)), got_out)
+        np.testing.assert_array_equal(engine.neighbors_in(int(v)), got_in)
+
+
+def test_neighbors_batch_negative_and_out_of_range_nodes():
+    engine, g, _ = _triple_engine(seed=10)
+    big = engine.encoded.incidence.n_rows + 7
+    outs = engine.neighbors_out_batch([-1, big])
+    ins = engine.neighbors_in_batch([-3, big])
+    for r in outs + ins:
+        assert len(r) == 0

@@ -2,10 +2,9 @@
 term computation."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.roofline.analysis import HW, model_flops, parse_collectives, roofline_terms
+from repro.roofline.analysis import model_flops, parse_collectives, roofline_terms
 from repro.roofline.hlo_cost import hlo_cost, parse_hlo
 
 
