@@ -14,7 +14,13 @@ trajectory from PR 1 onward:
   result cache incl. its ?P? segment;
 * a `crossover_dispatch` section — single-query latency of the dispatched
   `engine.query` vs the scalar worklist vs a forced frontier-of-one, per
-  selective pattern, at the engine's calibrated crossover width.
+  selective pattern, at the engine's calibrated crossover width;
+* a `sharded` section (PR 3) — per-shard-count mixed-workload throughput
+  for both partition strategies, scatter-gather latency vs the single
+  engine on the unselective patterns, and the warm repeated-``?P?``
+  micro-batch workload through the view path (`query_batch_view`): shared
+  entries instead of per-duplicate replication, which is the PR 2
+  `warm_cache` cost floor the view is built to beat.
 """
 from __future__ import annotations
 
@@ -40,6 +46,9 @@ from repro.data.synthetic import PAPER_DATASETS
 # selective patterns: S or O bound — the ones eligible for scalar dispatch
 DISPATCH_PATTERNS = ["s??", "sp?", "s?o", "??o", "spo"]
 WARM_CACHE_PATTERNS = ["s??", "?p?", "sp?", "??o"]
+# sharded-tier sweep: shard counts per strategy + the mixed routing workload
+SHARD_COUNTS = (1, 2, 4)
+SHARDED_MIXED_CYCLE = ["s??", "sp?", "?p?", "??o"]
 
 
 def run(dataset="geo-coordinates-en", n_queries=500, quiet=False,
@@ -91,8 +100,15 @@ def run(dataset="geo-coordinates-en", n_queries=500, quiet=False,
                   f"({speedup:5.1f}x vs scalar)  (n={checks['ITR']})")
     _bench_warm_cache(itr, ds, bench, n_queries, quiet)
     _bench_crossover(itr, ds, bench, n_queries, quiet)
+    _bench_sharded(itr, ds, bench, n_queries, quiet)
     _finalize_throughput(bench, n_queries)
     if json_path:
+        try:  # a full rewrite must not erase the committed CI gate baseline
+            prior = json.loads(Path(json_path).read_text())
+            if "smoke_baseline" in prior:
+                bench["smoke_baseline"] = prior["smoke_baseline"]
+        except (OSError, ValueError):
+            pass
         Path(json_path).write_text(json.dumps(bench, indent=2))
     if not quiet:
         print(f"batch_throughput_qps={bench['batch_throughput_qps']:.0f}"
@@ -128,11 +144,14 @@ def _bench_warm_cache(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None
                 itr.query_batch_arrays(s_arr, p_arr, o_arr)
             return (time.perf_counter() - t0) / total_q * 1e6
 
+        # min over reps: the CI gate compares warm/uncached ratios, and a
+        # load spike hitting one side of a single-shot measurement skews
+        # the ratio by several x (same rationale as the dispatch section)
         with engine_cache_disabled(itr):
-            uncached_us = run_workload()
+            uncached_us = min(run_workload() for _ in range(2))
         itr.cache.clear()
         cold_us = run_workload()  # first flush misses, later flushes hit
-        warm_us = run_workload()  # all-hit steady state
+        warm_us = min(run_workload() for _ in range(2))  # all-hit steady state
         out[pattern] = {
             "uncached_us": uncached_us,
             "cold_us": cold_us,
@@ -227,6 +246,160 @@ def _bench_crossover(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None:
             print(f"dispatch {pattern} dispatched={dispatched_us:9.1f}us "
                   f"scalar={scalar_us:9.1f}us frontier1={frontier_us:9.1f}us")
     bench["crossover_dispatch"] = {"crossover_width": itr.crossover, "patterns": out}
+
+
+def _bench_sharded(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None:
+    """Sharded serving tier: partitioned engines + scatter-gather router +
+    shared cache, plus the view-based warm path.
+
+    Three measurements land in ``bench["sharded"]``:
+
+    * per-shard-count cold/warm throughput of a mixed selective/unselective
+      workload through `ShardedTripleService`, both partition strategies;
+    * scatter-gather overhead: the unselective patterns on a 4-shard
+      service (caches detached) vs the single engine's uncached batch;
+    * the warm repeated-``?P?`` micro-batch workload through
+      `query_batch_view` vs the materializing `query_batch_arrays` — the
+      view must beat the PR 2 `warm_cache` warm number because it skips
+      the per-duplicate replication entirely.
+    """
+    from repro.serve.sharded import ShardedTripleService
+
+    section: dict = {"shard_counts": list(SHARD_COUNTS), "strategies": {}}
+
+    # mixed workload: rows bound through a rotating pattern cycle
+    nq = min(n_queries, 200)
+    rows = sample_rows(ds, nq, seed=3)
+    mixed = [bind_pattern(SHARDED_MIXED_CYCLE[i % len(SHARDED_MIXED_CYCLE)],
+                          rows[i:i + 1]) for i in range(nq)]
+    mixed = [(s[0], p[0], o[0]) for s, p, o in mixed]
+
+    def run_mixed(svc) -> float:
+        t0 = time.perf_counter()
+        svc.query_many(mixed)
+        return (time.perf_counter() - t0) / nq * 1e6
+
+    widest: dict = {}  # strategy -> max-shard-count service, reused below
+    for strategy in ("predicate_hash", "node_range"):
+        per = {}
+        for n_shards in SHARD_COUNTS:
+            svc = ShardedTripleService.build(
+                ds.triples, ds.n_nodes, ds.n_preds,
+                n_shards=n_shards, strategy=strategy)
+            cold_us = run_mixed(svc)   # cache misses + inserts
+            st = svc.stats
+            routing = (st.owned, st.scattered, st.shard_batches)
+            warm_us = run_mixed(svc)   # shared-tier hits
+            per[str(n_shards)] = {
+                "cold_us_per_query": cold_us,
+                "warm_us_per_query": warm_us,
+                "warm_qps": 1e6 / warm_us if warm_us > 0 else float("inf"),
+                # routing counts from the cold pass only (one workload's worth)
+                "owned_unique": routing[0],
+                "scattered_unique": routing[1],
+                "shard_batches": routing[2],
+                "shard_edges": svc.shard_sizes(),
+            }
+            if n_shards == max(SHARD_COUNTS):
+                widest[strategy] = svc
+            if not quiet:
+                print(f"sharded {strategy} P={n_shards} cold={cold_us:9.1f}us "
+                      f"warm={warm_us:9.1f}us owned={routing[0]} "
+                      f"scattered={routing[1]}")
+        section["strategies"][strategy] = per
+
+    # scatter-gather vs single engine, caches detached on both sides.
+    # Each pattern runs on a strategy where it genuinely scatters: ?P? is
+    # OWNED under predicate_hash (that axis exists to own it), so its
+    # scatter cost shows only under node_range; ??O scatters under both.
+    sg = {}
+    for pattern, strategy in (("?p?", "node_range"), ("??o", "predicate_hash")):
+        svc = widest[strategy]
+        nqp = min(n_queries, QUERIES_PER_PATTERN.get(pattern, n_queries))
+        # min over reps on both sides: these ratios feed the CI gate
+        single_us = min(time_query_batch(itr, ds, pattern, nqp)[0]
+                        for _ in range(2))
+        s_arr, p_arr, o_arr = bind_pattern(pattern, sample_rows(ds, nqp, seed=0))
+        # detach engine caches AND the shared tier (merged-entry namespace)
+        # so every rep measures the execution fan-out, not a cache hit
+        caches = [e.cache for e in svc.engines]
+        svc_cache, svc.cache = svc.cache, None
+        for e in svc.engines:
+            e.cache = None
+        try:
+            def run_scatter() -> float:
+                t0 = time.perf_counter()
+                for s, p, o in zip(s_arr, p_arr, o_arr):
+                    svc.submit(s, p, o)
+                svc.flush_view()
+                return (time.perf_counter() - t0) / nqp * 1e6
+
+            sharded_us = min(run_scatter() for _ in range(2))
+        finally:
+            svc.cache = svc_cache
+            for e, c in zip(svc.engines, caches):
+                e.cache = c
+        sg[pattern] = {
+            "strategy": strategy,
+            "single_engine_us": single_us,
+            "sharded_us": sharded_us,
+            "sharded_vs_single": sharded_us / single_us if single_us > 0 else float("inf"),
+        }
+        if not quiet:
+            print(f"sharded scatter {pattern} [{strategy}] single={single_us:9.1f}us "
+                  f"sharded(P={max(SHARD_COUNTS)})={sharded_us:9.1f}us")
+    section["scatter_gather"] = sg
+
+    # warm ?P? through the view path: the PR 2 warm_cache workload shape
+    # (hot pattern pool, micro-batches), materialized vs view-based
+    if itr.cache is not None:
+        hot, micro = 32, 32
+        n_flushes = max(2, min(16, n_queries // micro))
+        rng = np.random.default_rng(1)
+        pool = np.unique(sample_rows(ds, 4 * hot), axis=0)[:hot]
+        batches = []
+        for _ in range(n_flushes):
+            picks = pool[rng.integers(0, len(pool), micro)]
+            batches.append(bind_pattern("?p?", picks))
+        total_q = n_flushes * micro
+
+        def run_flushes(fn) -> float:
+            t0 = time.perf_counter()
+            for s_arr, p_arr, o_arr in batches:
+                fn(s_arr, p_arr, o_arr)
+            return (time.perf_counter() - t0) / total_q * 1e6
+
+        itr.cache.clear()
+        run_flushes(itr.query_batch_arrays)            # populate
+        # min over reps: speedup_vs_materialized feeds the CI gate
+        warm_mat_us = min(run_flushes(itr.query_batch_arrays) for _ in range(2))
+        view_warm_us = min(run_flushes(itr.query_batch_view) for _ in range(2))
+
+        # the same workload through the warm scatter-gather tier, on the
+        # strategy where ?P? actually fans out (node_range)
+        svc_nr = widest["node_range"]
+
+        def sharded_flush(s_arr, p_arr, o_arr):
+            for s, p, o in zip(s_arr, p_arr, o_arr):
+                svc_nr.submit(s, p, o)
+            svc_nr.flush_view()
+
+        run_flushes(sharded_flush)                     # populate shared tier
+        sharded_view_warm_us = min(run_flushes(sharded_flush) for _ in range(2))
+        section["warm_view"] = {
+            "materialized_warm_us": warm_mat_us,
+            "view_warm_us": view_warm_us,
+            "speedup_vs_materialized":
+                warm_mat_us / view_warm_us if view_warm_us > 0 else float("inf"),
+            "sharded_view_warm_us": sharded_view_warm_us,
+            "view_warm_qps": 1e6 / view_warm_us if view_warm_us > 0 else float("inf"),
+        }
+        if not quiet:
+            print(f"sharded warm-view ?p? materialized={warm_mat_us:9.1f}us "
+                  f"view={view_warm_us:9.1f}us "
+                  f"({section['warm_view']['speedup_vs_materialized']:5.1f}x) "
+                  f"sharded-view={sharded_view_warm_us:9.1f}us")
+    bench["sharded"] = section
 
 
 def _finalize_throughput(bench: dict, n_queries: int) -> None:

@@ -6,14 +6,163 @@ Prints `name,value,derived` CSV lines per benchmark so results are grep-able
 `--smoke` runs every section on tiny inputs with one repetition and never
 overwrites the tracked BENCH_*.json artifacts — it exists so CI can prove
 the harness still executes end to end without paying full benchmark time.
+
+`--smoke --check` is the CI benchmark-regression gate: the smoke run's
+*dimensionless* metrics (speedups, dispatch ratios — absolute µs vary too
+much across machines to gate on) are compared against the `smoke_baseline`
+section committed in BENCH_query_latency.json, with a generous tolerance
+(default 3x, `--tolerance`) so timing noise never fails a build but a real
+regression — a speedup collapsing, dispatch suddenly slower than scalar —
+does. The smoke metrics are written to BENCH_smoke_query_latency.json for
+upload as a workflow artifact. `--smoke --update-baseline` re-records the
+committed baseline from the current machine.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+from pathlib import Path
+
+BASELINE_JSON = "BENCH_query_latency.json"
+SMOKE_JSON = "BENCH_smoke_query_latency.json"
+GATE_TOLERANCE = 3.0
+
+# metric name suffixes where LOWER is better (ratios of our-time / reference)
+_LOWER_IS_BETTER = ("dispatched_vs_scalar", "sharded_vs_single")
 
 
-def main(smoke: bool = False) -> None:
+def gate_metrics(bench: dict) -> dict[str, float]:
+    """Flatten a query-latency bench dict to the dimensionless metrics the
+    regression gate compares. Only ratio-style numbers qualify: absolute
+    latencies depend on the machine, ratios mostly cancel it out."""
+    out: dict[str, float] = {}
+    for pat, p in bench.get("patterns", {}).items():
+        if pat == "???":
+            # full-decompression pattern: capped at 5 scalar queries and
+            # bounded by result-materialization volume, not engine speed —
+            # too few samples to gate on without flakiness
+            continue
+        out[f"patterns.{pat}.speedup_vs_scalar"] = p["speedup_vs_scalar"]
+    wc = bench.get("warm_cache", {})
+    for pat, p in wc.get("patterns", {}).items():
+        out[f"warm_cache.{pat}.warm_speedup_vs_uncached"] = \
+            p["warm_speedup_vs_uncached"]
+    if "point_lookup" in wc:
+        out["warm_cache.point_lookup.warm_speedup"] = \
+            wc["point_lookup"]["warm_speedup"]
+    for pat, p in bench.get("crossover_dispatch", {}).get("patterns", {}).items():
+        out[f"crossover_dispatch.{pat}.dispatched_vs_scalar"] = \
+            p["dispatched_vs_scalar"]
+    sharded = bench.get("sharded", {})
+    if "warm_view" in sharded:
+        out["sharded.warm_view.speedup_vs_materialized"] = \
+            sharded["warm_view"]["speedup_vs_materialized"]
+    for pat, p in sharded.get("scatter_gather", {}).items():
+        out[f"sharded.scatter_gather.{pat}.sharded_vs_single"] = \
+            p["sharded_vs_single"]
+    return {k: float(v) for k, v in out.items()}
+
+
+def check_regressions(smoke_path: str = SMOKE_JSON,
+                      baseline_path: str = BASELINE_JSON,
+                      tolerance: float | None = None) -> int:
+    """Compare smoke gate metrics against the committed smoke baseline.
+
+    Metrics only on the smoke side are skipped (new metrics don't fail
+    the gate until a baseline is recorded for them), but a metric the
+    BASELINE has and the smoke run no longer emits is a FAILURE — a
+    renamed/dropped section silently losing its gates is exactly the
+    coverage loss this gate exists to catch. `tolerance` defaults to the
+    one recorded alongside the baseline (so re-recording with
+    `--update-baseline --tolerance N` actually changes the gate).
+    Returns the number of regressions; prints one `gate ...` line each.
+    """
+    smoke = gate_metrics(json.loads(Path(smoke_path).read_text()))
+    baseline_doc = json.loads(Path(baseline_path).read_text())
+    section = baseline_doc.get("smoke_baseline", {})
+    if tolerance is None:
+        tolerance = float(section.get("tolerance", GATE_TOLERANCE))
+    base = section.get("metrics")
+    if not base:
+        print(f"gate ERROR: no smoke_baseline in {baseline_path}; record one "
+              f"with `python -m benchmarks.run --smoke --update-baseline`",
+              file=sys.stderr)
+        return 1
+    failures = 0
+    for name in sorted(set(smoke) & set(base)):
+        got, want = smoke[name], base[name]
+        if name.endswith(_LOWER_IS_BETTER):
+            ok = got <= want * tolerance
+            bound = f"<= {want * tolerance:.2f}"
+        else:
+            ok = got >= want / tolerance
+            bound = f">= {want / tolerance:.2f}"
+        failures += not ok
+        print(f"gate {name}: smoke={got:.2f} baseline={want:.2f} "
+              f"({bound}) {'PASS' if ok else 'FAIL'}")
+    for name in sorted(set(base) - set(smoke)):
+        failures += 1
+        print(f"gate {name}: MISSING from smoke run (baseline gates it) FAIL")
+    fresh = sorted(set(smoke) - set(base))
+    if fresh:
+        print(f"gate # {len(fresh)} new metric(s) skipped until a baseline "
+              f"is recorded: {', '.join(fresh)}")
+    print(f"gate summary: {failures} regression(s) at {tolerance:g}x tolerance")
+    return failures
+
+
+def conservative_envelope(metric_dicts: list[dict]) -> dict[str, float]:
+    """Fold several runs' gate metrics into one baseline, taking each
+    metric's WORST observed side (min for higher-is-better, max for
+    lower-is-better). Gating against the envelope means the tolerance
+    band absorbs run-to-run timing noise instead of flagging it — only a
+    regression beyond (worst observed) / tolerance fails."""
+    out: dict[str, float] = {}
+    for m in metric_dicts:
+        for k, v in m.items():
+            if k not in out:
+                out[k] = v
+            elif k.endswith(_LOWER_IS_BETTER):
+                out[k] = max(out[k], v)
+            else:
+                out[k] = min(out[k], v)
+    return out
+
+
+def update_baseline_from(bench_dicts: list[dict],
+                         baseline_path: str = BASELINE_JSON,
+                         tolerance: float | None = None) -> None:
+    """Record the conservative envelope of smoke bench dicts as the
+    committed gate baseline (with the tolerance future `--check` runs
+    will gate at). Refreshing without --tolerance keeps any previously
+    recorded custom tolerance."""
+    doc = json.loads(Path(baseline_path).read_text())
+    if tolerance is None:
+        tolerance = doc.get("smoke_baseline", {}).get("tolerance", GATE_TOLERANCE)
+    doc["smoke_baseline"] = {
+        "tolerance": float(tolerance),
+        "runs": len(bench_dicts),
+        "note": "conservative envelope of dimensionless smoke metrics for "
+                "`benchmarks.run --smoke --check`; refresh with "
+                "--smoke --update-baseline",
+        "metrics": conservative_envelope([gate_metrics(b) for b in bench_dicts]),
+    }
+    Path(baseline_path).write_text(json.dumps(doc, indent=2))
+    print(f"smoke_baseline updated in {baseline_path} "
+          f"({len(bench_dicts)} run(s), tolerance {tolerance:g}x)")
+
+
+def update_baseline(smoke_path: str = SMOKE_JSON,
+                    baseline_path: str = BASELINE_JSON,
+                    tolerance: float | None = None) -> None:
+    """Single-run convenience wrapper around :func:`update_baseline_from`."""
+    update_baseline_from([json.loads(Path(smoke_path).read_text())],
+                         baseline_path, tolerance)
+
+
+def main(smoke: bool = False, check: bool = False,
+         update: bool = False, tolerance: float | None = None) -> None:
     from benchmarks import (
         compression_ratio,
         compression_speed,
@@ -26,7 +175,10 @@ def main(smoke: bool = False) -> None:
     fig3 = compression_ratio.run(datasets=["ttt-win"] if smoke else compression_ratio.DATASETS)
     print("\n== Figure 4: triple-query latency (500 queries/pattern) ==")
     if smoke:
-        fig4 = query_latency.run(n_queries=25, scale=0.02, json_path=None)
+        # the gate needs the smoke bench dict on disk; plain smoke runs
+        # stay write-free (BENCH_*.json artifacts are never overwritten)
+        smoke_json = SMOKE_JSON if (check or update) else None
+        fig4 = query_latency.run(n_queries=25, scale=0.02, json_path=smoke_json)
     else:
         fig4 = query_latency.run()
     print("\n== §ITR+: node-label hyperedges (ttt-win) ==")
@@ -51,12 +203,10 @@ def main(smoke: bool = False) -> None:
             if m != "pattern":
                 print(f"fig4/{row['pattern']}/{m},{v:.1f},us_per_query")
     # batched-engine trajectory (written by query_latency.run; in smoke mode
-    # the file is not rewritten, so skip rather than report stale numbers)
+    # the tracked file is not rewritten, so skip rather than report stale)
     if not smoke:
         try:
-            import json
-
-            bench = json.loads(open("BENCH_query_latency.json").read())
+            bench = json.loads(Path(BASELINE_JSON).read_text())
             print(f"fig4/batch_throughput_qps,{bench['batch_throughput_qps']:.0f},qps")
             for pat, p in bench["patterns"].items():
                 print(f"fig4/{pat}/speedup_vs_scalar,{p['speedup_vs_scalar']:.2f},x")
@@ -64,8 +214,15 @@ def main(smoke: bool = False) -> None:
                 print(f"fig4/{pat}/warm_speedup_vs_uncached,{p['warm_speedup_vs_uncached']:.2f},x")
             for pat, p in bench.get("crossover_dispatch", {}).get("patterns", {}).items():
                 print(f"fig4/{pat}/dispatched_vs_scalar,{p['dispatched_vs_scalar']:.2f},x")
+            sharded = bench.get("sharded", {})
+            for strat, per in sharded.get("strategies", {}).items():
+                for n_shards, v in per.items():
+                    print(f"sharded/{strat}/P{n_shards}/warm_qps,{v['warm_qps']:.0f},qps")
+            if "warm_view" in sharded:
+                print(f"sharded/warm_view/speedup_vs_materialized,"
+                      f"{sharded['warm_view']['speedup_vs_materialized']:.2f},x")
         except Exception as e:
-            print(f"# BENCH_query_latency.json unavailable: {e}", file=sys.stderr)
+            print(f"# {BASELINE_JSON} unavailable: {e}", file=sys.stderr)
     p = plus[0]
     print(f"itr_plus/ttt-win/gain,{p['plus_gain']:.4f},fraction")
     for row in abl["loop_rules"]:
@@ -92,9 +249,37 @@ def main(smoke: bool = False) -> None:
         except Exception as e:  # dry-run not yet executed
             print(f"# roofline skipped: {e}", file=sys.stderr)
 
+    if smoke and update:
+        print("\n== gate baseline ==")
+        # envelope over extra latency-section runs: smoke ratios jitter by
+        # ~2-3x run to run, so a single-shot baseline plus 3x tolerance
+        # would flag noise; the worst observed side per metric won't
+        runs = [json.loads(Path(SMOKE_JSON).read_text())]
+        for _ in range(2):
+            query_latency.run(n_queries=25, scale=0.02, json_path=SMOKE_JSON,
+                              quiet=True)
+            runs.append(json.loads(Path(SMOKE_JSON).read_text()))
+        update_baseline_from(runs, tolerance=tolerance)
+    if smoke and check:
+        print("\n== benchmark-regression gate ==")
+        if check_regressions(tolerance=tolerance):
+            sys.exit(1)
+
 
 if __name__ == "__main__":
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--smoke", action="store_true",
-                        help="tiny graphs, 1 repetition, no JSON overwrite")
-    main(smoke=parser.parse_args().smoke)
+                        help="tiny graphs, 1 repetition, no tracked-JSON overwrite")
+    parser.add_argument("--check", action="store_true",
+                        help="with --smoke: fail on regression vs the committed "
+                             "smoke_baseline (writes BENCH_smoke_query_latency.json)")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="with --smoke: re-record the committed smoke_baseline")
+    parser.add_argument("--tolerance", type=float, default=None,
+                        help="gate tolerance factor (default: the one recorded "
+                             f"in the baseline, else {GATE_TOLERANCE:g})")
+    args = parser.parse_args()
+    if (args.check or args.update_baseline) and not args.smoke:
+        parser.error("--check/--update-baseline require --smoke")
+    main(smoke=args.smoke, check=args.check, update=args.update_baseline,
+         tolerance=args.tolerance)

@@ -5,9 +5,9 @@ from repro.core.digram import DigramCounter, digram_counts, digram_key, incidenc
 from repro.core.grammar import Grammar, Rule
 from repro.core.repair import RepairConfig, RepairStats, compress
 from repro.core.encode import EncodedGrammar, encode
-from repro.core.flatten import FlatGrammar, FrontierArena
-from repro.core.query import TripleQueryEngine, query_oracle
-from repro.core.result_cache import CacheStats, QueryResultCache
+from repro.core.flatten import FlatGrammar, FrontierArena, concat_ragged
+from repro.core.query import QueryResultView, TripleQueryEngine, query_oracle
+from repro.core.result_cache import CacheStats, QueryResultCache, ShardCacheView
 from repro.core.itr_plus import attach_node_labels, strip_node_labels
 
 __all__ = [
@@ -26,9 +26,12 @@ __all__ = [
     "encode",
     "FlatGrammar",
     "FrontierArena",
+    "concat_ragged",
     "TripleQueryEngine",
+    "QueryResultView",
     "QueryResultCache",
     "CacheStats",
+    "ShardCacheView",
     "query_oracle",
     "attach_node_labels",
     "strip_node_labels",

@@ -38,6 +38,28 @@ def _ragged_arange(counts: np.ndarray) -> np.ndarray:
     return np.arange(total, dtype=np.int64) - np.repeat(ends - counts, counts)
 
 
+def concat_ragged(chunks) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Concatenate ragged ``(labels, nodes_flat, offsets)`` triples into one.
+
+    This is the scatter-gather merge primitive: each shard answers a
+    pattern with its own ragged result chunk, and the union over disjoint
+    partitions is exactly their concatenation (no dedup needed). Also used
+    by :meth:`repro.core.query.QueryResultView.materialize` to rebuild the
+    flat batch layout from shared per-pattern entries.
+    """
+    chunks = [c for c in chunks if len(c[0])]
+    if not chunks:
+        return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64),
+                np.zeros(1, dtype=np.int64))
+    if len(chunks) == 1:
+        return chunks[0]
+    labels = np.concatenate([c[0] for c in chunks])
+    nodes = np.concatenate([c[1] for c in chunks])
+    ranks = np.concatenate([np.diff(c[2]) for c in chunks])
+    offsets = np.concatenate([[0], np.cumsum(ranks)]).astype(np.int64)
+    return labels, nodes, offsets
+
+
 class FrontierArena:
     """Preallocated, geometrically-grown buffers for ragged result batches.
 

@@ -41,7 +41,7 @@ import time
 import numpy as np
 
 from repro.core.encode import EncodedGrammar, encode
-from repro.core.flatten import FlatGrammar, FrontierArena, _ragged_arange
+from repro.core.flatten import FlatGrammar, FrontierArena, _ragged_arange, concat_ragged
 from repro.core.grammar import Grammar
 from repro.core.hypergraph import _ragged_take
 from repro.core.result_cache import QueryResultCache
@@ -56,6 +56,99 @@ _DEFAULT_CACHE = object()
 _MAX_CROSSOVER = 8
 
 
+class QueryResultView:
+    """Batch results as qid -> *shared* per-pattern entry arrays.
+
+    The materialized batch layout (`query_batch_arrays`) replicates each
+    duplicated pattern's full result per query id — for warm repeated
+    ``?P?`` traffic that replication IS the cost floor. A view instead
+    holds one ``(labels, nodes_flat, offsets)`` entry per *unique* pattern
+    plus the qid -> entry mapping; duplicates share the same backing
+    arrays with zero copies. All arrays are read-only (they may alias live
+    cache entries). `materialize()` is the escape hatch back to the flat
+    ``(qids, labels, nodes_flat, offsets)`` layout.
+    """
+
+    __slots__ = ("entries", "qid_entry")
+
+    def __init__(self, entries: list, qid_entry: np.ndarray):
+        self.entries = entries                       # one per unique pattern
+        self.qid_entry = np.asarray(qid_entry, dtype=np.int64)
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.qid_entry)
+
+    def entry(self, qid: int):
+        """(labels, nodes_flat, offsets) of query `qid` — shared, read-only."""
+        return self.entries[int(self.qid_entry[qid])]
+
+    def result_counts(self) -> np.ndarray:
+        """Matching-edge count per query id (duplicates counted per qid)."""
+        per_entry = np.array([len(e[0]) for e in self.entries], dtype=np.int64)
+        return per_entry[self.qid_entry] if len(per_entry) else \
+            np.zeros(self.n_queries, dtype=np.int64)
+
+    def total_results(self) -> int:
+        return int(self.result_counts().sum())
+
+    def entry_tuples(self, index: int) -> list[tuple]:
+        """Entry `index` as (label, (v0..vk)) tuples (built per entry, so
+        duplicate qids can share ONE list instead of converting each)."""
+        labels, nodes, offsets = self.entries[index]
+        return [(int(labels[j]), tuple(int(v) for v in nodes[offsets[j]:offsets[j + 1]]))
+                for j in range(len(labels))]
+
+    def tuples(self, qid: int) -> list[tuple]:
+        return self.entry_tuples(int(self.qid_entry[qid]))
+
+    def tuple_lists(self) -> list[tuple]:
+        """Per-qid (label, nodes) result sequences, built ONCE per unique
+        pattern — duplicate qids share one *immutable tuple* (mutating a
+        shared list would silently corrupt the sibling ticket's answer;
+        a tuple fails loudly). This is the service flush path."""
+        shared: list = [None] * len(self.entries)
+        out: list[tuple] = []
+        for ei in self.qid_entry:
+            ei = int(ei)
+            if shared[ei] is None:
+                shared[ei] = tuple(self.entry_tuples(ei))
+            out.append(shared[ei])
+        return out
+
+    def materialize(self):
+        """Flat (qids, labels, nodes_flat, offsets) with per-duplicate
+        replication — identical layout/content to `query_batch_arrays`."""
+        counts = np.array([len(e[0]) for e in self.entries], dtype=np.int64)
+        u_l, u_n, u_o = concat_ragged(self.entries)
+        return _replicate_sorted(u_l, u_n, np.diff(u_o), u_o, counts, self.qid_entry)
+
+    @staticmethod
+    def empty() -> "QueryResultView":
+        """Zero-query view (the empty-flush no-op result)."""
+        return QueryResultView([], np.zeros(0, dtype=np.int64))
+
+    @staticmethod
+    def concat(views: list["QueryResultView"]) -> "QueryResultView":
+        """Stack views over consecutive qid ranges (micro-batch chunks)."""
+        entries: list = []
+        qid_chunks = []
+        for v in views:
+            qid_chunks.append(v.qid_entry + len(entries))
+            entries.extend(v.entries)
+        qid_entry = np.concatenate(qid_chunks) if qid_chunks else _EMPTY
+        return QueryResultView(entries, qid_entry)
+
+
+def _freeze_entry(entry):
+    """Mark an entry's arrays read-only: view entries are shared across
+    duplicate qids (and may back cache entries), so in-place mutation must
+    raise instead of silently corrupting a sibling's answer."""
+    for a in entry:
+        a.flags.writeable = False
+    return entry
+
+
 def _env_flag(name: str, default: bool) -> bool:
     v = os.environ.get(name, "").strip().lower()
     if not v:
@@ -67,7 +160,9 @@ class TripleQueryEngine:
     """Query engine over a grammar + its succinct encoding.
 
     `cache` is the cross-request result cache (pass ``None`` to disable,
-    or your own :class:`QueryResultCache` to share/size it; the default is
+    or your own :class:`QueryResultCache` — or a
+    :class:`~repro.core.result_cache.ShardCacheView` of a shared tier, as
+    the sharded service does — to share/size it; the default is
     engine-private and can be switched off with ``ITR_RESULT_CACHE=0``).
     `crossover` is the batch width at/below which cache-missing selective
     patterns run on the scalar worklist instead of the frontier (``None``
@@ -237,6 +332,9 @@ class TripleQueryEngine:
         cache = self.cache
         n = len(s)
         if cache is None:
+            # cache-less path stays entry-free: splitting per unique query
+            # just to re-concatenate would copy every result once for
+            # nothing when the batch has no duplicates
             if n > 1:  # dedup never helps a batch of one
                 key = np.stack([s, p, o], axis=1)
                 uniq, inv = np.unique(key, axis=0, return_inverse=True)
@@ -245,40 +343,12 @@ class TripleQueryEngine:
                     return _replicate_results(u_res, inv.reshape(-1))
             return self._execute_unique(s, p, o)
 
-        if n == 1:  # hot serving path: no stack/unique/split machinery
-            hit = cache.lookup(s[0], p[0], o[0])
-            if hit is None:
-                r_q, r_l, r_n, r_o = self._execute_unique(s, p, o)
-                hit = (r_l, r_n, r_o)  # all qids are 0 already
-                cache.insert(s[0], p[0], o[0], hit)
-            labels, nodes, offsets = hit
+        # cached execution IS the view path; materialize replicates per qid
+        view = self._run_batch_view(s, p, o)
+        if view.n_queries == 1:  # hot serving path: alias the entry, no gather
+            labels, nodes, offsets = view.entries[0]
             return np.zeros(len(labels), dtype=np.int64), labels, nodes, offsets
-
-        key = np.stack([s, p, o], axis=1)
-        uniq, inv = np.unique(key, axis=0, return_inverse=True)
-        inv = inv.reshape(-1)
-        nu = len(uniq)
-        entries: list = [None] * nu
-        miss: list[int] = []
-        for i in range(nu):
-            hit = cache.lookup(uniq[i, 0], uniq[i, 1], uniq[i, 2])
-            if hit is None:
-                miss.append(i)
-            else:
-                entries[i] = hit
-        if miss:
-            mi = np.asarray(miss, dtype=np.int64)
-            fresh = self._execute_unique(uniq[mi, 0], uniq[mi, 1], uniq[mi, 2])
-            for j, entry in enumerate(_split_per_query(fresh, len(mi))):
-                i = int(mi[j])
-                entries[i] = entry
-                cache.insert(uniq[i, 0], uniq[i, 1], uniq[i, 2], entry)
-        counts = np.array([len(e[0]) for e in entries], dtype=np.int64)
-        u_l = np.concatenate([e[0] for e in entries]) if nu else _EMPTY
-        u_n = np.concatenate([e[1] for e in entries]) if nu else _EMPTY
-        ranks = np.concatenate([np.diff(e[2]) for e in entries]) if nu else _EMPTY
-        u_o = np.concatenate([[0], np.cumsum(ranks)]).astype(np.int64)
-        return _replicate_sorted(u_l, u_n, ranks, u_o, counts, inv)
+        return view.materialize()
 
     def _execute_unique(self, s: np.ndarray, p: np.ndarray, o: np.ndarray):
         """Crossover dispatch: tiny all-selective batches take the scalar
@@ -378,6 +448,56 @@ class TripleQueryEngine:
         s, p, o = _normalize_batch(s_arr, p_arr, o_arr)
         return self._run_batch(s, p, o)
 
+    def query_batch_view(self, s_arr, p_arr, o_arr) -> QueryResultView:
+        """Batch query returning a :class:`QueryResultView`: one shared
+        entry per unique pattern, qid -> entry mapping, no per-duplicate
+        materialization. This is the serving path for duplicate-heavy
+        traffic (warm repeated ``?P?`` batches stop paying the replication
+        cost floor); `.materialize()` recovers the flat array layout."""
+        s, p, o = _normalize_batch(s_arr, p_arr, o_arr)
+        return self._run_batch_view(s, p, o)
+
+    def _run_batch_view(self, s: np.ndarray, p: np.ndarray, o: np.ndarray) -> QueryResultView:
+        """Cache-aware execution producing per-unique-pattern entries.
+
+        Same streaming-dedup discipline as `_run_batch` — look unique
+        patterns up in the cross-request cache, execute only the misses,
+        insert their split results — but duplicates share entries instead
+        of being replicated into a flat batch.
+        """
+        cache = self.cache
+        n = len(s)
+        if n == 1:  # hot serving path: no stack/unique/split machinery
+            hit = cache.lookup(s[0], p[0], o[0]) if cache is not None else None
+            if hit is None:
+                _, r_l, r_n, r_o = self._execute_unique(s, p, o)
+                hit = _freeze_entry((r_l, r_n, r_o))
+                if cache is not None:
+                    cache.insert(s[0], p[0], o[0], hit)
+            return QueryResultView([hit], np.zeros(1, dtype=np.int64))
+        key = np.stack([s, p, o], axis=1)
+        uniq, inv = np.unique(key, axis=0, return_inverse=True)
+        inv = inv.reshape(-1)
+        nu = len(uniq)
+        entries: list = [None] * nu
+        miss: list[int] = []
+        for i in range(nu):
+            hit = cache.lookup(uniq[i, 0], uniq[i, 1], uniq[i, 2]) \
+                if cache is not None else None
+            if hit is None:
+                miss.append(i)
+            else:
+                entries[i] = hit
+        if miss:
+            mi = np.asarray(miss, dtype=np.int64)
+            fresh = self._execute_unique(uniq[mi, 0], uniq[mi, 1], uniq[mi, 2])
+            for j, entry in enumerate(_split_per_query(fresh, len(mi))):
+                i = int(mi[j])
+                entries[i] = _freeze_entry(entry)  # shared across duplicate
+                if cache is not None:              # qids even when uncached
+                    cache.insert(uniq[i, 0], uniq[i, 1], uniq[i, 2], entry)
+        return QueryResultView(entries, inv)
+
     def query_batch(self, s_arr, p_arr, o_arr) -> list[list[tuple]]:
         """Batch query returning, per query, (label, (v0..vk)) tuples —
         identical contents to `query_scalar`/`query_oracle` per query."""
@@ -444,18 +564,23 @@ class TripleQueryEngine:
 
     # -- convenience -----------------------------------------------------
     def neighbors_out_batch(self, vs) -> list[np.ndarray]:
-        """Per v: distinct objects (outgoing neighborhood), one batch."""
+        """Per v: distinct objects (outgoing neighborhood), one batch.
+
+        View-backed: duplicate vs share one distinct-node computation and
+        one (read-only) result array instead of per-duplicate copies."""
         vs = self._sanitize_nodes(vs)
-        r_q, _, r_n, r_o = self._run_batch(
+        view = self._run_batch_view(
             vs, np.full(len(vs), -1, np.int64), np.full(len(vs), -1, np.int64))
-        return _group_slot(r_q, r_n, r_o, len(vs), slot=1)
+        per_entry = [_entry_distinct_slot(e, 1) for e in view.entries]
+        return [per_entry[i] for i in view.qid_entry]
 
     def neighbors_in_batch(self, vs) -> list[np.ndarray]:
         """Per v: distinct subjects (incoming neighborhood), one batch."""
         vs = self._sanitize_nodes(vs)
-        r_q, _, r_n, r_o = self._run_batch(
+        view = self._run_batch_view(
             np.full(len(vs), -1, np.int64), np.full(len(vs), -1, np.int64), vs)
-        return _group_slot(r_q, r_n, r_o, len(vs), slot=0)
+        per_entry = [_entry_distinct_slot(e, 0) for e in view.entries]
+        return [per_entry[i] for i in view.qid_entry]
 
     def _sanitize_nodes(self, vs) -> np.ndarray:
         """Negative node ids would read as 'unbound' — remap them to an
@@ -570,16 +695,16 @@ def _replicate_sorted(u_l, u_n, u_ranks, u_o, counts, inv: np.ndarray):
     return r_q, r_l, r_n, r_o
 
 
-def _group_slot(r_q, r_n, r_o, nq: int, slot: int) -> list[np.ndarray]:
-    """Distinct node at tuple position `slot`, grouped per query id —
-    one dedup + one split over the whole result set, not a scan per query."""
-    ranks = np.diff(r_o)
-    vals = _slot(r_n, r_o, ranks, slot)
-    ok = ranks > slot
-    qv = np.unique(np.stack([r_q[ok], vals[ok]], axis=1), axis=0) \
-        if ok.any() else np.zeros((0, 2), dtype=np.int64)
-    bounds = np.searchsorted(qv[:, 0], np.arange(nq + 1, dtype=np.int64))
-    return [qv[bounds[q]:bounds[q + 1], 1] for q in range(nq)]
+def _entry_distinct_slot(entry, slot: int) -> np.ndarray:
+    """Distinct node at tuple position `slot` within one result entry.
+    Read-only: duplicate queries share this array, so an in-place mutation
+    must fail loudly instead of corrupting the sibling's result."""
+    _, nodes, offsets = entry
+    ranks = np.diff(offsets)
+    vals = _slot(nodes, offsets, ranks, slot)
+    out = np.unique(vals[ranks > slot])
+    out.flags.writeable = False
+    return out
 
 
 def query_oracle(graph, s, p, o) -> list[tuple]:

@@ -19,8 +19,21 @@ Two segments share the budget accounting but evict independently:
 
 Entries are numpy triples ``(labels, nodes_flat, offsets)`` — the same
 ragged layout the batch engine produces — and are treated as immutable by
-both the cache and the engine. The grammar is immutable after build, so
-there is no invalidation protocol; ``clear()`` exists for benchmarks.
+both the cache and the engine.
+
+The cache doubles as the **shared tier** of the sharded serving stack
+(``repro.serve.sharded``): entries are keyed by ``(generation, shard,
+S, P, O)``, so one instance can back many per-partition engines without
+cross-shard collisions. :meth:`shard_view` returns a shard-bound adapter
+with the engine-facing ``lookup``/``insert``/``stats`` surface, and
+:meth:`bump_generation` is the invalidation hook for when graphs become
+mutable — bumping a shard's generation makes its entries unreachable
+(and purges them eagerly so they stop consuming the edge budgets).
+
+Segment routing is computed from the *pattern* alone, never the shard or
+generation: a shard-qualified ``?P?`` entry still lands in the predicate
+segment, so bursts of point lookups from any number of shards cannot
+evict it past the segment's own budget floor.
 """
 from __future__ import annotations
 
@@ -117,19 +130,23 @@ class QueryResultCache:
     def __post_init__(self):
         self._general = _LruSegment(self.max_entries, self.max_edges)
         self._predicate = _LruSegment(self.predicate_entries, self.predicate_edges)
+        self._generations: dict[int, int] = {}  # shard -> current generation
 
     # -- routing ---------------------------------------------------------
-    @staticmethod
-    def _segment_key(s: int, p: int, o: int):
+    def _segment_key(self, s: int, p: int, o: int, shard: int):
+        # segment routing depends on the PATTERN only — shard/generation
+        # qualify the key but must never demote a ?P? entry to the general
+        # segment (that would let point-lookup bursts evict it)
         is_pred = s < 0 and o < 0 and p >= 0
-        return is_pred, (int(s), int(p), int(o))
+        gen = self._generations.get(shard, 0)
+        return is_pred, (gen, int(shard), int(s), int(p), int(o))
 
     def _segment(self, is_pred: bool) -> _LruSegment:
         return self._predicate if is_pred else self._general
 
     # -- engine API ------------------------------------------------------
-    def lookup(self, s: int, p: int, o: int) -> CacheEntry | None:
-        is_pred, key = self._segment_key(s, p, o)
+    def lookup(self, s: int, p: int, o: int, shard: int = -1) -> CacheEntry | None:
+        is_pred, key = self._segment_key(s, p, o, shard)
         val = self._segment(is_pred).get(key)
         if val is None:
             self.stats.misses += 1
@@ -139,15 +156,42 @@ class QueryResultCache:
                 self.stats.predicate_hits += 1
         return val
 
-    def insert(self, s: int, p: int, o: int, value: CacheEntry) -> None:
+    def insert(self, s: int, p: int, o: int, value: CacheEntry,
+               shard: int = -1) -> None:
         if len(value[0]) > self.max_entry_edges:
             self.stats.oversize_skips += 1
             return
         for arr in value:  # entries may be returned to callers by reference:
             arr.flags.writeable = False  # fail loudly on in-place mutation
-        is_pred, key = self._segment_key(s, p, o)
+        is_pred, key = self._segment_key(s, p, o, shard)
         self.stats.evictions += self._segment(is_pred).put(key, value)
         self.stats.inserts += 1
+
+    # -- shared-tier API -------------------------------------------------
+    def shard_view(self, shard: int) -> "ShardCacheView":
+        """Shard-bound adapter over this cache (the per-partition engines of
+        a sharded service each get one, so they share budgets and stats
+        without key collisions)."""
+        return ShardCacheView(self, shard)
+
+    def generation(self, shard: int = -1) -> int:
+        return self._generations.get(shard, 0)
+
+    def bump_generation(self, shard: int = -1) -> int:
+        """Invalidate one shard's entries (the hook for graph mutability).
+
+        The shard's generation is incremented — its old entries become
+        unreachable immediately — and stale entries are purged eagerly so
+        the edge budgets reflect live data, not garbage awaiting LRU churn.
+        Other shards' warm entries are untouched. Returns the new generation.
+        """
+        gen = self._generations.get(shard, 0) + 1
+        self._generations[shard] = gen
+        for seg in (self._general, self._predicate):
+            stale = [k for k in seg.entries if k[1] == shard and k[0] < gen]
+            for k in stale:
+                seg.edges -= len(seg.entries.pop(k)[0])
+        return gen
 
     # -- introspection ---------------------------------------------------
     def __len__(self) -> int:
@@ -161,3 +205,43 @@ class QueryResultCache:
         """Drop all entries (stats are kept; reassign `stats` to reset)."""
         self._general.clear()
         self._predicate.clear()
+
+
+class ShardCacheView:
+    """Engine-facing view of a shared :class:`QueryResultCache`, bound to
+    one shard id.
+
+    A :class:`~repro.core.query.TripleQueryEngine` only needs ``lookup`` /
+    ``insert`` / ``stats`` / ``clear`` from its ``cache`` attribute; this
+    adapter provides that surface while folding the shard id into every
+    key, so P partition engines can share one LRU tier (one budget, one
+    stats block, no collisions between shards' results for the same
+    pattern).
+    """
+
+    __slots__ = ("cache", "shard")
+
+    def __init__(self, cache: QueryResultCache, shard: int):
+        self.cache = cache
+        self.shard = int(shard)
+
+    @property
+    def stats(self) -> CacheStats:
+        return self.cache.stats  # shared across all views
+
+    def lookup(self, s: int, p: int, o: int) -> CacheEntry | None:
+        return self.cache.lookup(s, p, o, shard=self.shard)
+
+    def insert(self, s: int, p: int, o: int, value: CacheEntry) -> None:
+        self.cache.insert(s, p, o, value, shard=self.shard)
+
+    def bump_generation(self) -> int:
+        return self.cache.bump_generation(self.shard)
+
+    def clear(self) -> None:
+        """Clears the WHOLE shared tier (benchmark hook); use
+        :meth:`bump_generation` to invalidate just this shard."""
+        self.cache.clear()
+
+    def __len__(self) -> int:
+        return len(self.cache)

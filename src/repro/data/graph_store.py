@@ -63,7 +63,10 @@ class GraphStore:
         return self.engine.neighbors_in(v)
 
     def neighbors_out_batch(self, vs) -> list[np.ndarray]:
-        """Batched `v ? ?` neighborhoods — one frontier, cache-shared."""
+        """Batched `v ? ?` neighborhoods — one frontier, cache-shared.
+
+        View-backed internally: duplicate vs in one batch share a single
+        (read-only) result array instead of per-duplicate copies."""
         return self.engine.neighbors_out_batch(vs)
 
     def neighbors_in_batch(self, vs) -> list[np.ndarray]:
@@ -71,6 +74,12 @@ class GraphStore:
 
     def triples(self, s=None, p=None, o=None) -> list[tuple]:
         return self.engine.query(s, p, o)
+
+    def triples_batch_view(self, s_arr, p_arr, o_arr):
+        """Batched pattern lookup as a :class:`~repro.core.query
+        .QueryResultView` — qid -> shared entry arrays, duplicates never
+        materialized; `.materialize()` recovers the flat array layout."""
+        return self.engine.query_batch_view(s_arr, p_arr, o_arr)
 
     def query_cache_stats(self):
         """Engine result-cache counters (None when caching is disabled)."""

@@ -1,4 +1,11 @@
-"""Distribution utilities: logical-axis sharding rules and collective helpers."""
+"""Distribution utilities: logical-axis sharding rules, collective helpers,
+and graph partitioning for the sharded serving tier."""
+from repro.distributed.partition import (
+    STRATEGIES,
+    PartitionPlan,
+    make_plan,
+    partition_triples,
+)
 from repro.distributed.sharding import (
     LOGICAL_RULES,
     logical_spec,
@@ -7,4 +14,14 @@ from repro.distributed.sharding import (
     zero1_spec,
 )
 
-__all__ = ["LOGICAL_RULES", "logical_spec", "shard", "param_spec", "zero1_spec"]
+__all__ = [
+    "LOGICAL_RULES",
+    "logical_spec",
+    "shard",
+    "param_spec",
+    "zero1_spec",
+    "STRATEGIES",
+    "PartitionPlan",
+    "make_plan",
+    "partition_triples",
+]

@@ -1,4 +1,17 @@
 from repro.serve.engine import GenerationResult, ServeEngine
-from repro.serve.triple_service import ServiceStats, TripleQueryService
+from repro.serve.sharded import ShardedServiceStats, ShardedTripleService
+from repro.serve.triple_service import (
+    MicroBatchService,
+    ServiceStats,
+    TripleQueryService,
+)
 
-__all__ = ["ServeEngine", "GenerationResult", "TripleQueryService", "ServiceStats"]
+__all__ = [
+    "ServeEngine",
+    "GenerationResult",
+    "MicroBatchService",
+    "TripleQueryService",
+    "ServiceStats",
+    "ShardedTripleService",
+    "ShardedServiceStats",
+]

@@ -1,0 +1,254 @@
+"""Sharded multi-engine triple serving: partitioned engines behind a
+scatter-gather router with a shared result-cache tier.
+
+One engine per graph partition (``repro.distributed.partition``), all
+sharing a single :class:`~repro.core.result_cache.QueryResultCache` keyed
+by ``(shard, S, P, O)`` through per-shard views — one budget, one stats
+block, no collisions. The router sends each pattern to the single shard
+that owns it when the partition axis is bound (P under ``predicate_hash``,
+S under ``node_range``) and scatter-gathers the unselective ones (``?P?``
+and ``??O`` under ``node_range``, ``S??``/``??O`` under
+``predicate_hash``, ``???`` always) across every shard in ONE micro-batch
+flush each — a flush never issues more than one engine call per shard per
+``max_batch`` chunk, regardless of how many patterns scatter.
+
+Merging is view-based end to end: each shard answers with shared
+per-pattern entry arrays (:class:`~repro.core.query.QueryResultView`), a
+scattered pattern's answer is the concatenation of its per-shard entries
+(partitions are disjoint, so no dedup), and duplicate tickets share one
+merged entry. Merged results are themselves cached in a reserved
+namespace of the shared tier, so a *warm* scattered pattern is one
+lookup — no fan-out, no re-concatenation. ``flush()`` materializes tuple
+lists per *unique* pattern — ``flush_view()`` is the zero-replication
+escape hatch.
+
+``invalidate(shard)`` bumps the shared cache's per-shard generation — the
+hook for the day partitions become mutable: rewriting one shard's grammar
+must not cold-start the other shards' warm entries.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import (
+    Hypergraph,
+    LabelTable,
+    QueryResultCache,
+    TripleQueryEngine,
+    compress,
+)
+from repro.core.flatten import concat_ragged
+from repro.core.query import QueryResultView, _env_flag, _freeze_entry
+from repro.distributed.partition import (
+    PartitionPlan,
+    make_plan,
+    partition_triples,
+)
+from repro.serve.triple_service import MicroBatchService
+
+# sentinel: "create a default shared QueryResultCache unless disabled by env"
+_DEFAULT_CACHE = object()
+
+# reserved shard id for cross-shard MERGED scattered results in the shared
+# tier (real shards are >= 0; -1 is the single-engine default namespace).
+# A warm scattered pattern is then one lookup instead of a full fan-out +
+# re-concatenation; invalidate() bumps this namespace alongside any shard,
+# since a merged entry depends on every shard's data.
+_MERGED_SHARD = -2
+
+
+@dataclass
+class ShardedServiceStats:
+    """Rolling counters for the scatter-gather router.
+
+    `owned` / `scattered` count *unique* patterns per flush (the unit of
+    routing work); `shard_batches` counts per-shard engine micro-batch
+    executions — each flush issues up to ``ceil(sub_batch / max_batch)``
+    chunks per shard, where a shard's sub-batch is its owned patterns
+    plus every scattered one.
+    """
+
+    queries: int = 0
+    flushes: int = 0
+    results: int = 0
+    unique_patterns: int = 0
+    owned: int = 0
+    scattered: int = 0
+    merged_hits: int = 0  # scattered patterns answered from the merged tier
+    shard_batches: int = 0
+    total_s: float = 0.0
+    last_flush_qps: float = 0.0
+
+    @property
+    def qps(self) -> float:
+        return self.queries / self.total_s if self.total_s > 0 else 0.0
+
+
+class ShardedTripleService(MicroBatchService):
+    """Scatter-gather front end over P partitioned :class:`TripleQueryEngine`s.
+
+    Construct directly from pre-built engines + plan (engines must cover
+    plan.n_shards, in shard order), or via :meth:`build` from raw triples.
+    The request plane (`submit`/`flush`/`query_many`) is the shared
+    :class:`~repro.serve.triple_service.MicroBatchService` surface.
+    """
+
+    def __init__(self, engines: list[TripleQueryEngine], plan: PartitionPlan,
+                 cache: QueryResultCache | None = None, max_batch: int = 1024):
+        super().__init__()
+        assert len(engines) == plan.n_shards, \
+            f"{len(engines)} engines for {plan.n_shards} shards"
+        self.engines = engines
+        self.plan = plan
+        self.cache = cache  # the shared tier (engines hold shard views of it)
+        self.max_batch = int(max_batch)
+        self.stats = ShardedServiceStats()
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def build(cls, triples: np.ndarray, n_nodes: int, n_preds: int,
+              n_shards: int = 4, strategy: str = "predicate_hash",
+              config=None, cache=_DEFAULT_CACHE, crossover: int | None = None,
+              max_batch: int = 1024) -> "ShardedTripleService":
+        """Partition -> compress each subgraph -> one engine per shard.
+
+        `cache` is the shared result-cache tier (default: one
+        :class:`QueryResultCache` shared by all shards, disabled by
+        ``ITR_RESULT_CACHE=0``; pass ``None`` to disable explicitly).
+        """
+        plan = make_plan(strategy, n_shards, n_nodes, n_preds, triples=triples)
+        if cache is _DEFAULT_CACHE:
+            cache = QueryResultCache() if _env_flag("ITR_RESULT_CACHE", True) else None
+        engines = []
+        for k, sub in enumerate(partition_triples(triples, plan)):
+            table = LabelTable.terminals([2] * n_preds)
+            graph = Hypergraph.from_triples(sub, n_nodes)
+            grammar, _ = compress(graph, table, config)
+            engines.append(TripleQueryEngine(
+                grammar,
+                cache=cache.shard_view(k) if cache is not None else None,
+                crossover=crossover))
+        return cls(engines, plan, cache, max_batch)
+
+    @property
+    def n_shards(self) -> int:
+        return self.plan.n_shards
+
+    # -- request plane ---------------------------------------------------
+    def flush_view(self) -> QueryResultView:
+        """Execute all pending patterns; results as a shared-entry view
+        indexed by ticket (duplicate tickets share one merged entry).
+        An empty flush is a no-op: nothing counted, no time accrued."""
+        cols = self._take_pending()
+        if cols is None:
+            return QueryResultView.empty()
+        s, p, o = cols
+        n = len(s)
+        t0 = time.perf_counter()
+        view = self._run(s, p, o)
+        dt = time.perf_counter() - t0
+        st = self.stats
+        st.queries += n
+        st.flushes += 1
+        st.results += view.total_results()
+        st.total_s += dt
+        st.last_flush_qps = n / dt if dt > 0 else 0.0
+        return view
+
+    def query(self, s: int | None, p: int | None, o: int | None) -> tuple:
+        """Submit one pattern and flush; returns ITS results even if other
+        submissions were already pending (they are flushed alongside)."""
+        ticket = self.submit(s, p, o)
+        return self.flush()[ticket]
+
+    # -- scatter-gather core ---------------------------------------------
+    def _run(self, s: np.ndarray, p: np.ndarray, o: np.ndarray) -> QueryResultView:
+        # service-level dedup: route and merge each unique pattern once
+        key = np.stack([s, p, o], axis=1)
+        uniq, inv = np.unique(key, axis=0, return_inverse=True)
+        inv = inv.reshape(-1)
+        nu = len(uniq)
+        u_s, u_p, u_o = uniq[:, 0], uniq[:, 1], uniq[:, 2]
+        routes = self.plan.route_batch(u_s, u_p, u_o)
+        cache = self.cache
+        self.stats.unique_patterns += nu
+
+        entries: list = [None] * nu
+        # scattered patterns: the merged cross-shard result is itself cached
+        # (reserved namespace), so a warm repeat is one lookup, not a fan-out
+        scatter: list[int] = []
+        for u in np.flatnonzero(routes < 0):
+            u = int(u)
+            hit = cache.lookup(u_s[u], u_p[u], u_o[u], shard=_MERGED_SHARD) \
+                if cache is not None else None
+            if hit is None:
+                scatter.append(u)
+            else:
+                entries[u] = hit
+                self.stats.merged_hits += 1
+        scatter = np.asarray(scatter, dtype=np.int64)
+        self.stats.owned += int((routes >= 0).sum())
+        self.stats.scattered += int((routes < 0).sum())
+
+        # merge-missing scattered patterns accumulate one chunk per shard
+        parts: dict[int, list] = {int(u): [] for u in scatter}
+        for k, engine in enumerate(self.engines):
+            own = np.flatnonzero(routes == k)
+            idx = own if len(scatter) == 0 else np.concatenate([own, scatter])
+            if len(idx) == 0:
+                continue
+            pos_entries = self._shard_entries(engine, u_s[idx], u_p[idx], u_o[idx])
+            for j, u in enumerate(own):
+                entries[int(u)] = pos_entries[j]
+            for j, u in enumerate(scatter):
+                parts[int(u)].append(pos_entries[len(own) + j])
+        for u, chunks in parts.items():
+            # merged chunks are shared across duplicate tickets: read-only.
+            # A scattered result is deliberately held twice in the shared
+            # tier (per-shard chunks + this merged copy): the merged entry
+            # makes warm repeats O(1), while the per-shard chunks mean a
+            # single-shard invalidate() re-executes ONE shard, not all P.
+            entry = _freeze_entry(concat_ragged(chunks))
+            entries[u] = entry
+            if cache is not None:
+                cache.insert(u_s[u], u_p[u], u_o[u], entry, shard=_MERGED_SHARD)
+        for u in range(nu):  # shards==0 or routing gaps: empty result
+            if entries[u] is None:
+                entries[u] = _freeze_entry(concat_ragged([]))
+        return QueryResultView(entries, inv)
+
+    def _shard_entries(self, engine: TripleQueryEngine, s, p, o) -> list:
+        """One shard's entries for its sub-batch, in submission order —
+        one engine micro-batch per `max_batch` chunk."""
+        out: list = []
+        for lo in range(0, len(s), self.max_batch):
+            hi = min(lo + self.max_batch, len(s))
+            view = engine.query_batch_view(s[lo:hi], p[lo:hi], o[lo:hi])
+            out.extend(view.entry(i) for i in range(view.n_queries))
+            self.stats.shard_batches += 1
+        return out
+
+    # -- maintenance / introspection -------------------------------------
+    def invalidate(self, shard: int | None = None) -> None:
+        """Invalidate cached results (generation bump on the shared tier):
+        one shard's entries, or every shard's when `shard` is None. The
+        hook for mutable partitions — other shards stay warm. Merged
+        cross-shard entries depend on every shard, so their namespace is
+        bumped on any invalidation."""
+        if self.cache is None:
+            return
+        shards = range(self.n_shards) if shard is None else [shard]
+        for k in shards:
+            self.cache.bump_generation(k)
+        self.cache.bump_generation(_MERGED_SHARD)
+
+    def cache_stats(self):
+        """Shared-tier cache counters (None when caching is disabled)."""
+        return self.cache.stats if self.cache is not None else None
+
+    def shard_sizes(self) -> list[int]:
+        """Start-graph edges per shard (partition balance diagnostics)."""
+        return [int(e.grammar.start.n_edges) for e in self.engines]

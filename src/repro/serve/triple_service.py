@@ -4,9 +4,12 @@ Production traffic arrives as independent (S,P,O) lookups; answering them
 one at a time wastes the engine's batch path. `TripleQueryService`
 accumulates submitted patterns into a pending micro-batch and executes the
 whole batch in ONE level-synchronous frontier (`TripleQueryEngine
-.query_batch_arrays`), so per-request Python overhead is paid once per
-flush instead of once per query. `query_many` is the synchronous
-convenience wrapper (submit-all + flush).
+.query_batch_view`), so per-request Python overhead is paid once per
+flush instead of once per query. Results flow through
+:class:`~repro.core.query.QueryResultView` internally — duplicate tickets
+share one per-pattern entry instead of replicated copies (`flush_view`
+exposes the view; `flush` materializes shared tuple lists per ticket).
+`query_many` is the synchronous convenience wrapper (submit-all + flush).
 
 The engine's cross-request result cache makes dedup streaming: a pattern
 seen in any earlier flush (or earlier in this one) is answered from the
@@ -25,7 +28,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.query import TripleQueryEngine
+from repro.core.query import QueryResultView, TripleQueryEngine
 
 
 @dataclass
@@ -65,22 +68,20 @@ class _Pending:
     o: list = field(default_factory=list)
 
 
-class TripleQueryService:
-    """Micro-batching front end over a :class:`TripleQueryEngine`.
+class MicroBatchService:
+    """Shared request plane for micro-batching query services.
 
-    `submit` returns a ticket (index into the next flush); `flush` runs the
-    pending batch and returns one result list per ticket. `max_batch`
-    bounds a single frontier's width: larger pending sets are executed in
-    chunks so memory stays flat under unselective patterns.
+    Provides the pending queue (`submit` -> ticket, None = unbound slot,
+    encoded as -1), the view-backed `flush` (shared tuple lists per
+    unique pattern — treat results as read-only) and `query_many`.
+    Subclasses implement :meth:`flush_view` and start it with
+    :meth:`_take_pending`, which swaps the queue out and returns aligned
+    int64 columns (or ``None`` for the empty-flush no-op).
     """
 
-    def __init__(self, engine: TripleQueryEngine, max_batch: int = 1024):
-        self.engine = engine
-        self.max_batch = int(max_batch)
-        self.stats = ServiceStats()
+    def __init__(self):
         self._pending = _Pending()
 
-    # -- request plane ---------------------------------------------------
     def submit(self, s: int | None, p: int | None, o: int | None) -> int:
         """Queue one (S,P,O) pattern; returns its ticket in the next flush."""
         ticket = len(self._pending.s)
@@ -93,33 +94,75 @@ class TripleQueryService:
     def pending(self) -> int:
         return len(self._pending.s)
 
-    def flush(self) -> list[list[tuple]]:
+    def _take_pending(self):
+        batch, self._pending = self._pending, _Pending()
+        if not batch.s:
+            return None
+        return (np.asarray(batch.s, dtype=np.int64),
+                np.asarray(batch.p, dtype=np.int64),
+                np.asarray(batch.o, dtype=np.int64))
+
+    def flush_view(self) -> QueryResultView:
+        raise NotImplementedError
+
+    def flush(self) -> list[tuple]:
         """Execute all pending queries; returns results indexed by ticket.
 
-        An empty flush is a no-op: no batch is counted, no time accrued.
+        View-backed: each result sequence is built once per unique
+        pattern and shared — as an immutable tuple — across duplicate
+        tickets.
         """
-        batch, self._pending = self._pending, _Pending()
-        n = len(batch.s)
-        if n == 0:
-            return []
-        s = np.asarray(batch.s, dtype=np.int64)
-        p = np.asarray(batch.p, dtype=np.int64)
-        o = np.asarray(batch.o, dtype=np.int64)
+        return self.flush_view().tuple_lists()
+
+    def query_many(self, patterns) -> list[tuple]:
+        """patterns: iterable of (s, p, o) with None = unbound."""
+        for s, p, o in patterns:
+            self.submit(s, p, o)
+        return self.flush()
+
+
+class TripleQueryService(MicroBatchService):
+    """Micro-batching front end over a :class:`TripleQueryEngine`.
+
+    `submit` returns a ticket (index into the next flush); `flush` runs the
+    pending batch and returns one result list per ticket. `max_batch`
+    bounds a single frontier's width: larger pending sets are executed in
+    chunks so memory stays flat under unselective patterns.
+    """
+
+    def __init__(self, engine: TripleQueryEngine, max_batch: int = 1024):
+        super().__init__()
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.stats = ServiceStats()
+
+    def flush_view(self) -> QueryResultView:
+        """Execute all pending queries; results as a shared-entry view
+        indexed by ticket (:class:`QueryResultView`) — duplicate tickets
+        share one entry, nothing is replicated. An empty flush is a no-op:
+        no batch is counted, no time accrued.
+        """
+        cols = self._take_pending()
+        if cols is None:
+            return QueryResultView.empty()
+        s, p, o = cols
+        n = len(s)
         cache = self.engine.cache
         before = cache.stats.snapshot() if cache is not None else None
-        out: list[list[tuple]] = []
+        views: list[QueryResultView] = []
         t0 = time.perf_counter()
         executed_uncached = 0
         for lo in range(0, n, self.max_batch):
             hi = min(lo + self.max_batch, n)
-            out.extend(self.engine.query_batch(s[lo:hi], p[lo:hi], o[lo:hi]))
+            chunk = self.engine.query_batch_view(s[lo:hi], p[lo:hi], o[lo:hi])
+            views.append(chunk)
             self.stats.batches += 1
             if before is None:  # no cache: in-batch dedup still collapses
-                executed_uncached += len(np.unique(
-                    np.stack([s[lo:hi], p[lo:hi], o[lo:hi]], axis=1), axis=0))
+                executed_uncached += len(chunk.entries)
+        view = views[0] if len(views) == 1 else QueryResultView.concat(views)
         dt = time.perf_counter() - t0
         self.stats.queries += n
-        self.stats.results += sum(len(r) for r in out)
+        self.stats.results += view.total_results()
         self.stats.total_s += dt
         self.stats.last_batch_qps = n / dt if dt > 0 else 0.0
         if before is not None:
@@ -129,11 +172,4 @@ class TripleQueryService:
             self.stats.executed += cache.stats.misses - before.misses
         else:
             self.stats.executed += executed_uncached
-        return out
-
-    # -- synchronous convenience ----------------------------------------
-    def query_many(self, patterns) -> list[list[tuple]]:
-        """patterns: iterable of (s, p, o) with None = unbound."""
-        for s, p, o in patterns:
-            self.submit(s, p, o)
-        return self.flush()
+        return view

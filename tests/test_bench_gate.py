@@ -1,0 +1,156 @@
+"""CI benchmark-regression gate: metric flattening, tolerance directions,
+baseline recording (`benchmarks.run --smoke --check`)."""
+import json
+
+from benchmarks.run import (
+    check_regressions,
+    conservative_envelope,
+    gate_metrics,
+    update_baseline,
+    update_baseline_from,
+)
+
+
+def _mini_bench(speedup=10.0, dispatch=1.0, warm=5.0, view=4.0, sg=2.0):
+    return {
+        "patterns": {"s??": {"speedup_vs_scalar": speedup}},
+        "warm_cache": {
+            "patterns": {"?p?": {"warm_speedup_vs_uncached": warm}},
+            "point_lookup": {"warm_speedup": 20.0},
+        },
+        "crossover_dispatch": {
+            "patterns": {"spo": {"dispatched_vs_scalar": dispatch}}},
+        "sharded": {
+            "warm_view": {"speedup_vs_materialized": view},
+            "scatter_gather": {"?p?": {"sharded_vs_single": sg}},
+        },
+    }
+
+
+def _write(tmp_path, smoke, baseline_metrics):
+    smoke_p = tmp_path / "smoke.json"
+    base_p = tmp_path / "baseline.json"
+    smoke_p.write_text(json.dumps(smoke))
+    base_p.write_text(json.dumps(
+        {"smoke_baseline": {"metrics": baseline_metrics}}))
+    return str(smoke_p), str(base_p)
+
+
+def test_gate_metrics_flattening():
+    m = gate_metrics(_mini_bench())
+    assert m["patterns.s??.speedup_vs_scalar"] == 10.0
+    assert m["warm_cache.?p?.warm_speedup_vs_uncached"] == 5.0
+    assert m["warm_cache.point_lookup.warm_speedup"] == 20.0
+    assert m["crossover_dispatch.spo.dispatched_vs_scalar"] == 1.0
+    assert m["sharded.warm_view.speedup_vs_materialized"] == 4.0
+    assert m["sharded.scatter_gather.?p?.sharded_vs_single"] == 2.0
+    assert gate_metrics({}) == {}  # sections all optional
+
+
+def test_gate_passes_within_tolerance(tmp_path):
+    # everything drifted by 2x in the bad direction — inside 3x tolerance
+    smoke = _mini_bench(speedup=5.0, dispatch=2.0, warm=2.5, view=2.0, sg=4.0)
+    sp, bp = _write(tmp_path, smoke, gate_metrics(_mini_bench()))
+    assert check_regressions(sp, bp, tolerance=3.0) == 0
+
+
+def test_gate_fails_on_higher_is_better_collapse(tmp_path):
+    smoke = _mini_bench(speedup=2.0)  # 10 -> 2 is past the 10/3 floor
+    sp, bp = _write(tmp_path, smoke, gate_metrics(_mini_bench()))
+    assert check_regressions(sp, bp, tolerance=3.0) == 1
+
+
+def test_gate_fails_on_lower_is_better_blowup(tmp_path):
+    # dispatch ratio 1.0 -> 4.0 exceeds the 3x ceiling; scatter 2.0 -> 7.0 too
+    smoke = _mini_bench(dispatch=4.0, sg=7.0)
+    sp, bp = _write(tmp_path, smoke, gate_metrics(_mini_bench()))
+    assert check_regressions(sp, bp, tolerance=3.0) == 2
+
+
+def test_gate_skips_new_smoke_metrics_without_baseline(tmp_path):
+    base = gate_metrics(_mini_bench())
+    for k in list(base):  # baseline predates the sharded section
+        if k.startswith("sharded."):
+            del base[k]
+    sp, bp = _write(tmp_path, _mini_bench(), base)
+    assert check_regressions(sp, bp, tolerance=3.0) == 0
+
+
+def test_gate_fails_when_baseline_metric_vanishes_from_smoke(tmp_path):
+    """A gated section disappearing from the smoke output (renamed/dropped
+    key) must FAIL, not silently skip — that's a coverage loss."""
+    smoke = _mini_bench()
+    del smoke["sharded"]  # 2 baseline metrics no longer emitted
+    sp, bp = _write(tmp_path, smoke, gate_metrics(_mini_bench()))
+    assert check_regressions(sp, bp, tolerance=3.0) == 2
+
+
+def test_gate_uses_recorded_tolerance_by_default(tmp_path):
+    smoke = _mini_bench(speedup=2.5)  # 4x collapse: outside 3x, inside 5x
+    sp = tmp_path / "smoke.json"
+    bp = tmp_path / "baseline.json"
+    sp.write_text(json.dumps(smoke))
+    bp.write_text(json.dumps({"smoke_baseline": {
+        "tolerance": 5.0, "metrics": gate_metrics(_mini_bench())}}))
+    assert check_regressions(str(sp), str(bp)) == 0       # recorded 5x wins
+    assert check_regressions(str(sp), str(bp), tolerance=3.0) == 1  # override
+
+
+def test_gate_errors_without_baseline_section(tmp_path):
+    sp = tmp_path / "smoke.json"
+    bp = tmp_path / "baseline.json"
+    sp.write_text(json.dumps(_mini_bench()))
+    bp.write_text(json.dumps({"patterns": {}}))  # no smoke_baseline
+    assert check_regressions(str(sp), str(bp), tolerance=3.0) == 1
+
+
+def test_update_baseline_roundtrip(tmp_path):
+    sp = tmp_path / "smoke.json"
+    bp = tmp_path / "baseline.json"
+    sp.write_text(json.dumps(_mini_bench()))
+    bp.write_text(json.dumps({"patterns": {"keep": {"speedup_vs_scalar": 1.0}}}))
+    update_baseline(str(sp), str(bp), tolerance=3.0)
+    doc = json.loads(bp.read_text())
+    assert doc["patterns"] == {"keep": {"speedup_vs_scalar": 1.0}}  # merged, not replaced
+    assert doc["smoke_baseline"]["metrics"] == gate_metrics(_mini_bench())
+    # a freshly recorded baseline always gates green against itself
+    assert check_regressions(str(sp), str(bp), tolerance=3.0) == 0
+
+
+def test_conservative_envelope_takes_worst_side():
+    runs = [gate_metrics(_mini_bench(speedup=10.0, dispatch=1.0)),
+            gate_metrics(_mini_bench(speedup=4.0, dispatch=2.5)),
+            gate_metrics(_mini_bench(speedup=7.0, dispatch=1.5))]
+    env = conservative_envelope(runs)
+    assert env["patterns.s??.speedup_vs_scalar"] == 4.0       # min: higher-better
+    assert env["crossover_dispatch.spo.dispatched_vs_scalar"] == 2.5  # max
+    # a metric missing from some runs still lands in the envelope
+    partial = dict(runs[0])
+    del partial["patterns.s??.speedup_vs_scalar"]
+    assert "patterns.s??.speedup_vs_scalar" in conservative_envelope([partial, runs[1]])
+
+
+def test_update_baseline_from_envelope_gates_noise_green(tmp_path):
+    """Every run that contributed to the envelope must gate green against
+    it — the envelope is exactly the worst side seen."""
+    noisy = [_mini_bench(speedup=9.0, warm=1.8), _mini_bench(speedup=3.5, warm=6.0)]
+    bp = tmp_path / "baseline.json"
+    bp.write_text(json.dumps({}))
+    update_baseline_from(noisy, str(bp), tolerance=3.0)
+    assert json.loads(bp.read_text())["smoke_baseline"]["runs"] == 2
+    for bench in noisy:
+        sp = tmp_path / "smoke.json"
+        sp.write_text(json.dumps(bench))
+        assert check_regressions(str(sp), str(bp)) == 0
+
+
+def test_update_baseline_keeps_custom_tolerance(tmp_path):
+    sp = tmp_path / "smoke.json"
+    bp = tmp_path / "baseline.json"
+    sp.write_text(json.dumps(_mini_bench()))
+    bp.write_text(json.dumps({}))
+    update_baseline(str(sp), str(bp), tolerance=5.0)
+    update_baseline(str(sp), str(bp))  # refresh without --tolerance
+    assert json.loads(bp.read_text())["smoke_baseline"]["tolerance"] == 5.0
+    update_baseline(str(sp), str(bp), tolerance=2.0)  # explicit override
+    assert json.loads(bp.read_text())["smoke_baseline"]["tolerance"] == 2.0

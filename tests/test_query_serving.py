@@ -217,6 +217,46 @@ def test_crossover_env_override(monkeypatch):
     assert engine.crossover == 0
 
 
+def test_crossover_env_invalid_values_fall_back_to_calibration(monkeypatch):
+    """Unparseable ITR_QUERY_CROSSOVER must not crash engine build — the
+    knob is ignored and the width is calibrated as if unset."""
+    for bogus in ("not-a-number", "3.5", "1e3", ""):
+        monkeypatch.setenv("ITR_QUERY_CROSSOVER", bogus)
+        engine, _, _ = _triple_engine(seed=4)
+        assert 0 <= engine.crossover <= 8, bogus
+
+
+def test_crossover_env_negative_clamps_to_zero(monkeypatch):
+    monkeypatch.setenv("ITR_QUERY_CROSSOVER", "-3")
+    engine, _, _ = _triple_engine(seed=4)
+    assert engine.crossover == 0  # negative width means "always frontier"
+
+
+def test_crossover_env_whitespace_is_stripped(monkeypatch):
+    monkeypatch.setenv("ITR_QUERY_CROSSOVER", "  6  ")
+    engine, _, _ = _triple_engine(seed=4)
+    assert engine.crossover == 6
+
+
+def test_result_cache_env_falsy_spellings(monkeypatch):
+    """Every documented falsy spelling of ITR_RESULT_CACHE disables the
+    default cache; anything else (including unset/empty) keeps it on."""
+    for off in ("0", "off", "OFF", "false", "False", "no", " No "):
+        monkeypatch.setenv("ITR_RESULT_CACHE", off)
+        engine, _, _ = _triple_engine(seed=4)
+        assert engine.cache is None, off
+    for on in ("1", "on", "true", "yes", "anything-else"):
+        monkeypatch.setenv("ITR_RESULT_CACHE", on)
+        engine, _, _ = _triple_engine(seed=4)
+        assert engine.cache is not None, on
+    monkeypatch.delenv("ITR_RESULT_CACHE", raising=False)
+    engine, _, _ = _triple_engine(seed=4)
+    assert engine.cache is not None  # default: enabled
+    monkeypatch.setenv("ITR_RESULT_CACHE", "")
+    engine, _, _ = _triple_engine(seed=4)
+    assert engine.cache is not None  # empty string = unset, not falsy
+
+
 def test_crossover_calibration_runs():
     engine, _, _ = _triple_engine(seed=5)  # no override: measured at build
     assert 0 <= engine.crossover <= 8

@@ -1,0 +1,476 @@
+"""Sharded serving tier: partition plans, scatter-gather routing parity vs
+the single-engine oracle, the shared (shard, S, P, O) cache tier with
+generation invalidation, and the view-based result API."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Hypergraph,
+    LabelTable,
+    QueryResultCache,
+    QueryResultView,
+    TripleQueryEngine,
+    compress,
+    concat_ragged,
+    query_oracle,
+)
+from repro.distributed.partition import make_plan, partition_triples
+from repro.serve.sharded import ShardedTripleService
+from repro.serve.triple_service import TripleQueryService
+
+PATTERN_NAMES = ["s??", "?p?", "??o", "sp?", "s?o", "?po", "spo", "???"]
+
+
+def _random_triples(seed, n_nodes=15, n_preds=3, n_edges=80):
+    rng = np.random.default_rng(seed)
+    return np.stack(
+        [rng.integers(0, n_nodes, n_edges), rng.integers(0, n_preds, n_edges),
+         rng.integers(0, n_nodes, n_edges)], axis=1)
+
+
+def _single_engine(triples, n_nodes, n_preds):
+    table = LabelTable.terminals([2] * n_preds)
+    g = Hypergraph.from_triples(triples, n_nodes)
+    grammar, _ = compress(g, table)
+    return TripleQueryEngine(grammar, cache=None, crossover=0), g
+
+
+def _bind(pattern, s, p, o):
+    return (s if pattern[0] == "s" else None,
+            p if pattern[1] == "p" else None,
+            o if pattern[2] == "o" else None)
+
+
+# ---------------------------------------------------------------- partition
+def test_partition_covers_disjointly():
+    triples = _random_triples(0, n_nodes=20, n_preds=5, n_edges=120)
+    for strategy in ("predicate_hash", "node_range"):
+        for n_shards in (1, 3, 7):
+            plan = make_plan(strategy, n_shards, 20, 5)
+            parts = partition_triples(triples, plan)
+            assert len(parts) == n_shards
+            merged = np.concatenate(parts)
+            # disjoint cover: same multiset of rows
+            assert sorted(map(tuple, merged)) == sorted(map(tuple, triples))
+
+
+def test_partition_owning_axis():
+    triples = _random_triples(1, n_nodes=20, n_preds=5, n_edges=120)
+    plan = make_plan("predicate_hash", 3, 20, 5)
+    for k, part in enumerate(partition_triples(triples, plan)):
+        for _, p, _ in part:  # every triple's predicate routes to its shard
+            assert plan.route(-1, int(p), -1) == k
+    plan = make_plan("node_range", 3, 20, 5)
+    for k, part in enumerate(partition_triples(triples, plan)):
+        for s, _, _ in part:
+            assert plan.route(int(s), -1, -1) == k
+
+
+def test_partition_routing_scatter_rules():
+    ph = make_plan("predicate_hash", 4, 100, 8)
+    assert ph.route(5, -1, -1) == -1      # S?? scatters under predicate hash
+    assert ph.route(-1, -1, 7) == -1      # ??O scatters
+    assert ph.route(-1, -1, -1) == -1     # ??? always scatters
+    assert ph.route(5, 3, 7) == ph.route(-1, 3, -1)  # P owns regardless of S/O
+    nr = make_plan("node_range", 4, 100, 8)
+    assert nr.route(-1, 3, -1) == -1      # ?P? scatters under node range
+    assert nr.route(-1, -1, 7) == -1      # ??O scatters (O is not the axis)
+    assert nr.route(5, 3, 7) == nr.route(5, -1, -1)  # S owns regardless of P/O
+    rb = nr.route_batch(np.array([5, -1]), np.array([3, 3]), np.array([7, -1]))
+    assert rb[0] == nr.route(5, 3, 7) and rb[1] == -1
+
+
+def test_partition_rejects_bad_config():
+    from repro.distributed.partition import PartitionPlan
+
+    with pytest.raises(ValueError):
+        make_plan("by-vibes", 2, 10, 3)
+    with pytest.raises(ValueError):
+        make_plan("node_range", 0, 10, 3)
+    with pytest.raises(ValueError):  # node_range without boundaries
+        PartitionPlan("node_range", 4, 10, 3)
+    with pytest.raises(ValueError):  # wrong boundary count
+        PartitionPlan("node_range", 4, 10, 3,
+                      boundaries=np.array([0, 5, 10]))
+    with pytest.raises(ValueError):  # non-monotonic boundaries
+        PartitionPlan("node_range", 2, 10, 3,
+                      boundaries=np.array([0, 7, 5]))
+
+
+def test_node_range_quantile_boundaries_balance_skewed_subjects():
+    """Subjects concentrated in a prefix of the id space (the RDF-typical
+    shape) must still spread across shards: boundaries follow the subject
+    distribution, not even id ranges."""
+    rng = np.random.default_rng(2)
+    n_nodes = 1000
+    subs = rng.integers(0, 40, 400)  # subjects live in [0, 40) of [0, 1000)
+    triples = np.stack([subs, rng.integers(0, 3, 400),
+                        rng.integers(0, n_nodes, 400)], axis=1)
+    plan = make_plan("node_range", 4, n_nodes, 3, triples=triples)
+    parts = partition_triples(triples, plan)
+    sizes = [len(p) for p in parts]
+    assert sum(sizes) == 400
+    assert max(sizes) <= 2 * (400 // 4 + 40)  # no shard holds ~everything
+    assert sum(1 for s in sizes if s > 0) >= 3
+    # routing agrees with placement for every triple
+    for k, part in enumerate(parts):
+        for s, _, _ in part:
+            assert plan.route(int(s), -1, -1) == k
+
+
+def test_node_range_more_shards_than_nodes():
+    triples = np.array([[0, 0, 1], [1, 1, 0], [2, 2, 2]], dtype=np.int64)
+    plan = make_plan("node_range", 8, 3, 3)
+    parts = partition_triples(triples, plan)
+    assert sum(len(p) for p in parts) == 3
+    svc = ShardedTripleService.build(triples, 3, 3, n_shards=8,
+                                     strategy="node_range")
+    assert sorted(svc.query(None, None, None)) == \
+        sorted((int(p), (int(s), int(o))) for s, p, o in triples)
+
+
+# ---------------------------------------------------------------- parity
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_sharded_parity_all_patterns_random_grammars(seed):
+    """ShardedTripleService == single-engine query_scalar oracle for every
+    (S,P,O) binding pattern, both strategies, several shard counts —
+    including a second pass served from the shared cache."""
+    rng = np.random.default_rng(seed)
+    n_nodes, n_preds = 14, 3
+    triples = _random_triples(seed, n_nodes, n_preds, n_edges=60)
+    oracle, _ = _single_engine(triples, n_nodes, n_preds)
+    s0, p0, o0 = (int(v) for v in triples[rng.integers(0, len(triples))])
+    # a miss row too: bindings that may match nothing
+    s1, p1, o1 = n_nodes - 1, n_preds - 1, 0
+    patterns = [_bind(pat, s0, p0, o0) for pat in PATTERN_NAMES] + \
+               [_bind(pat, s1, p1, o1) for pat in PATTERN_NAMES]
+    want = [sorted(oracle.query_scalar(qs, qp, qo)) for qs, qp, qo in patterns]
+    for strategy in ("predicate_hash", "node_range"):
+        for n_shards in (1, 2, 4):
+            svc = ShardedTripleService.build(
+                triples, n_nodes, n_preds, n_shards=n_shards, strategy=strategy)
+            got = svc.query_many(patterns)
+            assert [sorted(r) for r in got] == want, (strategy, n_shards)
+            replay = svc.query_many(patterns)  # warm: served from shared tier
+            assert [sorted(r) for r in replay] == want, (strategy, n_shards)
+            assert svc.cache.stats.hits > 0
+
+
+def test_sharded_duplicate_tickets_share_entries():
+    triples = _random_triples(3)
+    svc = ShardedTripleService.build(triples, 15, 3, n_shards=3,
+                                     strategy="node_range")
+    p0 = int(triples[0, 1])
+    for _ in range(3):
+        svc.submit(None, p0, None)  # scattered, duplicated
+    view = svc.flush_view()
+    assert view.n_queries == 3 and len(view.entries) == 1
+    assert view.entry(0) is view.entry(1) is view.entry(2)
+    # merged scatter entries are shared -> mutation must fail loudly
+    labels, nodes, _ = view.entry(0)
+    for arr in (labels, nodes):
+        if len(arr):
+            with pytest.raises(ValueError):
+                arr[0] = -1
+    # flush() shares one IMMUTABLE result tuple per unique pattern —
+    # mutation fails loudly instead of corrupting sibling tickets
+    for _ in range(3):
+        svc.submit(None, p0, None)
+    out = svc.flush()
+    assert out[0] is out[1] is out[2]
+    assert isinstance(out[0], tuple)
+    with pytest.raises((TypeError, AttributeError)):
+        out[0][0] = None
+
+
+def test_sharded_chunked_flush_matches_and_counts_batches():
+    triples = _random_triples(4)
+    oracle, _ = _single_engine(triples, 15, 3)
+    svc = ShardedTripleService.build(triples, 15, 3, n_shards=2, max_batch=2)
+    subjects = [int(s) for s in triples[:5, 0]]
+    got = svc.query_many([(s, None, None) for s in subjects])
+    for r, s in zip(got, subjects):
+        assert sorted(r) == sorted(oracle.query_scalar(s, None, None))
+    assert svc.stats.shard_batches >= 2  # max_batch forced chunking
+    assert svc.stats.queries == 5 and svc.stats.flushes == 1
+
+
+def test_sharded_empty_flush_and_stats():
+    svc = ShardedTripleService.build(_random_triples(5), 15, 3, n_shards=2)
+    assert svc.flush() == []
+    assert svc.stats.flushes == 0 and svc.stats.queries == 0
+    svc.submit(int(svc.engines[0].grammar.start.nodes_flat[0]), None, None)
+    svc.flush()
+    assert svc.stats.flushes == 1 and svc.stats.unique_patterns == 1
+    assert svc.stats.owned + svc.stats.scattered == 1
+
+
+def test_sharded_query_returns_own_ticket_with_pending_queue():
+    """Regression: query() must return the pattern it submitted, not
+    ticket 0, when other submissions are already pending."""
+    triples = _random_triples(13)
+    oracle, _ = _single_engine(triples, 15, 3)
+    svc = ShardedTripleService.build(triples, 15, 3, n_shards=2)
+    s0, s1 = int(triples[0, 0]), int(triples[1, 0])
+    svc.submit(s0, None, None)  # someone else's pending ticket
+    got = svc.query(s1, None, None)
+    assert sorted(got) == sorted(oracle.query_scalar(s1, None, None))
+    assert svc.pending == 0  # the pending ticket was flushed alongside
+
+
+def test_neighbors_batch_duplicates_share_readonly_arrays():
+    """Duplicate vs share one result array; in-place mutation must raise
+    instead of silently corrupting the sibling duplicate's answer."""
+    triples = _random_triples(14)
+    table = LabelTable.terminals([2] * 3)
+    g = Hypergraph.from_triples(triples, 15)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar, cache=QueryResultCache(), crossover=0)
+    v = int(triples[0, 0])
+    outs = engine.neighbors_out_batch([v, v])
+    assert outs[0] is outs[1]
+    if len(outs[0]):
+        with pytest.raises(ValueError):
+            outs[0][0] = -1
+
+
+def test_sharded_without_cache_still_exact():
+    triples = _random_triples(6)
+    oracle, _ = _single_engine(triples, 15, 3)
+    svc = ShardedTripleService.build(triples, 15, 3, n_shards=3, cache=None)
+    assert svc.cache is None and svc.cache_stats() is None
+    s0 = int(triples[0, 0])
+    assert sorted(svc.query(s0, None, None)) == \
+        sorted(oracle.query_scalar(s0, None, None))
+
+
+# ---------------------------------------------------------------- shared tier
+def test_shared_cache_keys_do_not_collide_across_shards():
+    """Two shards answer the same ?P? pattern with different results; the
+    shared tier must keep both (shard-qualified keys) plus the merged
+    cross-shard entry, and a warm replay must serve the exact union from
+    the merged namespace without re-executing anything."""
+    triples = _random_triples(7, n_preds=4)
+    oracle, _ = _single_engine(triples, 15, 4)
+    svc = ShardedTripleService.build(triples, 15, 4, n_shards=2,
+                                     strategy="node_range")
+    p0 = int(triples[0, 1])
+    want = sorted(oracle.query_scalar(None, p0, None))
+    assert sorted(svc.query(None, p0, None)) == want
+    inserts = svc.cache.stats.inserts
+    assert inserts >= 3  # one entry per shard + the merged entry
+    hits_before = svc.cache.stats.hits
+    assert sorted(svc.query(None, p0, None)) == want
+    assert svc.cache.stats.hits > hits_before   # merged-tier hit
+    assert svc.cache.stats.inserts == inserts   # nothing re-executed
+    assert svc.stats.merged_hits >= 1
+
+
+def test_warm_scattered_pattern_skips_fanout():
+    """A warm scattered pattern is one merged-tier lookup: no engine
+    micro-batches are issued on the replay flush."""
+    triples = _random_triples(15)
+    oracle, _ = _single_engine(triples, 15, 3)
+    svc = ShardedTripleService.build(triples, 15, 3, n_shards=3,
+                                     strategy="node_range")
+    p0 = int(triples[0, 1])
+    want = sorted(oracle.query_scalar(None, p0, None))
+    assert sorted(svc.query(None, p0, None)) == want  # cold: fans out
+    sb = svc.stats.shard_batches
+    assert sorted(svc.query(None, p0, None)) == want  # warm: merged hit
+    assert svc.stats.shard_batches == sb
+    assert svc.stats.merged_hits == 1
+    # invalidating ANY shard also invalidates the merged entry
+    svc.invalidate(1)
+    assert sorted(svc.query(None, p0, None)) == want
+    assert svc.stats.shard_batches > sb  # had to fan out again
+
+
+def test_generation_bump_invalidates_one_shard_only():
+    cache = QueryResultCache()
+    v0, v1 = cache.shard_view(0), cache.shard_view(1)
+    e = (np.array([1]), np.array([0, 1]), np.array([0, 2]))
+    v0.insert(3, -1, -1, e)
+    v1.insert(3, -1, -1, e)
+    v0.insert(-1, 2, -1, e)
+    assert len(cache) == 3
+    gen = v0.bump_generation()
+    assert gen == 1 and cache.generation(0) == 1 and cache.generation(1) == 0
+    # shard 0's entries are gone — eagerly, so budgets reflect live data
+    assert v0.lookup(3, -1, -1) is None and v0.lookup(-1, 2, -1) is None
+    assert len(cache) == 1 and cache.cached_edges == 1
+    # shard 1 stays warm
+    assert v1.lookup(3, -1, -1) is not None
+    # re-inserts under the new generation are served again
+    v0.insert(3, -1, -1, e)
+    assert v0.lookup(3, -1, -1) is not None
+
+
+def test_sharded_invalidate_then_exact():
+    triples = _random_triples(8)
+    oracle, _ = _single_engine(triples, 15, 3)
+    svc = ShardedTripleService.build(triples, 15, 3, n_shards=3)
+    s0 = int(triples[0, 0])
+    want = sorted(oracle.query_scalar(s0, None, None))
+    assert sorted(svc.query(s0, None, None)) == want
+    misses = svc.cache.stats.misses
+    svc.invalidate(0)  # one shard cold, others warm
+    assert sorted(svc.query(s0, None, None)) == want
+    assert svc.cache.stats.misses > misses
+    svc.invalidate()   # everything cold
+    assert sorted(svc.query(s0, None, None)) == want
+
+
+# ------------------------------------------------- ?P? segment floor (bugfix)
+def test_point_lookup_burst_never_evicts_predicate_segment():
+    """Regression: the dedicated ?P? segment must hold its entries through
+    an arbitrarily long burst of selective point-lookup inserts — plain
+    keys and shard-qualified keys alike — and the budget accounting must
+    stay exact."""
+    for use_shards in (False, True):
+        cache = QueryResultCache(max_entries=32, max_edges=64,
+                                 predicate_entries=8, predicate_edges=200)
+        faces = [cache.shard_view(k) for k in range(3)] if use_shards \
+            else [cache]
+        pe = (np.arange(30), np.arange(60), np.arange(0, 62, 2))
+        for i, f in enumerate(faces):
+            f.insert(-1, i, -1, pe)  # ?P? entries, one per face
+        pred_entries = len(cache._predicate.entries)
+        pred_edges = cache._predicate.edges
+        assert pred_entries == len(faces) and pred_edges == 30 * len(faces)
+        point = (np.array([1]), np.array([0, 1]), np.array([0, 2]))
+        for s in range(300):  # burst of spo point lookups across all faces
+            faces[s % len(faces)].insert(s, 0, s + 1, point)
+        # the predicate segment is untouched: same entries, same budget
+        assert len(cache._predicate.entries) == pred_entries
+        assert cache._predicate.edges == pred_edges
+        for i, f in enumerate(faces):
+            assert f.lookup(-1, i, -1) is not None
+        # general segment respected its own budgets
+        assert cache._general.edges <= 64
+        assert len(cache._general.entries) <= 32
+        # accounting is exact: tracked edges == sum over live entries
+        for seg in (cache._general, cache._predicate):
+            assert seg.edges == sum(len(v[0]) for v in seg.entries.values())
+
+
+def test_predicate_segment_evicts_only_under_own_pressure():
+    cache = QueryResultCache(predicate_entries=2, predicate_edges=1 << 20)
+    e = (np.array([1]), np.array([0, 1]), np.array([0, 2]))
+    for p in range(4):  # ?P? churn beyond its own entry budget
+        cache.insert(-1, p, -1, e)
+    assert len(cache._predicate.entries) == 2
+    assert cache.lookup(-1, 3, -1) is not None
+    assert cache.lookup(-1, 0, -1) is None  # its own LRU, its own pressure
+
+
+# ---------------------------------------------------------------- view API
+def test_view_materialize_matches_arrays_path():
+    triples = _random_triples(9)
+    table = LabelTable.terminals([2] * 3)
+    g = Hypergraph.from_triples(triples, 15)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar, cache=QueryResultCache(), crossover=0)
+    s0, p0 = int(triples[0, 0]), int(triples[0, 1])
+    ss = [s0, None, s0, None]
+    pp = [None, p0, None, p0]
+    oo = [None, None, None, None]
+    view = engine.query_batch_view(ss, pp, oo)
+    assert len(view.entries) == 2  # duplicates share entries
+    assert view.entry(0) is view.entry(2) and view.entry(1) is view.entry(3)
+    got = view.materialize()
+    fresh = TripleQueryEngine(grammar, cache=None, crossover=0)
+    want = fresh.query_batch_arrays(ss, pp, oo)
+
+    def norm(res):
+        r_q, r_l, r_n, r_o = res
+        return sorted((int(r_q[i]), int(r_l[i]),
+                       tuple(r_n[r_o[i]:r_o[i + 1]].tolist()))
+                      for i in range(len(r_l)))
+
+    assert norm(got) == norm(want)
+    assert view.total_results() == len(want[1])
+    np.testing.assert_array_equal(
+        view.result_counts(), np.bincount(want[0], minlength=4))
+
+
+def test_view_tuples_match_query_batch():
+    triples = _random_triples(10)
+    table = LabelTable.terminals([2] * 3)
+    g = Hypergraph.from_triples(triples, 15)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar, cache=QueryResultCache(), crossover=0)
+    s0 = int(triples[0, 0])
+    view = engine.query_batch_view([s0, None], [None, None], [None, s0])
+    for qid, (qs, qo) in enumerate([(s0, None), (None, s0)]):
+        assert sorted(view.tuples(qid)) == sorted(query_oracle(g, qs, None, qo))
+
+
+def test_view_concat_and_empty():
+    empty = QueryResultView([], np.zeros(0, dtype=np.int64))
+    assert empty.n_queries == 0 and empty.total_results() == 0
+    r_q, r_l, r_n, r_o = empty.materialize()
+    assert len(r_l) == 0 and r_o.tolist() == [0]
+    e1 = (np.array([1]), np.array([0, 1]), np.array([0, 2]))
+    e2 = (np.array([2, 3]), np.array([4, 5, 6, 7]), np.array([0, 2, 4]))
+    v = QueryResultView.concat([
+        QueryResultView([e1], np.zeros(2, dtype=np.int64)),
+        QueryResultView([e2], np.zeros(1, dtype=np.int64))])
+    assert v.n_queries == 3 and len(v.entries) == 2
+    assert v.entry(0) is e1 and v.entry(2) is e2
+    assert v.total_results() == 1 + 1 + 2
+
+
+def test_concat_ragged_merges_and_skips_empty():
+    e1 = (np.array([1]), np.array([0, 1]), np.array([0, 2]))
+    e0 = (np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(1, np.int64))
+    e2 = (np.array([2]), np.array([4, 5, 6]), np.array([0, 3]))
+    labels, nodes, offsets = concat_ragged([e1, e0, e2])
+    assert labels.tolist() == [1, 2]
+    assert nodes.tolist() == [0, 1, 4, 5, 6]
+    assert offsets.tolist() == [0, 2, 5]
+    labels, _, offsets = concat_ragged([])
+    assert len(labels) == 0 and offsets.tolist() == [0]
+
+
+def test_uncached_view_entries_are_read_only():
+    """The view's read-only contract must hold with the cache disabled too
+    (cache.insert is not the only freeze point)."""
+    triples = _random_triples(12)
+    table = LabelTable.terminals([2] * 3)
+    g = Hypergraph.from_triples(triples, 15)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar, cache=None, crossover=0)
+    s0 = int(triples[0, 0])
+    for view in (engine.query_batch_view([s0, s0], None, None),
+                 engine.query_batch_view([s0], None, None)):
+        assert view.entry(0) is view.entry(view.n_queries - 1)
+        labels, nodes, _ = view.entry(0)
+        for arr in (labels, nodes):
+            if len(arr):
+                with pytest.raises(ValueError):
+                    arr[0] = -1
+
+
+def test_service_flush_view_shares_entries():
+    triples = _random_triples(11)
+    table = LabelTable.terminals([2] * 3)
+    g = Hypergraph.from_triples(triples, 15)
+    grammar, _ = compress(g, table)
+    engine = TripleQueryEngine(grammar, cache=QueryResultCache(), crossover=0)
+    service = TripleQueryService(engine)
+    s0 = int(triples[0, 0])
+    for _ in range(4):
+        service.submit(s0, None, None)
+    view = service.flush_view()
+    assert view.n_queries == 4 and len(view.entries) == 1
+    assert view.entry(0) is view.entry(3)
+    assert sorted(view.tuples(0)) == sorted(query_oracle(g, s0, None, None))
+    # flush shares one immutable result tuple per unique pattern
+    for _ in range(3):
+        service.submit(s0, None, None)
+    out = service.flush()
+    assert out[0] is out[1] is out[2] and isinstance(out[0], tuple)
+    assert sorted(out[0]) == sorted(query_oracle(g, s0, None, None))

@@ -212,6 +212,40 @@ def test_pallas_rank_backend_parity():
     assert np.array_equal(got, want)
 
 
+def test_rank_backend_env_unknown_warns_then_falls_back():
+    """ITR_RANK_BACKEND with an unknown value must warn once at import and
+    fall back to numpy — never crash, never silently pick pallas. The knob
+    is read at module import, so probe it in a fresh interpreter."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    code = (
+        "import warnings\n"
+        "with warnings.catch_warnings(record=True) as w:\n"
+        "    warnings.simplefilter('always')\n"
+        "    from repro.core.succinct import bitvector\n"
+        "assert bitvector.get_rank_backend() == 'numpy', bitvector.get_rank_backend()\n"
+        "msgs = [str(x.message) for x in w]\n"
+        "assert any('ITR_RANK_BACKEND' in m and 'bogus' in m for m in msgs), msgs\n"
+        "print('OK')\n"
+    )
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env = {**os.environ, "ITR_RANK_BACKEND": "bogus", "PYTHONPATH": src}
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_set_rank_backend_rejects_unknown():
+    from repro.core.succinct import set_rank_backend
+
+    with pytest.raises(ValueError):
+        set_rank_backend("bogus")
+
+
 def test_kernel_bitvec_rank_arbitrary_batch_sizes():
     """The kernel itself pads non-multiple-of-block position batches."""
     jax = pytest.importorskip("jax")
