@@ -20,7 +20,12 @@ trajectory from PR 1 onward:
   engine on the unselective patterns, and the warm repeated-``?P?``
   micro-batch workload through the view path (`query_batch_view`): shared
   entries instead of per-duplicate replication, which is the PR 2
-  `warm_cache` cost floor the view is built to beat.
+  `warm_cache` cost floor the view is built to beat;
+* a `mutation` section (PR 4) — overlay query overhead vs delta size
+  (the same mixed workload on one engine at increasing insert+tombstone
+  counts, relative to the clean engine) and incremental per-shard
+  rebuild vs a full recompress of the mutated triple set (the
+  amortization the delta budget buys).
 """
 from __future__ import annotations
 
@@ -101,6 +106,7 @@ def run(dataset="geo-coordinates-en", n_queries=500, quiet=False,
     _bench_warm_cache(itr, ds, bench, n_queries, quiet)
     _bench_crossover(itr, ds, bench, n_queries, quiet)
     _bench_sharded(itr, ds, bench, n_queries, quiet)
+    _bench_mutation(itr, ds, bench, n_queries, quiet)
     _finalize_throughput(bench, n_queries)
     if json_path:
         try:  # a full rewrite must not erase the committed CI gate baseline
@@ -400,6 +406,143 @@ def _bench_sharded(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None:
                   f"({section['warm_view']['speedup_vs_materialized']:5.1f}x) "
                   f"sharded-view={sharded_view_warm_us:9.1f}us")
     bench["sharded"] = section
+
+
+def _bench_mutation(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None:
+    """Mutation subsystem: what writes cost the read path, and what the
+    delta budget buys at rebuild time.
+
+    * *Overlay overhead*: a cache-less engine runs the mixed batch
+      workload after its delta overlay is grown to a small and a large
+      tier (half inserts, half tombstones — both merge steps exercised),
+      timed against a from-scratch engine compressed from the SAME
+      logical triple set. Same logical set -> same result volume, so the
+      gated ratio ``us(overlay) / us(recompressed)`` isolates pure
+      overlay cost instead of confounding it with tombstones shrinking
+      (or inserts growing) the results being materialized.
+    * *Incremental rebuild*: mutations targeting ONE predicate land on
+      one shard of a 4-shard predicate-hash service; `rebuild(force=True)`
+      recompresses just that shard, timed against a from-scratch
+      `ShardedTripleService.build` on the mutated triple set. The gated
+      ratio is ``full_s / incremental_s`` (the amortization factor).
+    """
+    from repro.core import (
+        Hypergraph,
+        LabelTable,
+        TripleQueryEngine,
+        compress,
+    )
+    from repro.serve.sharded import ShardedTripleService
+
+    rng = np.random.default_rng(7)
+    nq = min(n_queries, 100)
+    rows = sample_rows(ds, nq, seed=5)
+    batches = [bind_pattern(pat, rows) for pat in SHARDED_MIXED_CYCLE]
+
+    engine = TripleQueryEngine(itr.grammar, itr.encoded, cache=None,
+                               crossover=0, delta_budget=None)
+
+    def run_workload(e) -> float:
+        t0 = time.perf_counter()
+        for s_arr, p_arr, o_arr in batches:
+            e.query_batch_arrays(s_arr, p_arr, o_arr)
+        return (time.perf_counter() - t0) / (nq * len(batches)) * 1e6
+
+    def recompressed() -> TripleQueryEngine:
+        """From-scratch engine on the overlay engine's logical triples —
+        the tier's fair baseline (identical results, no overlay)."""
+        logical = engine.current_triples()
+        n_nodes = ds.n_nodes
+        if len(logical):
+            n_nodes = max(n_nodes, int(logical[:, [0, 2]].max()) + 1)
+        grammar, _ = compress(
+            Hypergraph.from_triples(logical, n_nodes),
+            LabelTable.terminals([2] * ds.n_preds))
+        return TripleQueryEngine(grammar, cache=None, crossover=0,
+                                 delta_budget=None)
+
+    del_pool = np.unique(np.asarray(ds.triples, dtype=np.int64), axis=0)
+    rng.shuffle(del_pool)
+    del_cursor = [0]
+
+    def grow_delta(target: int) -> None:
+        """Half inserts / half tombstones, re-drawing until the overlay
+        reaches `target` (random inserts colliding with base rows are
+        filtered out by set semantics, so one draw may fall short)."""
+        for _ in range(8):
+            need = target - engine.delta.size
+            if need <= 0:
+                return
+            n_ins = (need + 1) // 2
+            fresh = np.stack([rng.integers(0, ds.n_nodes, n_ins),
+                              rng.integers(0, ds.n_preds, n_ins),
+                              rng.integers(0, ds.n_nodes, n_ins)], axis=1)
+            engine.insert_triples(fresh)
+            n_del = min(target - engine.delta.size,
+                        len(del_pool) - del_cursor[0])
+            if n_del > 0:
+                engine.delete_triples(
+                    del_pool[del_cursor[0]:del_cursor[0] + n_del])
+                del_cursor[0] += n_del
+
+    # min over reps: overhead_vs_clean feeds the CI gate
+    pristine_us = min(run_workload(engine) for _ in range(2))
+    tiers = {}
+    for tier, target in (("small", 64), ("large", 512)):
+        grow_delta(target)
+        tier_us = min(run_workload(engine) for _ in range(2))
+        clean_us = min(run_workload(recompressed()) for _ in range(2))
+        tiers[tier] = {
+            "delta_rows": engine.delta.size,
+            "us_per_query": tier_us,
+            "recompressed_us_per_query": clean_us,
+            "overhead_vs_clean": tier_us / clean_us if clean_us > 0 else float("inf"),
+        }
+        if not quiet:
+            print(f"mutation overlay {tier} delta={engine.delta.size} "
+                  f"recompressed={clean_us:9.1f}us overlaid={tier_us:9.1f}us "
+                  f"({tiers[tier]['overhead_vs_clean']:5.2f}x)")
+
+    # incremental per-shard rebuild vs full recompress of the mutated set
+    n_shards = 4
+    svc = ShardedTripleService.build(ds.triples, ds.n_nodes, ds.n_preds,
+                                     n_shards=n_shards, cache=None,
+                                     strategy="predicate_hash", crossover=0,
+                                     delta_budget=None)
+    p0 = int(ds.triples[0, 1])  # one predicate -> one owning shard
+    n_mut = max(16, len(ds.triples) // 50)
+    fresh = np.stack([rng.integers(0, ds.n_nodes, n_mut),
+                      np.full(n_mut, p0, dtype=np.int64),
+                      rng.integers(0, ds.n_nodes, n_mut)], axis=1)
+    svc.insert_triples(fresh)
+    dirty = [k for k, d in enumerate(svc.delta_sizes()) if d]
+    delta_rows = int(sum(svc.delta_sizes()))
+    mutated = np.concatenate([t.current_triples() for t in svc.engines])
+    t0 = time.perf_counter()
+    rebuilt = svc.rebuild(force=True)
+    incr_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ShardedTripleService.build(mutated, ds.n_nodes, ds.n_preds,
+                               n_shards=n_shards, cache=None,
+                               strategy="predicate_hash", crossover=0,
+                               delta_budget=None)
+    full_s = time.perf_counter() - t0
+    bench["mutation"] = {
+        "overlay": {"pristine_us_per_query": pristine_us, "tiers": tiers},
+        "rebuild": {
+            "n_shards": n_shards,
+            "dirty_shards": len(dirty),
+            "rebuilt_shards": rebuilt,
+            "delta_rows": delta_rows,
+            "incremental_s": incr_s,
+            "full_s": full_s,
+            "full_vs_incremental": full_s / incr_s if incr_s > 0 else float("inf"),
+        },
+    }
+    if not quiet:
+        print(f"mutation rebuild dirty={dirty} incremental={incr_s * 1e3:9.1f}ms "
+              f"full={full_s * 1e3:9.1f}ms "
+              f"({bench['mutation']['rebuild']['full_vs_incremental']:5.1f}x)")
 
 
 def _finalize_throughput(bench: dict, n_queries: int) -> None:

@@ -29,7 +29,8 @@ SMOKE_JSON = "BENCH_smoke_query_latency.json"
 GATE_TOLERANCE = 3.0
 
 # metric name suffixes where LOWER is better (ratios of our-time / reference)
-_LOWER_IS_BETTER = ("dispatched_vs_scalar", "sharded_vs_single")
+_LOWER_IS_BETTER = ("dispatched_vs_scalar", "sharded_vs_single",
+                    "overhead_vs_clean")
 
 
 def gate_metrics(bench: dict) -> dict[str, float]:
@@ -61,6 +62,13 @@ def gate_metrics(bench: dict) -> dict[str, float]:
     for pat, p in sharded.get("scatter_gather", {}).items():
         out[f"sharded.scatter_gather.{pat}.sharded_vs_single"] = \
             p["sharded_vs_single"]
+    mutation = bench.get("mutation", {})
+    for tier, t in mutation.get("overlay", {}).get("tiers", {}).items():
+        out[f"mutation.overlay.{tier}.overhead_vs_clean"] = \
+            t["overhead_vs_clean"]
+    if "rebuild" in mutation:
+        out["mutation.rebuild.full_vs_incremental"] = \
+            mutation["rebuild"]["full_vs_incremental"]
     return {k: float(v) for k, v in out.items()}
 
 
@@ -221,6 +229,13 @@ def main(smoke: bool = False, check: bool = False,
             if "warm_view" in sharded:
                 print(f"sharded/warm_view/speedup_vs_materialized,"
                       f"{sharded['warm_view']['speedup_vs_materialized']:.2f},x")
+            mutation = bench.get("mutation", {})
+            for tier, t in mutation.get("overlay", {}).get("tiers", {}).items():
+                print(f"mutation/overlay/{tier}/overhead_vs_clean,"
+                      f"{t['overhead_vs_clean']:.2f},x")
+            if "rebuild" in mutation:
+                print(f"mutation/rebuild/full_vs_incremental,"
+                      f"{mutation['rebuild']['full_vs_incremental']:.2f},x")
         except Exception as e:
             print(f"# {BASELINE_JSON} unavailable: {e}", file=sys.stderr)
     p = plus[0]

@@ -63,6 +63,26 @@ def main():
           f"{st.owned} owned + {st.scattered} scatter-gathered patterns, "
           f"verified vs single engine")
 
+    # mutation: inserts/deletes land in a per-shard delta overlay (routed
+    # to the owning shard) and queries stay exact immediately; an explicit
+    # rebuild() recompresses dirty shards through RePair (docs/ARCHITECTURE.md)
+    import numpy as np
+
+    new_rows = np.array([[s, p, ds.n_nodes - 1], [s, p, ds.n_nodes - 2]])
+    n_new = svc.insert_triples(new_rows)
+    n_gone = svc.delete_triples(ds.triples[:3])
+    res = svc.query(s, p, None)
+    for row in new_rows:
+        assert (int(row[1]), (int(row[0]), int(row[2]))) in res
+    print(f"mutated: +{n_new} inserted, -{n_gone} deleted "
+          f"(delta rows/shard={svc.delta_sizes()}), queries exact via overlay")
+
+    rebuilt = svc.rebuild(force=True)  # recompress only the dirty shards
+    assert svc.delta_sizes() == [0] * svc.n_shards
+    assert all(t in svc.query(s, p, None) for t in res)  # still exact
+    print(f"rebuilt shards {rebuilt}: overlays folded into fresh grammars, "
+          f"results unchanged")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""Docs-consistency gate: every ITR_* env var referenced in src/ must be
+documented in docs/CONFIG.md.
+
+Run from the repo root (CI does): exits 1 listing any undocumented
+variable. Documented-but-unreferenced variables are reported as warnings
+only — a knob can legitimately be documented ahead of a staged rollout,
+but an undocumented live knob is exactly the rot this gate exists for.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ENV_RE = re.compile(r"\bITR_[A-Z0-9_]+\b")
+
+
+def referenced_vars(src_root: Path) -> dict[str, list[str]]:
+    """ITR_* names -> files referencing them, over all python sources."""
+    refs: dict[str, list[str]] = {}
+    for path in sorted(src_root.rglob("*.py")):
+        for name in set(ENV_RE.findall(path.read_text())):
+            refs.setdefault(name, []).append(str(path))
+    return refs
+
+
+def documented_vars(config_md: Path) -> set[str]:
+    return set(ENV_RE.findall(config_md.read_text()))
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    config_md = root / "docs" / "CONFIG.md"
+    if not config_md.exists():
+        print(f"docs gate: {config_md} missing", file=sys.stderr)
+        return 1
+    refs = referenced_vars(root / "src")
+    documented = documented_vars(config_md)
+    missing = sorted(set(refs) - documented)
+    for name in missing:
+        print(f"docs gate: {name} referenced in {', '.join(refs[name])} "
+              f"but absent from docs/CONFIG.md", file=sys.stderr)
+    for name in sorted(documented - set(refs)):
+        print(f"docs gate: warning: {name} documented but no longer "
+              f"referenced under src/")
+    print(f"docs gate: {len(refs)} env var(s) referenced, "
+          f"{len(missing)} undocumented")
+    return 1 if missing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,7 @@
 """ITR core — the paper's contribution: Incidence-Type RePair graph
 compression with a succinct encoding that answers triple queries fast."""
 from repro.core.hypergraph import Hypergraph, LabelTable
+from repro.core.delta import DeltaOverlay, resolve_delta_budget
 from repro.core.digram import DigramCounter, digram_counts, digram_key, incidences
 from repro.core.grammar import Grammar, Rule
 from repro.core.repair import RepairConfig, RepairStats, compress
@@ -13,6 +14,8 @@ from repro.core.itr_plus import attach_node_labels, strip_node_labels
 __all__ = [
     "Hypergraph",
     "LabelTable",
+    "DeltaOverlay",
+    "resolve_delta_budget",
     "DigramCounter",
     "digram_counts",
     "digram_key",

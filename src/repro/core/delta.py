@@ -1,0 +1,245 @@
+"""Per-engine mutation overlay: uncompressed triple delta over a grammar.
+
+The ITR grammar is a *static* compression of a triple set — inserting or
+deleting one triple would invalidate digram counts, rule bodies, and the
+succinct encoding all at once. Instead of recompressing on every write,
+each :class:`~repro.core.query.TripleQueryEngine` carries a
+:class:`DeltaOverlay`: a small uncompressed buffer of inserted triples
+(kept CSR-sorted by (s, p, o)) plus a tombstone set of deleted *base*
+triples. Queries stay exact under mutation because the engine merges the
+overlay into every result at execution time:
+
+* edges answered by the compressed grammar that match a tombstone are
+  filtered out (rank-2 edges only — node-label hyperedges of ITR+ are
+  never triples and never tombstoned);
+* inserted triples matching the pattern are appended.
+
+Both steps are vectorized over the whole unique-pattern batch (a
+``(n_queries, delta_size)`` broadcast for inserts, one row-set membership
+pass for tombstones), so overlay cost scales with the delta — which is
+bounded: once ``delta.size`` exceeds the engine's budget
+(``ITR_DELTA_BUDGET``, see :func:`resolve_delta_budget`), the engine
+recompresses base+delta into a fresh grammar and the overlay empties.
+The overlay is the write path; RePair stays the storage format.
+
+Set semantics: the logical triple set is ``(base - tombstones) + inserts``
+with the invariants that inserts are never present in the visible base and
+tombstones always are. The engine enforces them with a membership query
+before each mutation batch, so re-inserting a deleted triple just drops
+its tombstone, and deleting an overlay insert just drops the buffered row
+— ``size`` counts real divergence from the compressed base.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.hypergraph import _ragged_take
+
+_EMPTY_ROWS = np.zeros((0, 3), dtype=np.int64)
+
+# default rebuild budget: overlay rows tolerated before auto-recompression
+DEFAULT_DELTA_BUDGET = 4096
+
+# ITR_DELTA_BUDGET spellings that disable auto-rebuild entirely
+_OFF_SPELLINGS = ("off", "none", "never", "disable", "disabled")
+
+
+def resolve_delta_budget(value=None) -> int | None:
+    """Resolve a delta-rebuild budget to ``int`` (threshold) or ``None``
+    (auto-rebuild disabled; only explicit ``rebuild()`` recompresses).
+
+    ``value=None`` reads ``ITR_DELTA_BUDGET``: a non-negative integer is
+    the threshold (``0`` = recompress after every mutation batch);
+    ``off``/``none``/``never`` or any negative integer disables
+    auto-rebuild; unset/empty/unparsable falls back to
+    :data:`DEFAULT_DELTA_BUDGET`. An explicit ``value`` follows the same
+    rules without touching the environment.
+    """
+    if value is None:
+        env = os.environ.get("ITR_DELTA_BUDGET", "").strip().lower()
+        if not env:
+            return DEFAULT_DELTA_BUDGET
+        if env in _OFF_SPELLINGS:
+            return None
+        try:
+            value = int(env)
+        except ValueError:
+            return DEFAULT_DELTA_BUDGET
+    value = int(value)
+    return None if value < 0 else value
+
+
+def as_triple_rows(triples) -> np.ndarray:
+    """Validate + canonicalize a mutation batch: ``(n, 3)`` int64 rows,
+    non-negative ids, deduplicated and sorted (mutations have set
+    semantics, so duplicate rows in one batch are one mutation)."""
+    rows = np.asarray(triples, dtype=np.int64)
+    if rows.ndim != 2 or rows.shape[1] != 3:
+        raise ValueError(f"expected (n, 3) triple rows, got shape {rows.shape}")
+    if len(rows) and rows.min() < 0:
+        raise ValueError("triple ids must be non-negative (-1 means 'unbound' "
+                         "in query patterns, not in data)")
+    return np.unique(rows, axis=0) if len(rows) else _EMPTY_ROWS
+
+
+def rows_in(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Row-wise set membership: bool[len(a)], True where row a[i] occurs in b."""
+    if len(a) == 0 or len(b) == 0:
+        return np.zeros(len(a), dtype=bool)
+    both = np.concatenate([b, a])
+    uniq, inv = np.unique(both, axis=0, return_inverse=True)
+    inv = inv.reshape(-1)
+    in_b = np.zeros(len(uniq), dtype=bool)
+    in_b[inv[: len(b)]] = True
+    return in_b[inv[len(b):]]
+
+
+class DeltaOverlay:
+    """Uncompressed (inserts, tombstones) delta over a compressed triple set.
+
+    Pure data structure: the engine decides *what* is an insert vs a
+    resurrection (see module docstring); the overlay stores rows, answers
+    patterns over its insert buffer, and rewrites batch results.
+    """
+
+    __slots__ = ("_inserts", "_tombstones")
+
+    def __init__(self):
+        self._inserts = _EMPTY_ROWS
+        self._tombstones = _EMPTY_ROWS
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def inserts(self) -> np.ndarray:
+        """Buffered inserted triples, CSR-sorted by (s, p, o). Read-only."""
+        return self._inserts
+
+    @property
+    def tombstones(self) -> np.ndarray:
+        """Deleted base triples, sorted. Read-only."""
+        return self._tombstones
+
+    @property
+    def n_inserts(self) -> int:
+        return len(self._inserts)
+
+    @property
+    def n_tombstones(self) -> int:
+        return len(self._tombstones)
+
+    @property
+    def size(self) -> int:
+        """Total divergence from the compressed base (rows buffered either
+        way) — the quantity ``ITR_DELTA_BUDGET`` bounds."""
+        return len(self._inserts) + len(self._tombstones)
+
+    @property
+    def is_empty(self) -> bool:
+        return self.size == 0
+
+    def clear(self) -> None:
+        self._inserts = _EMPTY_ROWS
+        self._tombstones = _EMPTY_ROWS
+
+    # -- mutation --------------------------------------------------------
+    def insert_rows(self, rows: np.ndarray) -> int:
+        """Record insertions of `rows`, which the caller has verified are
+        NOT currently visible. Tombstoned rows are resurrected (tombstone
+        dropped); the rest join the sorted insert buffer."""
+        if len(rows) == 0:
+            return 0
+        tombed = rows_in(rows, self._tombstones)
+        if tombed.any():
+            self._tombstones = self._tombstones[
+                ~rows_in(self._tombstones, rows[tombed])]
+        fresh = rows[~tombed]
+        if len(fresh):
+            merged = np.concatenate([self._inserts, fresh])
+            self._inserts = merged[np.lexsort(merged.T[::-1])]
+        return len(rows)
+
+    def delete_rows(self, rows: np.ndarray) -> int:
+        """Record deletions of `rows`, which the caller has verified ARE
+        currently visible. Overlay inserts are simply un-buffered; base
+        rows gain a tombstone."""
+        if len(rows) == 0:
+            return 0
+        buffered = rows_in(rows, self._inserts)
+        if buffered.any():
+            self._inserts = self._inserts[~rows_in(self._inserts, rows[buffered])]
+        base = rows[~buffered]
+        if len(base):
+            merged = np.concatenate([self._tombstones, base])
+            self._tombstones = merged[np.lexsort(merged.T[::-1])]
+        return len(rows)
+
+    # -- query-side ------------------------------------------------------
+    def apply(self, triples: np.ndarray) -> np.ndarray:
+        """Logical triple set: `triples` (the decompressed base) minus
+        tombstones plus the insert buffer. Base duplicates survive."""
+        out = np.asarray(triples, dtype=np.int64).reshape(-1, 3)
+        if len(self._tombstones):
+            out = out[~rows_in(out, self._tombstones)]
+        if len(self._inserts):
+            out = np.concatenate([out, self._inserts])
+        return out
+
+    def merge_batch(self, res, s: np.ndarray, p: np.ndarray, o: np.ndarray):
+        """Rewrite one executed unique-pattern batch under the overlay.
+
+        `res` is the engine's ``(qids, labels, nodes_flat, offsets)``
+        result over the compressed base; `s`/`p`/`o` are the aligned
+        pattern columns (-1 = unbound). Tombstoned rank-2 edges are
+        dropped, then each query gains its matching inserted triples as
+        appended rank-2 edges. Returns the same tuple shape.
+        """
+        qids, labels, nodes, offsets = res
+        ranks = np.diff(offsets)
+        tombs = self._tombstones
+        if len(tombs) and len(labels):
+            starts = offsets[:-1]
+            t_idx = np.flatnonzero(ranks == 2)
+            # cheap 1-D prefilter before the row-wise membership test:
+            # rows_in sorts full (s, p, o) rows, which on an unselective
+            # result (a ?P? scan is ~10^5-10^6 edges) would cost a
+            # 3-column lexsort per executed batch even for one tombstone.
+            # Subject-column isin narrows that to edges sharing a
+            # tombstoned subject — typically a handful.
+            if len(t_idx):
+                cand = np.isin(nodes[starts[t_idx]], tombs[:, 0])
+                t_idx = t_idx[cand]
+            if len(t_idx):
+                edge_rows = np.stack(
+                    [nodes[starts[t_idx]], labels[t_idx],
+                     nodes[starts[t_idx] + 1]], axis=1)
+                dead = rows_in(edge_rows, tombs)
+                if dead.any():
+                    keep = np.ones(len(labels), dtype=bool)
+                    keep[t_idx[dead]] = False
+                    idx = np.flatnonzero(keep)
+                    ranks = np.diff(offsets)[idx]
+                    take = _ragged_take(offsets, idx, ranks)
+                    qids, labels, nodes = qids[idx], labels[idx], nodes[take]
+                    offsets = np.concatenate(
+                        [[0], np.cumsum(ranks)]).astype(np.int64)
+        ins = self._inserts
+        if len(ins):
+            # (n_queries, n_inserts) broadcast: delta is budget-bounded,
+            # so this stays a small dense mask even for wide batches
+            match = ((s[:, None] < 0) | (ins[None, :, 0] == s[:, None])) \
+                & ((p[:, None] < 0) | (ins[None, :, 1] == p[:, None])) \
+                & ((o[:, None] < 0) | (ins[None, :, 2] == o[:, None]))
+            qi, ri = np.nonzero(match)
+            if len(qi):
+                add_nodes = np.empty(2 * len(ri), dtype=np.int64)
+                add_nodes[0::2] = ins[ri, 0]
+                add_nodes[1::2] = ins[ri, 2]
+                qids = np.concatenate([qids, qi])
+                labels = np.concatenate([labels, ins[ri, 1]])
+                nodes = np.concatenate([nodes, add_nodes])
+                offsets = np.concatenate(
+                    [offsets,
+                     offsets[-1] + 2 * np.arange(1, len(ri) + 1, dtype=np.int64)])
+        return qids, labels, nodes, offsets

@@ -121,8 +121,14 @@ class FrontierArena:
         self.n_nodes = nn
 
     def finish(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        """(qids, labels, nodes_flat, offsets) copies of the live region;
-        resets the arena for the next query."""
+        """Hand back the accumulated results and reset for the next query.
+
+        Returns ``(qids, labels, nodes_flat, offsets)`` as right-sized
+        COPIES of the live region — callers may hold them indefinitely
+        (e.g. as cache entries) without pinning the arena's scratch
+        buffers or racing the next `query_batch_arrays` call, which
+        reuses this arena from offset zero.
+        """
         ne, nn = self.n_edges, self.n_nodes
         offsets = np.zeros(ne + 1, dtype=np.int64)
         np.cumsum(self._r[:ne], out=offsets[1:])

@@ -32,6 +32,15 @@ The serving path is cache- and width-aware:
 
 `query` is a batch of one; `query_scalar` keeps the seed per-query Python
 worklist as the parity/benchmark reference.
+
+The engine is also the *write* surface: `insert_triples`/`delete_triples`
+record mutations in an uncompressed :class:`~repro.core.delta.DeltaOverlay`
+(insert buffer + tombstone set) that every executed batch merges in, so
+queries stay exact while the grammar itself is untouched. Once the overlay
+outgrows the engine's budget (``ITR_DELTA_BUDGET``), `rebuild` recompresses
+base+delta through the RePair pipeline and atomically swaps the engine's
+internals; the cross-request cache is generation-bumped on every mutation
+so stale entries can never be served.
 """
 from __future__ import annotations
 
@@ -40,6 +49,7 @@ import time
 
 import numpy as np
 
+from repro.core.delta import DeltaOverlay, as_triple_rows, resolve_delta_budget
 from repro.core.encode import EncodedGrammar, encode
 from repro.core.flatten import FlatGrammar, FrontierArena, _ragged_arange, concat_ragged
 from repro.core.grammar import Grammar
@@ -51,6 +61,9 @@ _EMPTY = np.zeros(0, dtype=np.int64)
 
 # sentinel: "create a default QueryResultCache unless disabled by env"
 _DEFAULT_CACHE = object()
+
+# sentinel: "resolve the delta budget from ITR_DELTA_BUDGET"
+_DEFAULT_BUDGET = object()
 
 # calibration cap: scalar routing never extends past this batch width
 _MAX_CROSSOVER = 8
@@ -117,8 +130,16 @@ class QueryResultView:
         return out
 
     def materialize(self):
-        """Flat (qids, labels, nodes_flat, offsets) with per-duplicate
-        replication — identical layout/content to `query_batch_arrays`."""
+        """Escape hatch back to the flat batch layout.
+
+        Returns ``(qids, labels, nodes_flat, offsets)`` with every
+        duplicate pattern's results replicated per query id — identical
+        layout and content to `query_batch_arrays`. This re-pays exactly
+        the replication cost the view exists to avoid, so call it only at
+        boundaries that require the flat form (legacy consumers, array
+        serialization); duplicate-heavy warm traffic should stay on the
+        view's shared entries.
+        """
         counts = np.array([len(e[0]) for e in self.entries], dtype=np.int64)
         u_l, u_n, u_o = concat_ragged(self.entries)
         return _replicate_sorted(u_l, u_n, np.diff(u_o), u_o, counts, self.qid_entry)
@@ -168,10 +189,19 @@ class TripleQueryEngine:
     patterns run on the scalar worklist instead of the frontier (``None``
     = read ``ITR_QUERY_CROSSOVER`` or calibrate at build; ``0`` = always
     use the frontier).
+    `delta_budget` bounds the mutation overlay before :meth:`rebuild`
+    recompresses automatically (default: read ``ITR_DELTA_BUDGET``;
+    ``None`` = never auto-rebuild, ``0`` = recompress after every
+    mutation batch — see :func:`repro.core.delta.resolve_delta_budget`).
+    `config` is the :class:`~repro.core.repair.RepairConfig` rebuilds
+    recompress with — pass the one the grammar was built with, or
+    budget-triggered auto-rebuilds would silently fall back to default
+    compression parameters.
     """
 
     def __init__(self, grammar: Grammar, encoded: EncodedGrammar | None = None,
-                 cache=_DEFAULT_CACHE, crossover: int | None = None):
+                 cache=_DEFAULT_CACHE, crossover: int | None = None,
+                 delta_budget=_DEFAULT_BUDGET, config=None):
         self.grammar = grammar
         self.encoded = encoded if encoded is not None else encode(grammar)
         self.T = grammar.table.n_terminals
@@ -210,6 +240,16 @@ class TripleQueryEngine:
             cache = QueryResultCache() if _env_flag("ITR_RESULT_CACHE", True) else None
         self.cache: QueryResultCache | None = cache
         self.crossover = self._calibrate_crossover() if crossover is None else int(crossover)
+        # mutation overlay: uncompressed (inserts, tombstones) delta merged
+        # into every executed batch; bounded by the rebuild budget
+        self.delta = DeltaOverlay()
+        self.config = config  # RepairConfig reused by rebuilds
+        if delta_budget is _DEFAULT_BUDGET:
+            self.delta_budget = resolve_delta_budget()
+        else:  # explicit None = auto-rebuild off; ints resolve (neg = off)
+            self.delta_budget = None if delta_budget is None \
+                else resolve_delta_budget(delta_budget)
+        self.rebuild_count = 0
 
     # -- crossover calibration -------------------------------------------
     def _calibrate_crossover(self) -> int:
@@ -352,11 +392,19 @@ class TripleQueryEngine:
 
     def _execute_unique(self, s: np.ndarray, p: np.ndarray, o: np.ndarray):
         """Crossover dispatch: tiny all-selective batches take the scalar
-        worklist; everything else takes the level-synchronous frontier."""
+        worklist; everything else takes the level-synchronous frontier.
+        Every execution path funnels through here, so this is also where
+        the mutation overlay is merged in (tombstoned base edges dropped,
+        matching inserted triples appended) — views, caches, and the
+        sharded tier all see post-overlay results."""
         w = len(s)
         if 0 < w <= self.crossover and bool(np.all((s >= 0) | (o >= 0))):
-            return self._run_scalar_batch(s, p, o)
-        return self._run_batch_unique(s, p, o)
+            res = self._run_scalar_batch(s, p, o)
+        else:
+            res = self._run_batch_unique(s, p, o)
+        if not self.delta.is_empty:
+            res = self.delta.merge_batch(res, s, p, o)
+        return res
 
     def _run_scalar_batch(self, s: np.ndarray, p: np.ndarray, o: np.ndarray):
         """Per-query worklist over a tiny batch, frontier-shaped results."""
@@ -515,13 +563,23 @@ class TripleQueryEngine:
         """Return matching terminal edges as (label, (v0..vk)) tuples."""
         # cache-less selective single query below the crossover: the scalar
         # worklist already produces tuples — skip the array round-trip
-        if self.cache is None and self.crossover >= 1 and (s is not None or o is not None):
+        # (only while the overlay is empty: query_scalar is base-only)
+        if self.cache is None and self.crossover >= 1 and self.delta.is_empty \
+                and (s is not None or o is not None):
             return self.query_scalar(s, p, o)
         return self.query_batch([s], [p], [o])[0]
 
     def query_scalar(self, s: int | None, p: int | None, o: int | None) -> list[tuple]:
-        """Seed per-query worklist (reference implementation; benchmarks use
-        it as the pre-batching baseline, tests as a parity oracle)."""
+        """Seed-era per-query Python worklist over the COMPRESSED BASE only.
+
+        Not the query path — `query`/`query_batch*` are (they batch,
+        cache, and merge the mutation overlay). This survives as (a) the
+        parity oracle tests compare the batched frontier against, (b) the
+        pre-batching baseline benchmarks report speedups over, and (c) the
+        executor the crossover dispatch routes tiny selective batches to.
+        It deliberately ignores `delta`: overlay merging happens once per
+        executed batch in `_execute_unique`, above this level.
+        """
         if s is not None or o is not None:
             r = s if s is not None else o
             seeds = [self._edge(int(j)) for j in self._row_edges(int(r))]
@@ -560,6 +618,126 @@ class TripleQueryEngine:
             return False
         if o is not None and (len(nodes) < 2 or nodes[1] != o):
             return False
+        return True
+
+    # -- mutation --------------------------------------------------------
+    def insert_triples(self, triples) -> int:
+        """Insert (s, p, o) rows; returns how many were actually new.
+
+        Rows already visible (in the base and not tombstoned, or already
+        buffered) are no-ops; rows matching a tombstone are resurrected.
+        Predicates must be terminal labels of this grammar; node ids may
+        extend past the base graph (the node universe grows at the next
+        rebuild). Any applied mutation bumps the result cache's generation
+        and, once the overlay exceeds `delta_budget`, triggers an
+        automatic :meth:`rebuild`.
+        """
+        rows = as_triple_rows(triples)
+        if len(rows):
+            if int(rows[:, 1].max()) >= self.T:
+                raise ValueError(
+                    f"predicate ids must be < {self.T} (terminal labels); "
+                    f"got {int(rows[:, 1].max())}")
+            if bool(np.any(self.ranks[rows[:, 1]] != 2)):
+                raise ValueError(
+                    "predicates must be rank-2 terminal labels (ITR+ "
+                    "node-label terminals are not triple predicates)")
+            rows = rows[~self._exists_rows(rows)]
+        applied = self.delta.insert_rows(rows)
+        self._after_mutation(applied)
+        return applied
+
+    def delete_triples(self, triples) -> int:
+        """Delete (s, p, o) rows; returns how many were actually present.
+
+        Deleting an overlay insert un-buffers it; deleting a base triple
+        tombstones it; deleting an absent triple is a no-op. Cache
+        generation and the rebuild budget are handled as in
+        :meth:`insert_triples`.
+        """
+        rows = as_triple_rows(triples)
+        if len(rows):
+            rows = rows[self._exists_rows(rows)]
+        applied = self.delta.delete_rows(rows)
+        self._after_mutation(applied)
+        return applied
+
+    def _exists_rows(self, rows: np.ndarray) -> np.ndarray:
+        """bool per row: is this triple currently visible (base minus
+        tombstones plus inserts)? Runs one cache-detached batch query —
+        membership probes must not pollute the cross-request cache with
+        entries the mutation is about to invalidate."""
+        cache, self.cache = self.cache, None
+        try:
+            view = self._run_batch_view(rows[:, 0], rows[:, 1], rows[:, 2])
+        finally:
+            self.cache = cache
+        return view.result_counts() > 0
+
+    def _after_mutation(self, applied: int) -> None:
+        if not applied:
+            return
+        if self.cache is not None:
+            self.cache.bump_generation()
+        if self.delta_budget is not None and self.delta.size > self.delta_budget:
+            self.rebuild()
+
+    def base_triples(self) -> np.ndarray:
+        """The compressed base as (n, 3) rows — requires a pure triple
+        grammar (every decompressed edge rank-2; ITR+ node-label
+        hyperedges cannot be expressed as triples)."""
+        g = self.grammar.decompress()
+        if len(g.labels) and not bool(np.all(g.ranks() == 2)):
+            raise ValueError("base graph has non-triple (rank != 2) edges; "
+                             "triple mutation/rebuild needs a pure triple set")
+        starts = g.offsets[:-1]
+        return np.stack(
+            [g.nodes_flat[starts], g.labels, g.nodes_flat[starts + 1]], axis=1) \
+            if len(g.labels) else np.zeros((0, 3), dtype=np.int64)
+
+    def current_triples(self) -> np.ndarray:
+        """The logical triple set: decompressed base with the overlay
+        applied (tombstones removed, inserts appended)."""
+        return self.delta.apply(self.base_triples())
+
+    def rebuild(self, config=None) -> bool:
+        """Recompress base+delta into a fresh grammar and swap it in.
+
+        The full RePair pipeline runs on the overlay-applied triple set
+        with `config` (default: the config this engine was built with);
+        every derived structure (succinct encoding, flattened CSR, NT
+        k²-tree, arena, crossover) is rebuilt, then the engine's
+        attributes are replaced in one ``__dict__`` update — the engine
+        is never observable in a partially-rebuilt state *between* method
+        calls. The engine is NOT thread-safe, though: a query executing
+        concurrently with the swap can read attributes from both sides of
+        it; serialize rebuilds against queries externally. The attached
+        cache view survives the swap and gets a generation bump. Returns
+        True if a rebuild ran (False when the overlay is empty).
+        """
+        if self.delta.is_empty:
+            return False
+        from repro.core.hypergraph import Hypergraph, LabelTable
+        from repro.core.repair import compress
+
+        config = config if config is not None else self.config
+        triples = self.current_triples()
+        n_nodes = self.grammar.start.n_nodes
+        if len(triples):
+            n_nodes = max(n_nodes, int(triples[:, [0, 2]].max()) + 1)
+        table = LabelTable.terminals(self.grammar.table.ranks[:self.T].copy(),
+                                     names=self.grammar.table.names)
+        grammar, _ = compress(Hypergraph.from_triples(triples, n_nodes), table,
+                              config)
+        fresh = TripleQueryEngine(grammar, cache=self.cache,
+                                  crossover=self.crossover,
+                                  delta_budget=self.delta_budget,
+                                  config=config)
+        rebuilds = self.rebuild_count + 1
+        self.__dict__.update(fresh.__dict__)
+        self.rebuild_count = rebuilds
+        if self.cache is not None:
+            self.cache.bump_generation()
         return True
 
     # -- convenience -----------------------------------------------------

@@ -26,9 +26,11 @@ The cache doubles as the **shared tier** of the sharded serving stack
 S, P, O)``, so one instance can back many per-partition engines without
 cross-shard collisions. :meth:`shard_view` returns a shard-bound adapter
 with the engine-facing ``lookup``/``insert``/``stats`` surface, and
-:meth:`bump_generation` is the invalidation hook for when graphs become
-mutable — bumping a shard's generation makes its entries unreachable
-(and purges them eagerly so they stop consuming the edge budgets).
+:meth:`bump_generation` is the invalidation hook the mutation path leans
+on: every applied ``insert_triples``/``delete_triples`` (and every
+grammar rebuild) bumps exactly the mutated shard's generation, making
+its entries unreachable (and purging them eagerly so they stop consuming
+the edge budgets) while every other shard's warm entries survive.
 
 Segment routing is computed from the *pattern* alone, never the shard or
 generation: a shard-qualified ``?P?`` entry still lands in the predicate
@@ -234,6 +236,11 @@ class ShardCacheView:
 
     def insert(self, s: int, p: int, o: int, value: CacheEntry) -> None:
         self.cache.insert(s, p, o, value, shard=self.shard)
+
+    def generation(self) -> int:
+        """This shard's current cache generation (mutations bump it; a
+        warm entry from an older generation is unreachable by design)."""
+        return self.cache.generation(self.shard)
 
     def bump_generation(self) -> int:
         return self.cache.bump_generation(self.shard)

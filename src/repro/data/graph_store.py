@@ -12,6 +12,13 @@ Point lookups share the engine's cross-request result cache: a
 neighborhood query is the (v, ?, ?) / (?, ?, v) pattern, so hot entities
 hit the same LRU as triple-pattern traffic (`query_cache_stats` exposes
 hit/miss/eviction counters for serving dashboards).
+
+The store is writable: `insert_triples`/`delete_triples` ride the
+engine's delta overlay, so point lookups stay exact immediately, and the
+materialized CSR/CSC training views are invalidated (and rebuilt
+overlay-applied on next use). Node ids must stay within the store's
+fixed `n_nodes` universe — training adjacency shapes are allocated
+against it — unlike the bare engine, which lets inserts grow the graph.
 """
 from __future__ import annotations
 
@@ -31,12 +38,13 @@ _DEFAULT = object()  # "engine decides" sentinel: cache=None must mean OFF
 
 
 class GraphStore:
-    def __init__(self, grammar, stats=None, cache=_DEFAULT):
+    def __init__(self, grammar, stats=None, cache=_DEFAULT, config=None):
         self.grammar = grammar
         self.stats = stats
         self.encoded = encode(grammar)
         engine_kwargs = {} if cache is _DEFAULT else {"cache": cache}
-        self.engine = TripleQueryEngine(grammar, self.encoded, **engine_kwargs)
+        self.engine = TripleQueryEngine(grammar, self.encoded, config=config,
+                                        **engine_kwargs)
         self._csr = None
         self._csc = None
 
@@ -48,7 +56,7 @@ class GraphStore:
         table = LabelTable.terminals([2] * n_preds)
         graph = Hypergraph.from_triples(triples, n_nodes)
         grammar, stats = compress(graph, table, config)
-        return cls(grammar, stats)
+        return cls(grammar, stats, config=config)
 
     @property
     def n_nodes(self) -> int:
@@ -88,26 +96,60 @@ class GraphStore:
     def compressed_size_bytes(self) -> int:
         return self.encoded.size_in_bytes()
 
+    # ----------------------------------------------------------- mutation
+    def insert_triples(self, triples) -> int:
+        """Insert (s, p, o) rows (engine delta overlay); returns how many
+        were actually new. Node ids must be < `n_nodes` — the training
+        views' shapes are fixed at build. Materialized CSR/CSC views are
+        dropped and rebuilt overlay-applied on next use."""
+        rows = np.asarray(triples, dtype=np.int64).reshape(-1, 3)
+        if len(rows) and int(rows[:, [0, 2]].max()) >= self.n_nodes:
+            raise ValueError(
+                f"node ids must be < n_nodes={self.n_nodes}; rebuild the "
+                f"store from triples to grow the node universe")
+        return self._after_mutation(self.engine.insert_triples(rows))
+
+    def delete_triples(self, triples) -> int:
+        """Delete (s, p, o) rows; returns how many were actually present."""
+        return self._after_mutation(self.engine.delete_triples(triples))
+
+    def rebuild(self, config=None) -> bool:
+        """Recompress base+delta now; True if the overlay was non-empty."""
+        return bool(self._after_mutation(int(self.engine.rebuild(config))))
+
+    def _after_mutation(self, applied: int) -> int:
+        """Refresh grammar/encoding refs (the engine swaps them on
+        auto-rebuild) and drop materialized views when anything changed."""
+        if applied:
+            self.grammar = self.engine.grammar
+            self.encoded = self.engine.encoded
+            self._csr = None
+            self._csc = None
+        return applied
+
     # ---------------------------------------------------- training paths
+    def _rank2_rows(self) -> np.ndarray:
+        """Logical (s, p, o) rows: decompressed rank-2 base edges with the
+        mutation overlay applied (ITR+ node-label edges are skipped)."""
+        g = self.grammar.decompress()
+        r2 = g.ranks() == 2
+        starts = g.offsets[:-1][r2]
+        rows = np.stack(
+            [g.nodes_flat[starts], g.labels[r2], g.nodes_flat[starts + 1]],
+            axis=1) if r2.any() else np.zeros((0, 3), dtype=np.int64)
+        return self.engine.delta.apply(rows)
+
     def csr(self) -> tuple[np.ndarray, np.ndarray]:
         """(indptr, indices) over out-edges; materialized once."""
         if self._csr is None:
-            g = self.grammar.decompress()
-            ranks = g.ranks()
-            r2 = ranks == 2
-            src = g.nodes_flat[g.offsets[:-1][r2]]
-            dst = g.nodes_flat[g.offsets[:-1][r2] + 1]
-            self._csr = _to_csr(src, dst, self.n_nodes)
+            rows = self._rank2_rows()
+            self._csr = _to_csr(rows[:, 0], rows[:, 2], self.n_nodes)
         return self._csr
 
     def csc(self) -> tuple[np.ndarray, np.ndarray]:
         if self._csc is None:
-            g = self.grammar.decompress()
-            ranks = g.ranks()
-            r2 = ranks == 2
-            src = g.nodes_flat[g.offsets[:-1][r2]]
-            dst = g.nodes_flat[g.offsets[:-1][r2] + 1]
-            self._csc = _to_csr(dst, src, self.n_nodes)
+            rows = self._rank2_rows()
+            self._csc = _to_csr(rows[:, 2], rows[:, 0], self.n_nodes)
         return self._csc
 
     def edge_index(self) -> tuple[np.ndarray, np.ndarray]:

@@ -20,6 +20,14 @@ send selective patterns to a single shard:
 
 Plans are pure numpy and stateless — routing a million-pattern batch is
 one vectorized pass (`route_batch`).
+
+Placement and routing share one rule, which is what keeps the tier
+correct under mutation: `route_triples` sends an inserted/deleted (s, p,
+o) row to exactly the shard whose engine would answer an owned pattern
+for it, so a shard's delta overlay never holds a triple another shard
+would be asked about. Ids outside the planned universe (e.g. subjects
+past the last `node_range` boundary, from inserts that grow the graph)
+clip onto the last shard — again identically for placement and queries.
 """
 from __future__ import annotations
 
@@ -79,6 +87,20 @@ class PartitionPlan:
         idx = np.searchsorted(self.boundaries, np.asarray(nodes, dtype=np.int64),
                               side="right") - 1
         return np.clip(idx, 0, self.n_shards - 1)
+
+    def route_triples(self, triples: np.ndarray) -> np.ndarray:
+        """Owning shard per mutation row — the write-path routing surface.
+
+        Identical to :meth:`triple_shards` (one placement rule for build
+        and mutation, by construction), but validates the ``(n, 3)``
+        shape so a malformed mutation batch fails here instead of
+        landing rows on arbitrary shards.
+        """
+        triples = np.asarray(triples, dtype=np.int64)
+        if triples.ndim != 2 or triples.shape[1] != 3:
+            raise ValueError(
+                f"expected (n, 3) triple rows, got shape {triples.shape}")
+        return self.triple_shards(triples)
 
     # -- pattern routing -------------------------------------------------
     def route(self, s: int, p: int, o: int) -> int:

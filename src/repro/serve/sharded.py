@@ -22,9 +22,17 @@ lookup — no fan-out, no re-concatenation. ``flush()`` materializes tuple
 lists per *unique* pattern — ``flush_view()`` is the zero-replication
 escape hatch.
 
-``invalidate(shard)`` bumps the shared cache's per-shard generation — the
-hook for the day partitions become mutable: rewriting one shard's grammar
-must not cold-start the other shards' warm entries.
+Partitions are mutable. ``insert_triples``/``delete_triples`` route
+mutation rows to their owning shard (``PartitionPlan.route_triples`` —
+the same placement rule the build used, so a shard's overlay only ever
+holds triples that shard would answer for) and apply them to that
+engine's :class:`~repro.core.delta.DeltaOverlay`; ``invalidate(shard)``
+then bumps ONLY the mutated shards' cache generations (plus the merged
+namespace, whose entries depend on every shard) so the other shards stay
+warm. When a shard's overlay outgrows the engines' ``ITR_DELTA_BUDGET``
+it alone is recompressed through the RePair pipeline and atomically
+swapped — :meth:`ShardedTripleService.rebuild` is the explicit handle —
+which is what makes rebuild cost O(dirty shards), not O(graph).
 """
 from __future__ import annotations
 
@@ -41,7 +49,13 @@ from repro.core import (
     compress,
 )
 from repro.core.flatten import concat_ragged
-from repro.core.query import QueryResultView, _env_flag, _freeze_entry
+from repro.core.delta import as_triple_rows
+from repro.core.query import (
+    _DEFAULT_BUDGET,
+    QueryResultView,
+    _env_flag,
+    _freeze_entry,
+)
 from repro.distributed.partition import (
     PartitionPlan,
     make_plan,
@@ -79,6 +93,9 @@ class ShardedServiceStats:
     scattered: int = 0
     merged_hits: int = 0  # scattered patterns answered from the merged tier
     shard_batches: int = 0
+    inserted: int = 0     # triples actually added (mutation no-ops excluded)
+    deleted: int = 0      # triples actually removed
+    rebuilds: int = 0     # per-shard grammar recompressions (auto + explicit)
     total_s: float = 0.0
     last_flush_qps: float = 0.0
 
@@ -97,7 +114,8 @@ class ShardedTripleService(MicroBatchService):
     """
 
     def __init__(self, engines: list[TripleQueryEngine], plan: PartitionPlan,
-                 cache: QueryResultCache | None = None, max_batch: int = 1024):
+                 cache: QueryResultCache | None = None, max_batch: int = 1024,
+                 config=None):
         super().__init__()
         assert len(engines) == plan.n_shards, \
             f"{len(engines)} engines for {plan.n_shards} shards"
@@ -105,6 +123,7 @@ class ShardedTripleService(MicroBatchService):
         self.plan = plan
         self.cache = cache  # the shared tier (engines hold shard views of it)
         self.max_batch = int(max_batch)
+        self.config = config  # RepairConfig reused by per-shard rebuilds
         self.stats = ShardedServiceStats()
 
     # -- construction ----------------------------------------------------
@@ -112,16 +131,21 @@ class ShardedTripleService(MicroBatchService):
     def build(cls, triples: np.ndarray, n_nodes: int, n_preds: int,
               n_shards: int = 4, strategy: str = "predicate_hash",
               config=None, cache=_DEFAULT_CACHE, crossover: int | None = None,
-              max_batch: int = 1024) -> "ShardedTripleService":
+              max_batch: int = 1024, delta_budget=_DEFAULT_BUDGET
+              ) -> "ShardedTripleService":
         """Partition -> compress each subgraph -> one engine per shard.
 
         `cache` is the shared result-cache tier (default: one
         :class:`QueryResultCache` shared by all shards, disabled by
         ``ITR_RESULT_CACHE=0``; pass ``None`` to disable explicitly).
+        `delta_budget` is each engine's mutation-overlay rebuild threshold
+        (default: read ``ITR_DELTA_BUDGET``; ``None`` = auto-rebuild off).
         """
         plan = make_plan(strategy, n_shards, n_nodes, n_preds, triples=triples)
         if cache is _DEFAULT_CACHE:
             cache = QueryResultCache() if _env_flag("ITR_RESULT_CACHE", True) else None
+        engine_kwargs = {} if delta_budget is _DEFAULT_BUDGET \
+            else {"delta_budget": delta_budget}
         engines = []
         for k, sub in enumerate(partition_triples(triples, plan)):
             table = LabelTable.terminals([2] * n_preds)
@@ -130,8 +154,8 @@ class ShardedTripleService(MicroBatchService):
             engines.append(TripleQueryEngine(
                 grammar,
                 cache=cache.shard_view(k) if cache is not None else None,
-                crossover=crossover))
-        return cls(engines, plan, cache, max_batch)
+                crossover=crossover, config=config, **engine_kwargs))
+        return cls(engines, plan, cache, max_batch, config=config)
 
     @property
     def n_shards(self) -> int:
@@ -230,6 +254,82 @@ class ShardedTripleService(MicroBatchService):
             out.extend(view.entry(i) for i in range(view.n_queries))
             self.stats.shard_batches += 1
         return out
+
+    # -- mutation ---------------------------------------------------------
+    def insert_triples(self, triples) -> int:
+        """Insert (s, p, o) rows; returns how many were actually new.
+
+        Each row is routed to its owning shard (`PartitionPlan
+        .route_triples`) and applied to that engine's delta overlay; only
+        the mutated shards' cache generations are bumped (plus the merged
+        scatter-gather namespace). A shard whose overlay exceeds the
+        engines' ``ITR_DELTA_BUDGET`` recompresses itself on the spot —
+        the incremental-rebuild path.
+        """
+        return self._mutate(triples, insert=True)
+
+    def delete_triples(self, triples) -> int:
+        """Delete (s, p, o) rows; returns how many were actually present.
+        Routing, invalidation, and the rebuild budget behave exactly as in
+        :meth:`insert_triples`."""
+        return self._mutate(triples, insert=False)
+
+    def _mutate(self, triples, insert: bool) -> int:
+        rows = as_triple_rows(triples)
+        if len(rows) == 0:
+            return 0
+        if int(rows[:, 1].max()) >= self.plan.n_preds:
+            raise ValueError(
+                f"predicate ids must be < {self.plan.n_preds}; "
+                f"got {int(rows[:, 1].max())}")
+        shards = self.plan.route_triples(rows)
+        applied = 0
+        for k in np.unique(shards):
+            k = int(k)
+            engine = self.engines[k]
+            sub = rows[shards == k]
+            before = engine.rebuild_count
+            n = engine.insert_triples(sub) if insert \
+                else engine.delete_triples(sub)
+            self.stats.rebuilds += engine.rebuild_count - before
+            if n:  # only mutated shards lose their warm cache entries
+                applied += n
+                self.invalidate(k)
+        if insert:
+            self.stats.inserted += applied
+        else:
+            self.stats.deleted += applied
+        return applied
+
+    def rebuild(self, shard: int | None = None, force: bool = False) -> list[int]:
+        """Incrementally recompress dirty shards; returns rebuilt shard ids.
+
+        With `shard` given, that shard rebuilds if its overlay is
+        non-empty. With `shard=None`, every shard whose overlay exceeds
+        its engine's budget rebuilds — or every shard with any overlay at
+        all under `force=True` (the "flush all deltas now" maintenance
+        knob). Clean shards are never touched, which is the point: rebuild
+        cost scales with the mutated fraction of the graph, not its size.
+        """
+        shards = range(self.n_shards) if shard is None else [int(shard)]
+        rebuilt: list[int] = []
+        for k in shards:
+            engine = self.engines[k]
+            if engine.delta.is_empty:
+                continue
+            over = engine.delta_budget is not None \
+                and engine.delta.size > engine.delta_budget
+            if shard is not None or force or over:
+                engine.rebuild(self.config)
+                self.stats.rebuilds += 1
+                self.invalidate(k)
+                rebuilt.append(k)
+        return rebuilt
+
+    def delta_sizes(self) -> list[int]:
+        """Per-shard overlay size (rows diverging from the compressed
+        base) — the quantity :meth:`rebuild` budgets against."""
+        return [e.delta.size for e in self.engines]
 
     # -- maintenance / introspection -------------------------------------
     def invalidate(self, shard: int | None = None) -> None:

@@ -48,6 +48,9 @@ class ServiceStats:
     results: int = 0
     executed: int = 0
     cache_hits: int = 0
+    inserted: int = 0   # triples actually added via the mutation API
+    deleted: int = 0    # triples actually removed
+    rebuilds: int = 0   # grammar recompressions (auto + explicit)
     total_s: float = 0.0
     last_batch_qps: float = 0.0
 
@@ -173,3 +176,30 @@ class TripleQueryService(MicroBatchService):
         else:
             self.stats.executed += executed_uncached
         return view
+
+    # -- mutation ---------------------------------------------------------
+    def insert_triples(self, triples) -> int:
+        """Insert (s, p, o) rows into the engine's delta overlay; returns
+        how many were actually new. Subsequent flushes see them — the
+        engine bumps its cache generation and auto-rebuilds past
+        ``ITR_DELTA_BUDGET`` (see :meth:`TripleQueryEngine.insert_triples`)."""
+        before = self.engine.rebuild_count
+        n = self.engine.insert_triples(triples)
+        self.stats.inserted += n
+        self.stats.rebuilds += self.engine.rebuild_count - before
+        return n
+
+    def delete_triples(self, triples) -> int:
+        """Delete (s, p, o) rows; returns how many were actually present."""
+        before = self.engine.rebuild_count
+        n = self.engine.delete_triples(triples)
+        self.stats.deleted += n
+        self.stats.rebuilds += self.engine.rebuild_count - before
+        return n
+
+    def rebuild(self, config=None) -> bool:
+        """Recompress base+delta now (regardless of budget); True if the
+        overlay was non-empty and a rebuild ran."""
+        rebuilt = self.engine.rebuild(config)
+        self.stats.rebuilds += rebuilt
+        return rebuilt

@@ -1,0 +1,367 @@
+"""Mutation subsystem: delta overlay set semantics, engine insert/delete
+parity against a from-scratch engine on the mutated triple set (all 8
+patterns), incremental per-shard rebuild, budget-driven auto-rebuild, and
+cache-generation hygiene (only mutated shards bumped)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeltaOverlay,
+    Hypergraph,
+    LabelTable,
+    TripleQueryEngine,
+    compress,
+    resolve_delta_budget,
+)
+from repro.data.graph_store import GraphStore
+from repro.serve.sharded import _MERGED_SHARD, ShardedTripleService
+from repro.serve.triple_service import TripleQueryService
+
+PATTERN_NAMES = ["s??", "?p?", "??o", "sp?", "s?o", "?po", "spo", "???"]
+
+N_NODES, N_PREDS = 15, 3
+
+
+def _bind(pattern, s, p, o):
+    return (s if pattern[0] == "s" else None,
+            p if pattern[1] == "p" else None,
+            o if pattern[2] == "o" else None)
+
+
+def _unique_triples(seed, n_edges=60, n_nodes=N_NODES, n_preds=N_PREDS):
+    rng = np.random.default_rng(seed)
+    t = np.stack([rng.integers(0, n_nodes, n_edges),
+                  rng.integers(0, n_preds, n_edges),
+                  rng.integers(0, n_nodes, n_edges)], axis=1)
+    return np.unique(t, axis=0)
+
+
+def _engine(triples, n_nodes=N_NODES, n_preds=N_PREDS, **kwargs):
+    table = LabelTable.terminals([2] * n_preds)
+    grammar, _ = compress(Hypergraph.from_triples(triples, n_nodes), table)
+    kwargs.setdefault("cache", None)
+    kwargs.setdefault("crossover", 0)
+    kwargs.setdefault("delta_budget", None)
+    return TripleQueryEngine(grammar, **kwargs)
+
+
+def _assert_parity(query_fn, oracle_engine, probe_rows):
+    """Every pattern bound from every probe row must match the oracle."""
+    for row in probe_rows:
+        s, p, o = map(int, row)
+        for pattern in PATTERN_NAMES:
+            qs, qp, qo = _bind(pattern, s, p, o)
+            got = sorted(query_fn(qs, qp, qo))
+            want = sorted(oracle_engine.query_scalar(qs, qp, qo))
+            assert got == want, (pattern, (s, p, o))
+
+
+def _mutate_and_logical(target, base):
+    """Apply a fixed insert/delete interleaving to `target` (engine-like
+    mutation surface); returns (logical rows, probe rows). The expected
+    set is tracked in plain Python, independent of the delta code."""
+    base_set = {tuple(map(int, r)) for r in base}
+    ins1 = np.array([[1, 0, 14], [2, 1, 3], [13, 2, 0], [0, 0, 0]])
+    del1 = base[:5]
+    ins2 = np.concatenate([del1[:2], ins1[:1]])  # resurrect 2, re-insert 1
+    del2 = ins1[1:2]                             # un-buffer one overlay insert
+    logical = set(base_set)
+    for rows, op in ((ins1, "i"), (del1, "d"), (ins2, "i"), (del2, "d")):
+        applied = target.insert_triples(rows) if op == "i" \
+            else target.delete_triples(rows)
+        want = {tuple(map(int, r)) for r in rows}
+        expected = len(want - logical) if op == "i" else len(want & logical)
+        assert applied == expected
+        logical = logical | want if op == "i" else logical - want
+    probes = np.concatenate([base[5:7], ins1[:2], del1[:2], del2])
+    return np.array(sorted(logical)), probes
+
+
+# ------------------------------------------------------------- delta unit
+def test_delta_overlay_set_semantics():
+    d = DeltaOverlay()
+    assert d.is_empty and d.size == 0
+    rows = np.array([[1, 0, 2], [3, 1, 4]])
+    assert d.insert_rows(rows) == 2
+    assert d.n_inserts == 2 and d.n_tombstones == 0
+    # deleting an overlay insert un-buffers it
+    assert d.delete_rows(rows[:1]) == 1
+    assert d.n_inserts == 1 and d.n_tombstones == 0
+    # deleting a base row tombstones it
+    base_row = np.array([[9, 2, 9]])
+    assert d.delete_rows(base_row) == 1
+    assert d.n_tombstones == 1
+    # re-inserting a tombstoned row resurrects (tombstone dropped)
+    assert d.insert_rows(base_row) == 1
+    assert d.n_tombstones == 0 and d.n_inserts == 1
+    assert d.size == 1
+    d.clear()
+    assert d.is_empty
+
+
+def test_delta_apply_keeps_base_duplicates():
+    d = DeltaOverlay()
+    base = np.array([[1, 0, 2], [1, 0, 2], [3, 0, 4]])
+    d.insert_rows(np.array([[5, 1, 6]]))
+    d.delete_rows(np.array([[3, 0, 4]]))
+    out = {tuple(r) for r in d.apply(base)}
+    assert out == {(1, 0, 2), (5, 1, 6)}
+    # both duplicate copies of a surviving base row are kept
+    assert len(d.apply(base)) == 3
+
+
+def test_resolve_delta_budget_spellings(monkeypatch):
+    monkeypatch.delenv("ITR_DELTA_BUDGET", raising=False)
+    from repro.core.delta import DEFAULT_DELTA_BUDGET
+
+    assert resolve_delta_budget() == DEFAULT_DELTA_BUDGET
+    for spelling in ("off", "NONE", " never "):
+        monkeypatch.setenv("ITR_DELTA_BUDGET", spelling)
+        assert resolve_delta_budget() is None
+    monkeypatch.setenv("ITR_DELTA_BUDGET", "128")
+    assert resolve_delta_budget() == 128
+    monkeypatch.setenv("ITR_DELTA_BUDGET", "0")
+    assert resolve_delta_budget() == 0
+    monkeypatch.setenv("ITR_DELTA_BUDGET", "-5")
+    assert resolve_delta_budget() is None
+    monkeypatch.setenv("ITR_DELTA_BUDGET", "not-a-number")
+    assert resolve_delta_budget() == DEFAULT_DELTA_BUDGET
+    # explicit values bypass the environment entirely
+    assert resolve_delta_budget(7) == 7
+    assert resolve_delta_budget(-1) is None
+
+
+def test_mutation_batch_validation():
+    eng = _engine(_unique_triples(0))
+    with pytest.raises(ValueError):
+        eng.insert_triples(np.array([[1, 2]]))        # wrong shape
+    with pytest.raises(ValueError):
+        eng.insert_triples(np.array([[-1, 0, 2]]))    # negative id
+    with pytest.raises(ValueError):
+        eng.insert_triples(np.array([[1, N_PREDS, 2]]))  # unknown predicate
+    assert eng.insert_triples(np.zeros((0, 3), dtype=np.int64)) == 0
+    assert eng.delta.is_empty
+    # a rank-1 terminal (ITR+ node-label style) is not a triple predicate
+    table = LabelTable.terminals([2] * N_PREDS + [1])
+    grammar, _ = compress(
+        Hypergraph.from_triples(_unique_triples(0), N_NODES), table)
+    eng1 = TripleQueryEngine(grammar, cache=None, crossover=0,
+                             delta_budget=None)
+    with pytest.raises(ValueError):
+        eng1.insert_triples(np.array([[1, N_PREDS, 2]]))
+
+
+# ------------------------------------------------------------ engine level
+def test_engine_overlay_parity_and_rebuild():
+    base = _unique_triples(1)
+    eng = _engine(base)
+    logical, probes = _mutate_and_logical(eng, base)
+    assert not eng.delta.is_empty
+    assert {tuple(r) for r in eng.current_triples()} == \
+        {tuple(map(int, r)) for r in logical}
+    oracle = _engine(logical)
+    _assert_parity(eng.query, oracle, probes)
+    # rebuild recompresses base+delta; results must not change
+    assert eng.rebuild() is True
+    assert eng.delta.is_empty and eng.rebuild_count == 1
+    assert eng.rebuild() is False  # empty overlay: no-op
+    _assert_parity(eng.query, oracle, probes)
+
+
+def test_engine_insert_grows_node_universe_on_rebuild():
+    base = _unique_triples(2)
+    eng = _engine(base)
+    eng.insert_triples(np.array([[1, 0, 99]]))
+    assert (0, (1, 99)) in eng.query(1, 0, None)      # overlay answers
+    assert eng.query(99, None, None) == []            # 99 has no out-edges
+    eng.rebuild()
+    assert eng.grammar.start.n_nodes >= 100
+    assert (0, (1, 99)) in eng.query(1, 0, None)      # compressed answers
+
+
+def test_engine_auto_rebuild_at_budget():
+    base = _unique_triples(3)
+    eng = _engine(base, delta_budget=0)  # recompress after every mutation
+    assert eng.insert_triples(np.array([[2, 1, 5]])) in (0, 1)
+    assert eng.delta.is_empty  # either a no-op or immediately rebuilt
+    eng2 = _engine(base, delta_budget=2)
+    new_rows = np.array([[0, 0, 14], [14, 1, 0], [7, 2, 8]])
+    new_rows = new_rows[~np.array(
+        [tuple(r) in {tuple(b) for b in base} for r in new_rows.tolist()])]
+    eng2.insert_triples(new_rows[:1])
+    assert eng2.rebuild_count == 0                    # within budget
+    eng2.insert_triples(new_rows[1:])
+    assert eng2.rebuild_count == 1 and eng2.delta.is_empty
+
+
+def test_rebuild_reuses_build_config():
+    """Budget-triggered auto-rebuilds must recompress with the config the
+    engine/service was built with, not silently fall back to defaults."""
+    from repro.core import RepairConfig
+
+    cfg = RepairConfig(max_iters=0)  # distinctive: no rules at all
+    base = _unique_triples(13)
+    svc = ShardedTripleService.build(base, N_NODES, N_PREDS, n_shards=2,
+                                     strategy="predicate_hash", config=cfg,
+                                     delta_budget=0)
+    assert all(e.config is cfg for e in svc.engines)
+    rows = np.array([[0, 1, 14], [14, 0, 0]])
+    rows = rows[~np.array([tuple(r) in {tuple(b) for b in base}
+                           for r in rows.tolist()])]
+    svc.insert_triples(rows)  # budget 0 -> auto-rebuild inside the engine
+    for e in svc.engines:
+        assert e.delta.is_empty
+        assert len(e.grammar.rules) == 0  # max_iters=0 config survived
+        assert e.config is cfg
+
+
+def test_query_fast_path_includes_overlay():
+    """The cache-less selective fast path must not bypass the overlay."""
+    base = _unique_triples(4)
+    eng = _engine(base, crossover=4)  # fast path active (crossover >= 1)
+    assert eng.cache is None
+    eng.insert_triples(np.array([[1, 0, 13]]))
+    assert (0, (1, 13)) in eng.query(1, None, None)
+    eng.delete_triples(base[:1])
+    s, p, o = map(int, base[0])
+    assert (p, (s, o)) not in eng.query(s, p, o)
+
+
+def test_neighbors_include_overlay():
+    base = _unique_triples(5)
+    eng = _engine(base)
+    eng.insert_triples(np.array([[3, 1, 11]]))
+    assert 11 in eng.neighbors_out(3)
+    assert 3 in eng.neighbors_in(11)
+
+
+def test_mutation_bumps_engine_cache_generation():
+    from repro.core import QueryResultCache
+
+    base = _unique_triples(6)
+    cache = QueryResultCache()
+    eng = _engine(base, cache=cache)
+    s = int(base[0][0])
+    warm = eng.query(s, None, None)
+    assert eng.query(s, None, None) == warm  # cache hit path
+    gen = cache.generation()
+    eng.insert_triples(np.array([[s, 0, 12], [s, 0, 13]]))
+    assert cache.generation() > gen
+    got = eng.query(s, None, None)
+    assert (0, (s, 12)) in got and (0, (s, 13)) in got  # no stale entry
+
+
+# ----------------------------------------------------------- sharded tier
+@pytest.mark.parametrize("strategy", ["predicate_hash", "node_range"])
+@pytest.mark.parametrize("n_shards", [2, 3])
+def test_sharded_mutation_parity(strategy, n_shards):
+    base = _unique_triples(7, n_edges=80)
+    svc = ShardedTripleService.build(base, N_NODES, N_PREDS,
+                                     n_shards=n_shards, strategy=strategy,
+                                     delta_budget=None)
+    logical, probes = _mutate_and_logical(svc, base)
+    oracle = _engine(logical)
+    assert sum(svc.delta_sizes()) > 0
+    _assert_parity(svc.query, oracle, probes)          # overlay path
+    rebuilt = svc.rebuild(force=True)                  # forced incremental
+    assert rebuilt and all(e.delta.is_empty for e in svc.engines)
+    assert svc.rebuild(force=True) == []               # all clean now
+    _assert_parity(svc.query, oracle, probes)          # compressed path
+
+
+def test_sharded_mutation_bumps_only_mutated_shards():
+    base = _unique_triples(8, n_edges=80)
+    svc = ShardedTripleService.build(base, N_NODES, N_PREDS, n_shards=4,
+                                     strategy="predicate_hash",
+                                     delta_budget=None)
+    gens = [svc.cache.generation(k) for k in range(4)]
+    # all mutation rows share one predicate -> exactly one owning shard
+    rows = np.array([[1, 1, 2], [3, 1, 4], [5, 1, 6]])
+    target = int(svc.plan.route_triples(rows)[0])
+    assert svc.insert_triples(rows) > 0
+    for k in range(4):
+        if k == target:
+            assert svc.cache.generation(k) > gens[k]
+        else:  # unmutated shards keep their warm entries
+            assert svc.cache.generation(k) == gens[k]
+    # merged cross-shard namespace depends on every shard: always bumped
+    assert svc.cache.generation(_MERGED_SHARD) > 0
+
+
+def test_sharded_budget_rebuilds_only_dirty_shard():
+    base = _unique_triples(9, n_edges=80)
+    svc = ShardedTripleService.build(base, N_NODES, N_PREDS, n_shards=4,
+                                     strategy="predicate_hash",
+                                     delta_budget=1)
+    rows = np.array([[0, 2, 1], [2, 2, 3], [4, 2, 5], [6, 2, 7]])
+    rows = rows[~np.array([tuple(r) in {tuple(b) for b in base}
+                           for r in rows.tolist()])]
+    target = int(svc.plan.route_triples(rows)[0])
+    counts_before = [e.rebuild_count for e in svc.engines]
+    svc.insert_triples(rows)  # 1 shard exceeds budget -> auto-rebuild
+    for k, e in enumerate(svc.engines):
+        expect = counts_before[k] + (1 if k == target else 0)
+        assert e.rebuild_count == expect
+    assert svc.stats.rebuilds == 1
+    assert svc.engines[target].delta.is_empty
+    for s, p, o in rows:
+        assert (int(p), (int(s), int(o))) in svc.query(int(s), int(p), int(o))
+
+
+def test_sharded_warm_scatter_results_refresh_after_mutation():
+    base = _unique_triples(10, n_edges=80)
+    svc = ShardedTripleService.build(base, N_NODES, N_PREDS, n_shards=3,
+                                     strategy="node_range", delta_budget=None)
+    before = svc.query(None, 1, None)    # ?P? scatters; merged entry cached
+    assert svc.query(None, 1, None) == before
+    row = np.array([[2, 1, 9]])
+    if svc.insert_triples(row) == 0:     # already present: delete instead
+        svc.delete_triples(row)
+        assert (1, (2, 9)) not in svc.query(None, 1, None)
+    else:
+        assert (1, (2, 9)) in svc.query(None, 1, None)
+
+
+# ------------------------------------------------------- service fronts
+def test_triple_service_mutation_stats():
+    base = _unique_triples(11)
+    svc = TripleQueryService(_engine(base))
+    n = svc.insert_triples(np.array([[1, 0, 11], [2, 1, 12]]))
+    assert n == svc.stats.inserted == 2
+    assert svc.delete_triples(base[:3]) == svc.stats.deleted == 3
+    assert svc.query_many([(1, 0, None)])[0]  # flush sees the overlay
+    assert svc.rebuild() is True and svc.stats.rebuilds == 1
+    assert svc.rebuild() is False and svc.stats.rebuilds == 1
+
+
+def test_graph_store_mutation():
+    base = _unique_triples(12)
+    store = GraphStore.from_triples(base, N_NODES, N_PREDS)
+    indptr, _ = store.csr()  # materialize, then mutate
+    new = np.array([[1, 0, 13]])
+    present = tuple(new[0]) in {tuple(r) for r in base}
+    n = store.insert_triples(new)
+    assert n == (0 if present else 1)
+    store.delete_triples(base[:2])
+    # point path and training views both reflect the overlay
+    assert (0, (1, 13)) in store.triples(1, 0, None)
+    indptr2, indices2 = store.csr()
+    s0, _, o0 = map(int, base[0])
+    assert o0 not in indices2[indptr2[s0]:indptr2[s0 + 1]] or \
+        (base[:2, 0] != s0).all()
+    assert 13 in indices2[indptr2[1]:indptr2[2]]
+    with pytest.raises(ValueError):  # fixed node universe
+        store.insert_triples(np.array([[1, 0, N_NODES]]))
+    assert store.rebuild() is True
+    assert store.grammar is store.engine.grammar  # refs refreshed
+    assert (0, (1, 13)) in store.triples(1, 0, None)
+
+
+def test_route_triples_validates_shape():
+    from repro.distributed.partition import make_plan
+
+    plan = make_plan("predicate_hash", 2, N_NODES, N_PREDS)
+    with pytest.raises(ValueError):
+        plan.route_triples(np.array([1, 2, 3]))
+    shards = plan.route_triples(np.array([[1, 0, 2]]))
+    assert shards.shape == (1,) and 0 <= shards[0] < 2
