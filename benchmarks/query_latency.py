@@ -25,7 +25,13 @@ trajectory from PR 1 onward:
   (the same mixed workload on one engine at increasing insert+tombstone
   counts, relative to the clean engine) and incremental per-shard
   rebuild vs a full recompress of the mutated triple set (the
-  amortization the delta budget buys).
+  amortization the delta budget buys);
+* a `rebalance` section (PR 5) — a skewed mutation burst concentrates
+  rows on one `node_range` shard, then `rebalance()` re-cuts the
+  boundaries online: mixed-workload latency before/after, live skew
+  before/after, and the cost of the incremental tombstone/insert
+  migration vs a full re-partition (fresh `ShardedTripleService.build`)
+  of the same logical triples.
 """
 from __future__ import annotations
 
@@ -107,6 +113,7 @@ def run(dataset="geo-coordinates-en", n_queries=500, quiet=False,
     _bench_crossover(itr, ds, bench, n_queries, quiet)
     _bench_sharded(itr, ds, bench, n_queries, quiet)
     _bench_mutation(itr, ds, bench, n_queries, quiet)
+    _bench_rebalance(itr, ds, bench, n_queries, quiet)
     _finalize_throughput(bench, n_queries)
     if json_path:
         try:  # a full rewrite must not erase the committed CI gate baseline
@@ -508,7 +515,7 @@ def _bench_mutation(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None:
     svc = ShardedTripleService.build(ds.triples, ds.n_nodes, ds.n_preds,
                                      n_shards=n_shards, cache=None,
                                      strategy="predicate_hash", crossover=0,
-                                     delta_budget=None)
+                                     delta_budget=None, rebalance_skew=None)
     p0 = int(ds.triples[0, 1])  # one predicate -> one owning shard
     n_mut = max(16, len(ds.triples) // 50)
     fresh = np.stack([rng.integers(0, ds.n_nodes, n_mut),
@@ -543,6 +550,104 @@ def _bench_mutation(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None:
         print(f"mutation rebuild dirty={dirty} incremental={incr_s * 1e3:9.1f}ms "
               f"full={full_s * 1e3:9.1f}ms "
               f"({bench['mutation']['rebuild']['full_vs_incremental']:5.1f}x)")
+
+
+def _bench_rebalance(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None:
+    """Online rebalancing under a skewed write burst.
+
+    A 4-shard `node_range` tier takes a burst of inserts whose subjects
+    all fall inside shard 0's range — the hot-shard shape mutation
+    produces in practice — then `rebalance(force=True)` re-quantiles the
+    boundaries and migrates the diff. Recorded (caches detached so shard
+    balance is the only variable):
+
+    * mixed-workload latency on the skewed tier, right after the
+      migration (moved rows still in destination overlays), and at
+      steady state once the dirty shards rebuild;
+    * live `max/mean` skew before/after (deterministic, gated);
+    * migration cost (plan + tombstone/insert moves) vs a full
+      re-partition (`ShardedTripleService.build` on the same logical
+      triples) — the amortization online re-cutting buys, gated as
+      ``full_vs_migration``.
+    """
+    from repro.serve.sharded import ShardedTripleService
+
+    n_shards = 4
+    svc = ShardedTripleService.build(ds.triples, ds.n_nodes, ds.n_preds,
+                                     n_shards=n_shards, cache=None,
+                                     strategy="node_range", crossover=0,
+                                     delta_budget=None, rebalance_skew=None)
+    # hot burst: subjects packed into shard 0's range, distinct enough
+    # that a quantile re-cut CAN split them across shards
+    rng = np.random.default_rng(11)
+    lo = int(svc.plan.boundaries[0])
+    hi = max(int(svc.plan.boundaries[1]), lo + 1)
+    n_burst = max(64, len(ds.triples) // 4)
+    burst = np.stack([rng.integers(lo, hi, n_burst),
+                      rng.integers(0, ds.n_preds, n_burst),
+                      rng.integers(0, ds.n_nodes, n_burst)], axis=1)
+    inserted = svc.insert_triples(burst)
+    skew_before = svc.skew()
+
+    nq = min(n_queries, 100)
+    rows = sample_rows(ds, nq, seed=9)
+    hot = burst[rng.integers(0, len(burst), nq)]
+    rows[::2] = hot[::2]  # half the probes target the hot range
+    mixed = [bind_pattern(SHARDED_MIXED_CYCLE[i % len(SHARDED_MIXED_CYCLE)],
+                          rows[i:i + 1]) for i in range(nq)]
+    mixed = [(s[0], p[0], o[0]) for s, p, o in mixed]
+
+    def run_mixed() -> float:
+        t0 = time.perf_counter()
+        svc.query_many(mixed)
+        return (time.perf_counter() - t0) / nq * 1e6
+
+    before_us = min(run_mixed() for _ in range(2))
+    logical = np.concatenate([e.current_triples() for e in svc.engines])
+
+    t0 = time.perf_counter()
+    res = svc.rebalance(force=True)
+    migration_s = time.perf_counter() - t0
+    skew_after = svc.skew()
+    after_us = min(run_mixed() for _ in range(2))
+    # steady state: fold the migration overlays into fresh grammars
+    svc.rebuild(force=True)
+    after_rebuild_us = min(run_mixed() for _ in range(2))
+
+    n_nodes = max(ds.n_nodes, int(logical[:, [0, 2]].max()) + 1) \
+        if len(logical) else ds.n_nodes
+    t0 = time.perf_counter()
+    ShardedTripleService.build(logical, n_nodes, ds.n_preds,
+                               n_shards=n_shards, cache=None,
+                               strategy="node_range", crossover=0,
+                               delta_budget=None, rebalance_skew=None)
+    full_s = time.perf_counter() - t0
+
+    bench["rebalance"] = {
+        "n_shards": n_shards,
+        "burst_rows": int(inserted),
+        "migrated_rows": svc.stats.migrated_rows,
+        "skew_before": skew_before,
+        "skew_after": skew_after,
+        "skew_after_vs_before": skew_after / skew_before
+        if skew_before > 0 else float("inf"),
+        "mixed_before_us": before_us,
+        "mixed_after_us": after_us,
+        "mixed_after_rebuild_us": after_rebuild_us,
+        "migration_s": migration_s,
+        "full_repartition_s": full_s,
+        "full_vs_migration": full_s / migration_s
+        if migration_s > 0 else float("inf"),
+    }
+    if not quiet:
+        print(f"rebalance skew {skew_before:5.2f}->{skew_after:5.2f} "
+              f"moved={svc.stats.migrated_rows} "
+              f"mixed {before_us:9.1f}us->{after_us:9.1f}us"
+              f"->{after_rebuild_us:9.1f}us(rebuilt) "
+              f"migration={migration_s * 1e3:9.1f}ms "
+              f"full={full_s * 1e3:9.1f}ms "
+              f"({bench['rebalance']['full_vs_migration']:5.1f}x), "
+              f"pending={res['pending']}")
 
 
 def _finalize_throughput(bench: dict, n_queries: int) -> None:

@@ -30,7 +30,7 @@ GATE_TOLERANCE = 3.0
 
 # metric name suffixes where LOWER is better (ratios of our-time / reference)
 _LOWER_IS_BETTER = ("dispatched_vs_scalar", "sharded_vs_single",
-                    "overhead_vs_clean")
+                    "overhead_vs_clean", "skew_after_vs_before")
 
 
 def gate_metrics(bench: dict) -> dict[str, float]:
@@ -69,6 +69,13 @@ def gate_metrics(bench: dict) -> dict[str, float]:
     if "rebuild" in mutation:
         out["mutation.rebuild.full_vs_incremental"] = \
             mutation["rebuild"]["full_vs_incremental"]
+    rebalance = bench.get("rebalance", {})
+    if rebalance:
+        # deterministic balance gain of the online re-cut (lower = better)
+        out["rebalance.skew_after_vs_before"] = \
+            rebalance["skew_after_vs_before"]
+        # migration must stay cheaper than a full re-partition
+        out["rebalance.full_vs_migration"] = rebalance["full_vs_migration"]
     return {k: float(v) for k, v in out.items()}
 
 
@@ -236,6 +243,14 @@ def main(smoke: bool = False, check: bool = False,
             if "rebuild" in mutation:
                 print(f"mutation/rebuild/full_vs_incremental,"
                       f"{mutation['rebuild']['full_vs_incremental']:.2f},x")
+            rebalance = bench.get("rebalance", {})
+            if rebalance:
+                print(f"rebalance/skew_after_vs_before,"
+                      f"{rebalance['skew_after_vs_before']:.3f},x")
+                print(f"rebalance/full_vs_migration,"
+                      f"{rebalance['full_vs_migration']:.2f},x")
+                print(f"rebalance/migrated_rows,"
+                      f"{rebalance['migrated_rows']},rows")
         except Exception as e:
             print(f"# {BASELINE_JSON} unavailable: {e}", file=sys.stderr)
     p = plus[0]

@@ -1,13 +1,20 @@
-"""Root pytest config: gate the optional `hypothesis` dependency.
+"""Root pytest config: gate the optional `hypothesis` dependency and the
+nightly `slow` marker.
 
 The target container does not ship hypothesis; registering the fallback
 shim (tests/_hypothesis_fallback.py) under the `hypothesis` name keeps the
 property tests collectable and running deterministically. A real
 hypothesis install always wins — the shim is only used on ImportError.
+
+Tests marked ``@pytest.mark.slow`` (large-budget randomized suites) are
+skipped by the tier-1 run and selected by the nightly/manual CI lane via
+``pytest -m slow`` (.github/workflows/nightly.yml).
 """
 import importlib.util
 import sys
 from pathlib import Path
+
+import pytest
 
 try:
     import hypothesis  # noqa: F401
@@ -17,3 +24,20 @@ except ImportError:
     _mod = importlib.util.module_from_spec(_spec)
     _spec.loader.exec_module(_mod)
     sys.modules["hypothesis"] = _mod
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: large-budget randomized suite; tier-1 skips it, the nightly "
+        "lane selects it with `pytest -m slow`")
+
+
+def pytest_collection_modifyitems(config, items):
+    if "slow" in (config.option.markexpr or ""):
+        return  # explicitly selected (nightly lane): run them
+    skip_slow = pytest.mark.skip(
+        reason="slow suite: nightly lane only (pytest -m slow)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

@@ -83,6 +83,20 @@ def main():
     print(f"rebuilt shards {rebuilt}: overlays folded into fresh grammars, "
           f"results unchanged")
 
+    # online rebalancing: mutation skews shard loads; rebalance() re-cuts
+    # the plan and migrates rows between shards while queries stay exact
+    # (auto-triggered past ITR_REBALANCE_SKEW, explicit via force=True)
+    hot = np.stack([np.full(60, s), np.full(60, p),
+                    np.arange(60) % ds.n_nodes], axis=1)
+    svc.insert_triples(hot)  # every row lands on one predicate's shard
+    skew_before = svc.skew()
+    before = svc.query(s, p, None)
+    summary = svc.rebalance(force=True)
+    assert sorted(svc.query(s, p, None)) == sorted(before)  # still exact
+    print(f"rebalanced: skew {skew_before:.2f} -> {svc.skew():.2f}, "
+          f"{summary['moved']} rows migrated "
+          f"(live edges/shard={svc.live_edges()}), queries unchanged")
+
 
 if __name__ == "__main__":
     main()

@@ -243,6 +243,7 @@ class TripleQueryEngine:
         # mutation overlay: uncompressed (inserts, tombstones) delta merged
         # into every executed batch; bounded by the rebuild budget
         self.delta = DeltaOverlay()
+        self._base_edges: int | None = None  # lazy |base triples| cache
         self.config = config  # RepairConfig reused by rebuilds
         if delta_budget is _DEFAULT_BUDGET:
             self.delta_budget = resolve_delta_budget()
@@ -662,6 +663,32 @@ class TripleQueryEngine:
         self._after_mutation(applied)
         return applied
 
+    def contains_triples(self, triples) -> np.ndarray:
+        """bool per (s, p, o) row: is it currently visible on THIS engine
+        (base minus tombstones plus inserts)? Row-aligned with the input
+        (no dedup/sort) and cache-detached — the probe the sharded tier
+        uses to keep partitions disjoint while a migration is in flight.
+        """
+        rows = np.asarray(triples, dtype=np.int64)
+        if rows.size == 0:
+            return np.zeros(0, dtype=bool)
+        if rows.ndim != 2 or rows.shape[1] != 3:
+            raise ValueError(
+                f"expected (n, 3) triple rows, got shape {rows.shape}")
+        return self._exists_rows(rows)
+
+    @property
+    def base_edges(self) -> int:
+        """Triple count of the compressed base — the live-load signal
+        rebalancing reads (`live = base_edges + inserts - tombstones`).
+        Lazily decompressed once per grammar and cached: mutations only
+        touch the overlay, and a rebuild swaps in a fresh (uncounted)
+        engine state. Requires a pure triple grammar, like
+        :meth:`base_triples`."""
+        if self._base_edges is None:
+            self._base_edges = len(self.base_triples())
+        return self._base_edges
+
     def _exists_rows(self, rows: np.ndarray) -> np.ndarray:
         """bool per row: is this triple currently visible (base minus
         tombstones plus inserts)? Runs one cache-detached batch query —
@@ -733,6 +760,7 @@ class TripleQueryEngine:
                                   crossover=self.crossover,
                                   delta_budget=self.delta_budget,
                                   config=config)
+        fresh._base_edges = len(triples)  # the new base IS these rows
         rebuilds = self.rebuild_count + 1
         self.__dict__.update(fresh.__dict__)
         self.rebuild_count = rebuilds

@@ -1,10 +1,20 @@
 """Distribution utilities: logical-axis sharding rules, collective helpers,
-and graph partitioning for the sharded serving tier."""
+graph partitioning for the sharded serving tier, and online rebalancing."""
 from repro.distributed.partition import (
     STRATEGIES,
     PartitionPlan,
+    diff_plans,
     make_plan,
     partition_triples,
+    subject_quantile_boundaries,
+)
+from repro.distributed.rebalance import (
+    RebalancePlan,
+    balance_predicates,
+    live_shard_edges,
+    measure_skew,
+    plan_rebalance,
+    resolve_rebalance_skew,
 )
 from repro.distributed.sharding import (
     LOGICAL_RULES,
@@ -22,6 +32,14 @@ __all__ = [
     "zero1_spec",
     "STRATEGIES",
     "PartitionPlan",
+    "diff_plans",
     "make_plan",
     "partition_triples",
+    "subject_quantile_boundaries",
+    "RebalancePlan",
+    "balance_predicates",
+    "live_shard_edges",
+    "measure_skew",
+    "plan_rebalance",
+    "resolve_rebalance_skew",
 ]

@@ -51,13 +51,22 @@ def _hash_pred(p, n_shards: int):
 
 @dataclass(frozen=True)
 class PartitionPlan:
-    """Deterministic triple -> shard assignment + pattern routing rules."""
+    """Deterministic triple -> shard assignment + pattern routing rules.
+
+    `pred_assign` (predicate_hash only) overrides the hash with an
+    explicit predicate -> shard map — the form online rebalancing
+    produces when it re-packs predicate groups onto shards by observed
+    load. Absent, the Knuth hash is the assignment; either way placement
+    and routing read the same function, so the build/mutation invariant
+    survives a re-cut.
+    """
 
     strategy: str
     n_shards: int
     n_nodes: int
     n_preds: int
-    boundaries: np.ndarray | None = None  # node_range: int64[n_shards+1]
+    boundaries: np.ndarray | None = None   # node_range: int64[n_shards+1]
+    pred_assign: np.ndarray | None = None  # predicate_hash: int64[n_preds]
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -74,13 +83,26 @@ class PartitionPlan:
                     "(build plans with make_plan)")
             if np.any(np.diff(b) < 0):
                 raise ValueError("node_range boundaries must be non-decreasing")
+        if self.pred_assign is not None:
+            if self.strategy != "predicate_hash":
+                raise ValueError(
+                    "pred_assign only applies to predicate_hash plans")
+            pa = np.asarray(self.pred_assign)
+            if pa.shape != (self.n_preds,):
+                raise ValueError(
+                    f"pred_assign must have shape ({self.n_preds},), "
+                    f"got {pa.shape}")
+            if len(pa) and (int(pa.min()) < 0 or int(pa.max()) >= self.n_shards):
+                raise ValueError(
+                    f"pred_assign values must be shard ids in "
+                    f"[0, {self.n_shards})")
 
     # -- triple placement ------------------------------------------------
     def triple_shards(self, triples: np.ndarray) -> np.ndarray:
         """Owning shard per (s, p, o) row."""
         triples = np.asarray(triples, dtype=np.int64)
         if self.strategy == "predicate_hash":
-            return _hash_pred(triples[:, 1], self.n_shards)
+            return self._pred_shard(triples[:, 1])
         return self._node_shard(triples[:, 0])
 
     def _node_shard(self, nodes) -> np.ndarray:
@@ -88,15 +110,34 @@ class PartitionPlan:
                               side="right") - 1
         return np.clip(idx, 0, self.n_shards - 1)
 
+    def _pred_shard(self, preds) -> np.ndarray:
+        preds = np.asarray(preds, dtype=np.int64)
+        if self.pred_assign is not None:
+            # ids at/above n_preds clamp onto the last predicate's shard —
+            # the same clamp placement uses, so routing can never disagree
+            return np.asarray(self.pred_assign, dtype=np.int64)[
+                np.clip(preds, 0, self.n_preds - 1)]
+        return _hash_pred(preds, self.n_shards)
+
+    def pred_assignment(self) -> np.ndarray:
+        """Explicit predicate -> shard map of a predicate_hash plan (the
+        stored re-cut assignment, or the hash evaluated per predicate)."""
+        if self.strategy != "predicate_hash":
+            raise ValueError("pred_assignment() needs a predicate_hash plan")
+        return self._pred_shard(np.arange(self.n_preds, dtype=np.int64)).copy()
+
     def route_triples(self, triples: np.ndarray) -> np.ndarray:
         """Owning shard per mutation row — the write-path routing surface.
 
         Identical to :meth:`triple_shards` (one placement rule for build
         and mutation, by construction), but validates the ``(n, 3)``
         shape so a malformed mutation batch fails here instead of
-        landing rows on arbitrary shards.
+        landing rows on arbitrary shards. Zero-row batches of any empty
+        shape (``[]`` included) are a valid no-op.
         """
         triples = np.asarray(triples, dtype=np.int64)
+        if triples.size == 0:
+            return np.zeros(0, dtype=np.int64)
         if triples.ndim != 2 or triples.shape[1] != 3:
             raise ValueError(
                 f"expected (n, 3) triple rows, got shape {triples.shape}")
@@ -110,13 +151,16 @@ class PartitionPlan:
         convention.
         """
         if self.strategy == "predicate_hash":
-            return int(_hash_pred(p, self.n_shards)) if p >= 0 else -1
+            return int(self._pred_shard(p)) if p >= 0 else -1
         return int(self._node_shard(s)) if s >= 0 else -1
 
     def route_batch(self, s: np.ndarray, p: np.ndarray, o: np.ndarray) -> np.ndarray:
-        """Vectorized `route` over aligned pattern columns."""
+        """Vectorized `route` over aligned pattern columns (zero-length
+        columns return an empty route array)."""
+        s = np.asarray(s, dtype=np.int64)
+        p = np.asarray(p, dtype=np.int64)
         if self.strategy == "predicate_hash":
-            return np.where(p >= 0, _hash_pred(np.maximum(p, 0), self.n_shards), -1)
+            return np.where(p >= 0, self._pred_shard(np.maximum(p, 0)), -1)
         return np.where(s >= 0, self._node_shard(np.maximum(s, 0)), -1)
 
 
@@ -136,18 +180,49 @@ def make_plan(strategy: str, n_shards: int, n_nodes: int, n_preds: int,
     boundaries = None
     if strategy == "node_range":
         hi = max(n_nodes, n_shards)
-        if triples is not None and len(triples):
-            subs = np.sort(np.asarray(triples, dtype=np.int64)[:, 0])
-            cuts = subs[np.minimum(
-                np.arange(1, n_shards) * len(subs) // n_shards, len(subs) - 1)]
-            boundaries = np.concatenate([[0], np.maximum(cuts, 1), [hi]]).astype(np.int64)
-            boundaries = np.maximum.accumulate(boundaries)
-        else:
-            boundaries = np.floor(
-                np.arange(n_shards + 1) * hi / n_shards).astype(np.int64)
-            boundaries[0], boundaries[-1] = 0, hi
+        subjects = np.asarray(triples, dtype=np.int64)[:, 0] \
+            if triples is not None and len(triples) else None
+        boundaries = subject_quantile_boundaries(subjects, n_shards, hi)
     return PartitionPlan(strategy, int(n_shards), int(n_nodes), int(n_preds),
                          boundaries)
+
+
+def subject_quantile_boundaries(subjects, n_shards: int, hi: int) -> np.ndarray:
+    """node_range boundary (re-)cut from an observed subject distribution.
+
+    Boundaries sit at subject quantiles so each shard owns roughly the
+    same number of triples regardless of how subjects cluster in the id
+    space; with no observations (``subjects=None`` or empty) the cut
+    falls back to even id ranges. This is the single boundary function —
+    `make_plan` uses it at build and `repro.distributed.rebalance`
+    re-runs it on live subjects to re-cut a skewed tier online.
+    """
+    if subjects is not None:
+        subjects = np.asarray(subjects, dtype=np.int64)
+    if subjects is None or len(subjects) == 0:
+        boundaries = np.floor(
+            np.arange(n_shards + 1) * hi / n_shards).astype(np.int64)
+        boundaries[0], boundaries[-1] = 0, hi
+        return boundaries
+    subs = np.sort(subjects)
+    cuts = subs[np.minimum(
+        np.arange(1, n_shards) * len(subs) // n_shards, len(subs) - 1)]
+    boundaries = np.concatenate([[0], np.maximum(cuts, 1), [hi]]).astype(np.int64)
+    return np.maximum.accumulate(boundaries)
+
+
+def diff_plans(old: PartitionPlan, new: PartitionPlan,
+               triples: np.ndarray) -> np.ndarray:
+    """Boolean mask per triple row: does its owning shard change from
+    `old` to `new`? Zero rows diff to an empty mask. Diagnostic helper
+    for inspecting a re-cut; the actual migration moves are computed in
+    `repro.distributed.rebalance.plan_rebalance` against each engine's
+    *physical* rows (robust to ids that clamped onto a boundary shard),
+    not against where `old` says they should be."""
+    triples = np.asarray(triples, dtype=np.int64).reshape(-1, 3)
+    if len(triples) == 0:
+        return np.zeros(0, dtype=bool)
+    return old.triple_shards(triples) != new.triple_shards(triples)
 
 
 def partition_triples(triples: np.ndarray, plan: PartitionPlan) -> list[np.ndarray]:

@@ -1,0 +1,251 @@
+"""Online shard rebalancing: skew detection, plan re-cut, incremental moves.
+
+Mutations skew a partitioned tier: `PartitionPlan` routes rows where the
+*build-time* cut put their axis value, so a burst of inserts landing on one
+shard keeps degrading every scatter-gather flush until something re-cuts
+the plan. This module is that something, in three pieces the serving tier
+(`repro.serve.sharded`) wires together:
+
+* **Skew detection** — :func:`live_shard_edges` reads each engine's live
+  triple count (compressed base + overlay inserts - tombstones, O(1) per
+  shard after one lazy decompression) and :func:`measure_skew` condenses
+  the counts to a ``max/mean`` ratio. The mutation path compares it to the
+  env-tunable trigger ``ITR_REBALANCE_SKEW``
+  (:func:`resolve_rebalance_skew`).
+* **Plan re-cut** — :func:`plan_rebalance` computes a successor
+  `PartitionPlan` from the live data: `node_range` boundaries are
+  re-quantiled from the observed subjects
+  (`partition.subject_quantile_boundaries`, the same function the build
+  used) and `predicate_hash` groups are re-packed onto shards by greedy
+  LPT over live per-predicate counts (:func:`balance_predicates`,
+  materialized as the plan's explicit ``pred_assign``).
+* **Migration bookkeeping** — :class:`RebalancePlan` carries the pending
+  per-``(src, dst)`` row moves. Rows leave their source shard via
+  tombstones and arrive through the destination's delta overlay (the
+  PR 4 mutation path — no new write machinery), in bounded batches so a
+  migration can be spread across serving calls. `discard` removes rows
+  the caller deleted mid-flight so a later batch can never resurrect
+  them.
+
+Exactness across the whole dance rests on two invariants the service
+enforces: every migrated batch applies arrive-then-depart inside one call
+(partitions stay disjoint at every public boundary), and while moves are
+pending the router only trusts single-shard ownership for patterns both
+the outgoing and incoming plans route to the same shard — anything an
+ownership change is still moving gets scatter-gathered, which is exact on
+disjoint partitions no matter which side each row currently sits on.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.delta import rows_in
+from repro.distributed.partition import (
+    PartitionPlan,
+    subject_quantile_boundaries,
+)
+
+_EMPTY_ROWS = np.zeros((0, 3), dtype=np.int64)
+
+# default auto-trigger: rebalance when one shard holds 4x the mean load
+DEFAULT_REBALANCE_SKEW = 4.0
+
+# ITR_REBALANCE_SKEW spellings that disable the mutation-path auto-trigger
+_OFF_SPELLINGS = ("off", "none", "never", "disable", "disabled")
+
+
+def resolve_rebalance_skew(value=None) -> float | None:
+    """Resolve the auto-rebalance trigger to ``float`` (skew threshold,
+    >= 1) or ``None`` (auto-rebalancing disabled; only explicit
+    ``rebalance(force=True)`` re-cuts).
+
+    ``value=None`` reads ``ITR_REBALANCE_SKEW``: a number > 0 is the
+    ``max/mean`` live-edge ratio at/above which the mutation path starts
+    a rebalance (values below 1 clamp to 1.0 — skew can't go lower);
+    ``off``/``none``/``never`` or any value <= 0 disables the trigger;
+    unset/empty/unparsable falls back to :data:`DEFAULT_REBALANCE_SKEW`.
+    An explicit `value` follows the same rules without touching the
+    environment.
+    """
+    if value is None:
+        env = os.environ.get("ITR_REBALANCE_SKEW", "").strip().lower()
+        if not env:
+            return DEFAULT_REBALANCE_SKEW
+        if env in _OFF_SPELLINGS:
+            return None
+        try:
+            value = float(env)
+        except ValueError:
+            return DEFAULT_REBALANCE_SKEW
+    value = float(value)
+    if value <= 0:
+        return None
+    return max(value, 1.0)
+
+
+def live_shard_edges(engines) -> np.ndarray:
+    """Live triple count per shard: compressed base edges plus overlay
+    inserts minus tombstones — the quantity mutation actually skews.
+    O(1) per shard (`TripleQueryEngine.base_edges` is cached), so the
+    mutation path can afford it on every batch."""
+    return np.array(
+        [e.base_edges + e.delta.n_inserts - e.delta.n_tombstones
+         for e in engines], dtype=np.int64)
+
+
+def measure_skew(counts) -> float:
+    """``max/mean`` shard load: 1.0 is perfectly balanced, ``n_shards``
+    means one shard holds everything. Degenerate tiers (single shard,
+    nothing stored) read as balanced."""
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    if len(counts) <= 1 or total <= 0:
+        return 1.0
+    return float(int(counts.max()) * len(counts) / total)
+
+
+def balance_predicates(pred_counts, n_shards: int, prior) -> np.ndarray:
+    """Greedy LPT re-pack of predicate groups onto shards.
+
+    Predicates in descending live-count order land on the least-loaded
+    shard; ties keep the `prior` owner and zero-count predicates keep it
+    unconditionally, so idle ids never churn shards for nothing. LPT's
+    4/3 bound is plenty here — the floor is set by the largest single
+    predicate, which vertical partitioning cannot split by construction.
+    """
+    counts = np.asarray(pred_counts, dtype=np.int64)
+    assign = np.asarray(prior, dtype=np.int64).copy()
+    if assign.shape != counts.shape:
+        raise ValueError(
+            f"prior assignment shape {assign.shape} != counts {counts.shape}")
+    load = np.zeros(n_shards, dtype=np.int64)
+    for p in np.argsort(-counts, kind="stable"):
+        p = int(p)
+        if counts[p] == 0:
+            continue
+        k = int(np.argmin(load))
+        if load[int(assign[p])] == load[k]:
+            k = int(assign[p])
+        assign[p] = k
+        load[k] += counts[p]
+    return assign
+
+
+class RebalancePlan:
+    """One online re-cut: the successor plan plus pending migration rows.
+
+    Built by :func:`plan_rebalance`; consumed by the sharded service. The
+    contract the service relies on:
+
+    * every pending row is physically on its ``src`` shard until a
+      `take` batch migrates it (or `discard` drops it because the caller
+      mutated it mid-flight);
+    * `take` consumes moves front-to-back in bounded batches, splitting a
+      move when the cap lands inside it, so migration cost per serving
+      call is bounded by ``max_rows``;
+    * once `done`, the successor `new_plan` routes exactly where every
+      row now lives.
+    """
+
+    def __init__(self, old_plan: PartitionPlan, new_plan: PartitionPlan,
+                 moves: list):
+        self.old_plan = old_plan
+        self.new_plan = new_plan
+        self._moves = [
+            (int(src), int(dst), np.asarray(rows, dtype=np.int64))
+            for src, dst, rows in moves if len(rows)]
+        #: rows this re-cut set out to migrate (fixed at plan time)
+        self.total_rows = sum(len(r) for _, _, r in self._moves)
+
+    @property
+    def pending_rows(self) -> int:
+        """Rows still waiting to migrate."""
+        return sum(len(r) for _, _, r in self._moves)
+
+    @property
+    def done(self) -> bool:
+        return not self._moves
+
+    def pending_moves(self) -> list:
+        """Snapshot of the pending (src, dst, rows) moves (read-only)."""
+        return list(self._moves)
+
+    def discard(self, rows: np.ndarray) -> int:
+        """Drop `rows` from the pending moves; returns how many pending
+        rows were dropped. The service calls this for every row deleted
+        while the migration is in flight — a later `take` batch must not
+        re-deliver (resurrect) a triple the user has since removed."""
+        rows = np.asarray(rows, dtype=np.int64).reshape(-1, 3)
+        if len(rows) == 0:
+            return 0
+        dropped = 0
+        kept = []
+        for src, dst, pending in self._moves:
+            hit = rows_in(pending, rows)
+            if hit.any():
+                dropped += int(hit.sum())
+                pending = pending[~hit]
+            if len(pending):
+                kept.append((src, dst, pending))
+        self._moves = kept
+        return dropped
+
+    def take(self, max_rows: int | None = None) -> list:
+        """Pop up to `max_rows` pending rows (``None`` = everything) as
+        a list of (src, dst, rows) batches ready to apply."""
+        budget = self.pending_rows if max_rows is None else max(0, int(max_rows))
+        out = []
+        while self._moves and budget > 0:
+            src, dst, pending = self._moves[0]
+            if len(pending) <= budget:
+                out.append((src, dst, pending))
+                budget -= len(pending)
+                self._moves.pop(0)
+            else:
+                out.append((src, dst, pending[:budget]))
+                self._moves[0] = (src, dst, pending[budget:])
+                budget = 0
+        return out
+
+
+def plan_rebalance(plan: PartitionPlan, engines) -> RebalancePlan:
+    """Re-cut `plan` from the engines' live triples; compute the moves.
+
+    `node_range` re-quantiles the boundaries from the observed subjects;
+    `predicate_hash` re-packs predicate groups by live count (LPT) into
+    an explicit ``pred_assign``. The node universe grows to cover any
+    inserted ids. Moves are computed against each engine's *actual* rows
+    (overlay applied), not against where the old plan says they should
+    be, so the migration is exact even for rows whose ids clamped onto a
+    boundary shard.
+    """
+    per_shard = [e.current_triples() for e in engines]
+    rows = np.concatenate(per_shard) if per_shard else _EMPTY_ROWS
+    n_nodes = plan.n_nodes
+    if len(rows):
+        n_nodes = max(n_nodes, int(rows[:, [0, 2]].max()) + 1)
+    if plan.strategy == "node_range":
+        hi = max(n_nodes, plan.n_shards)
+        boundaries = subject_quantile_boundaries(
+            rows[:, 0] if len(rows) else None, plan.n_shards, hi)
+        new_plan = PartitionPlan("node_range", plan.n_shards, n_nodes,
+                                 plan.n_preds, boundaries=boundaries)
+    else:
+        counts = np.bincount(rows[:, 1], minlength=plan.n_preds) \
+            if len(rows) else np.zeros(plan.n_preds, dtype=np.int64)
+        assign = balance_predicates(counts, plan.n_shards,
+                                    prior=plan.pred_assignment())
+        new_plan = PartitionPlan("predicate_hash", plan.n_shards, n_nodes,
+                                 plan.n_preds, pred_assign=assign)
+    moves = []
+    for k, shard_rows in enumerate(per_shard):
+        if len(shard_rows) == 0:
+            continue
+        dst = new_plan.triple_shards(shard_rows)
+        for d in np.unique(dst):
+            d = int(d)
+            if d != k:
+                moves.append((k, d, shard_rows[dst == d]))
+    return RebalancePlan(plan, new_plan, moves)

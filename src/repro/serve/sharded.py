@@ -33,6 +33,24 @@ warm. When a shard's overlay outgrows the engines' ``ITR_DELTA_BUDGET``
 it alone is recompressed through the RePair pipeline and atomically
 swapped — :meth:`ShardedTripleService.rebuild` is the explicit handle —
 which is what makes rebuild cost O(dirty shards), not O(graph).
+
+Partitions also *re-cut themselves*. Mutation skews shard loads and the
+build-time `PartitionPlan` never follows, so the tier watches its live
+per-shard edge counts (base + overlay) and — when their ``max/mean``
+skew crosses ``ITR_REBALANCE_SKEW``, or on an explicit
+:meth:`ShardedTripleService.rebalance` — computes a successor plan
+(`repro.distributed.rebalance`: re-quantiled ``node_range`` boundaries
+or LPT-re-packed predicate groups) and migrates the rows whose owner
+changed, in bounded batches: each batch arrives through the destination
+overlay before leaving the source via tombstones inside one call, so
+partitions stay disjoint at every public boundary, and only the two
+shards it touched lose their warm cache entries. While moves are
+pending the router stops trusting single-shard ownership for any
+pattern the outgoing and incoming plans route differently (it scatters
+instead — exact on disjoint partitions wherever each row currently
+sits), and mutations of in-motion rows delete on both candidate shards
+/ insert on the incoming owner after probing the outgoing one, so
+serving and writes stay exact mid-migration.
 """
 from __future__ import annotations
 
@@ -61,10 +79,25 @@ from repro.distributed.partition import (
     make_plan,
     partition_triples,
 )
+from repro.distributed.rebalance import (
+    live_shard_edges,
+    measure_skew,
+    plan_rebalance,
+    resolve_rebalance_skew,
+)
 from repro.serve.triple_service import MicroBatchService
 
 # sentinel: "create a default shared QueryResultCache unless disabled by env"
 _DEFAULT_CACHE = object()
+
+# sentinel: "resolve the rebalance trigger from ITR_REBALANCE_SKEW"
+_DEFAULT_SKEW = object()
+
+# migration rows an AUTO-triggered rebalance applies per mutation call:
+# the trigger starts the migration and each subsequent applied mutation
+# drains another bounded chunk, so one insert never blocks on moving the
+# whole diff (explicit rebalance() drains to completion on demand)
+_AUTO_MOVES_PER_CALL = 4096
 
 # reserved shard id for cross-shard MERGED scattered results in the shared
 # tier (real shards are >= 0; -1 is the single-engine default namespace).
@@ -96,6 +129,8 @@ class ShardedServiceStats:
     inserted: int = 0     # triples actually added (mutation no-ops excluded)
     deleted: int = 0      # triples actually removed
     rebuilds: int = 0     # per-shard grammar recompressions (auto + explicit)
+    rebalances: int = 0   # migrations started (auto-trigger + explicit)
+    migrated_rows: int = 0  # rows moved between shards by rebalancing
     total_s: float = 0.0
     last_flush_qps: float = 0.0
 
@@ -115,7 +150,7 @@ class ShardedTripleService(MicroBatchService):
 
     def __init__(self, engines: list[TripleQueryEngine], plan: PartitionPlan,
                  cache: QueryResultCache | None = None, max_batch: int = 1024,
-                 config=None):
+                 config=None, rebalance_skew=_DEFAULT_SKEW):
         super().__init__()
         assert len(engines) == plan.n_shards, \
             f"{len(engines)} engines for {plan.n_shards} shards"
@@ -125,14 +160,22 @@ class ShardedTripleService(MicroBatchService):
         self.max_batch = int(max_batch)
         self.config = config  # RepairConfig reused by per-shard rebuilds
         self.stats = ShardedServiceStats()
+        # auto-rebalance trigger (max/mean live-edge skew); None = explicit only
+        if rebalance_skew is _DEFAULT_SKEW:
+            self.rebalance_skew = resolve_rebalance_skew()
+        else:
+            self.rebalance_skew = None if rebalance_skew is None \
+                else resolve_rebalance_skew(rebalance_skew)
+        self._migration = None        # in-flight RebalancePlan, or None
+        self._futile_total: int | None = None  # auto-trigger backoff anchor
 
     # -- construction ----------------------------------------------------
     @classmethod
     def build(cls, triples: np.ndarray, n_nodes: int, n_preds: int,
               n_shards: int = 4, strategy: str = "predicate_hash",
               config=None, cache=_DEFAULT_CACHE, crossover: int | None = None,
-              max_batch: int = 1024, delta_budget=_DEFAULT_BUDGET
-              ) -> "ShardedTripleService":
+              max_batch: int = 1024, delta_budget=_DEFAULT_BUDGET,
+              rebalance_skew=_DEFAULT_SKEW) -> "ShardedTripleService":
         """Partition -> compress each subgraph -> one engine per shard.
 
         `cache` is the shared result-cache tier (default: one
@@ -140,6 +183,9 @@ class ShardedTripleService(MicroBatchService):
         ``ITR_RESULT_CACHE=0``; pass ``None`` to disable explicitly).
         `delta_budget` is each engine's mutation-overlay rebuild threshold
         (default: read ``ITR_DELTA_BUDGET``; ``None`` = auto-rebuild off).
+        `rebalance_skew` is the live max/mean shard-load ratio at/above
+        which the mutation path starts an online rebalance (default: read
+        ``ITR_REBALANCE_SKEW``; ``None`` = only explicit ``rebalance()``).
         """
         plan = make_plan(strategy, n_shards, n_nodes, n_preds, triples=triples)
         if cache is _DEFAULT_CACHE:
@@ -151,11 +197,14 @@ class ShardedTripleService(MicroBatchService):
             table = LabelTable.terminals([2] * n_preds)
             graph = Hypergraph.from_triples(sub, n_nodes)
             grammar, _ = compress(graph, table, config)
-            engines.append(TripleQueryEngine(
+            engine = TripleQueryEngine(
                 grammar,
                 cache=cache.shard_view(k) if cache is not None else None,
-                crossover=crossover, config=config, **engine_kwargs))
-        return cls(engines, plan, cache, max_batch, config=config)
+                crossover=crossover, config=config, **engine_kwargs)
+            engine._base_edges = len(sub)  # skew checks skip the decompress
+            engines.append(engine)
+        return cls(engines, plan, cache, max_batch, config=config,
+                   rebalance_skew=rebalance_skew)
 
     @property
     def n_shards(self) -> int:
@@ -196,7 +245,7 @@ class ShardedTripleService(MicroBatchService):
         inv = inv.reshape(-1)
         nu = len(uniq)
         u_s, u_p, u_o = uniq[:, 0], uniq[:, 1], uniq[:, 2]
-        routes = self.plan.route_batch(u_s, u_p, u_o)
+        routes = self._route_patterns(u_s, u_p, u_o)
         cache = self.cache
         self.stats.unique_patterns += nu
 
@@ -244,6 +293,24 @@ class ShardedTripleService(MicroBatchService):
                 entries[u] = _freeze_entry(concat_ragged([]))
         return QueryResultView(entries, inv)
 
+    def _route_patterns(self, s: np.ndarray, p: np.ndarray, o: np.ndarray
+                        ) -> np.ndarray:
+        """Owning shard per unique pattern (-1 = scatter-gather).
+
+        The migration-safe routing rule: while a rebalance migration is
+        in flight, a pattern is sent to a single shard only when the
+        outgoing AND incoming plans agree on it — rows whose ownership is
+        changing may physically sit on either side mid-migration, and
+        agreement means none of the pattern's rows are among them.
+        Everything else scatters, which is exact on disjoint partitions
+        regardless of migration progress.
+        """
+        routes = self.plan.route_batch(s, p, o)
+        if self._migration is not None:
+            incoming = self._migration.new_plan.route_batch(s, p, o)
+            routes = np.where(routes == incoming, routes, -1)
+        return routes
+
     def _shard_entries(self, engine: TripleQueryEngine, s, p, o) -> list:
         """One shard's entries for its sub-batch, in submission order —
         one engine micro-batch per `max_batch` chunk."""
@@ -282,7 +349,23 @@ class ShardedTripleService(MicroBatchService):
             raise ValueError(
                 f"predicate ids must be < {self.plan.n_preds}; "
                 f"got {int(rows[:, 1].max())}")
-        shards = self.plan.route_triples(rows)
+        if self._migration is None:
+            applied = self._apply_rows(rows, insert,
+                                       self.plan.route_triples(rows))
+        else:
+            applied = self._mutate_in_flight(rows, insert)
+        if insert:
+            self.stats.inserted += applied
+        else:
+            self.stats.deleted += applied
+        if applied:
+            self._maybe_auto_rebalance()
+        return applied
+
+    def _apply_rows(self, rows: np.ndarray, insert: bool,
+                    shards: np.ndarray) -> int:
+        """Apply mutation rows to the given per-row shards; bump only the
+        shards that actually changed."""
         applied = 0
         for k in np.unique(shards):
             k = int(k)
@@ -295,10 +378,46 @@ class ShardedTripleService(MicroBatchService):
             if n:  # only mutated shards lose their warm cache entries
                 applied += n
                 self.invalidate(k)
+        return applied
+
+    def _mutate_in_flight(self, rows: np.ndarray, insert: bool) -> int:
+        """Mutations while a rebalance migration is in flight.
+
+        Rows whose owner is the same under the outgoing and incoming
+        plans apply normally — none of them are in motion. A row whose
+        ownership is changing may physically sit on either side, so:
+
+        * deletes are first discarded from the pending moves (a later
+          migration batch must never resurrect them) and then applied to
+          BOTH candidate shards — each engine's set semantics no-ops the
+          side that doesn't hold the row;
+        * inserts probe the outgoing owner and, only if the row is not
+          visible there (an unmigrated copy would otherwise end up
+          duplicated across shards), land on the INCOMING owner — where
+          the completed migration will expect them.
+        """
+        mig = self._migration
+        old_s = self.plan.route_triples(rows)
+        new_s = mig.new_plan.route_triples(rows)
+        stable = old_s == new_s
+        applied = self._apply_rows(rows[stable], insert, old_s[stable]) \
+            if stable.any() else 0
+        if stable.all():
+            return applied
+        moving = ~stable
+        mrows, ma, mb = rows[moving], old_s[moving], new_s[moving]
         if insert:
-            self.stats.inserted += applied
+            present = np.zeros(len(mrows), dtype=bool)
+            for k in np.unique(ma):
+                sel = ma == k
+                present[sel] = self.engines[int(k)].contains_triples(mrows[sel])
+            if not present.all():
+                applied += self._apply_rows(mrows[~present], True,
+                                            mb[~present])
         else:
-            self.stats.deleted += applied
+            mig.discard(mrows)
+            applied += self._apply_rows(mrows, False, ma)
+            applied += self._apply_rows(mrows, False, mb)
         return applied
 
     def rebuild(self, shard: int | None = None, force: bool = False) -> list[int]:
@@ -330,6 +449,122 @@ class ShardedTripleService(MicroBatchService):
         """Per-shard overlay size (rows diverging from the compressed
         base) — the quantity :meth:`rebuild` budgets against."""
         return [e.delta.size for e in self.engines]
+
+    # -- online rebalancing ------------------------------------------------
+    def rebalance(self, force: bool = False,
+                  max_moves: int | None = None) -> dict:
+        """Re-cut the partition online; migrate rows between shards.
+
+        With a migration already in flight this continues it — up to
+        `max_moves` rows (``None`` = run to completion). Otherwise the
+        live ``max/mean`` shard skew is measured and, when it is at/above
+        the service's trigger (or under ``force=True``), a successor plan
+        is computed (`plan_rebalance`: re-quantiled ``node_range``
+        boundaries or LPT-re-packed predicate groups) and migration
+        starts. Each migrated batch arrives through the destination
+        shard's delta overlay and leaves the source via tombstones inside
+        this call, so partitions stay disjoint at every public boundary
+        and queries between calls are exact (the router scatters any
+        pattern the two plans route differently while moves are pending).
+        Only the shards a batch touched have their cache generations
+        bumped. A re-cut that cannot move anything (structurally stuck
+        skew, e.g. fewer predicates than shards) is adopted as-is and
+        arms the auto-trigger backoff.
+
+        Returns a summary: ``skew`` (at entry), ``moved`` (rows migrated
+        by THIS call), ``pending`` (rows still to move), ``active``
+        (migration still in flight).
+        """
+        skew = self.skew()
+        if self._migration is None:
+            threshold = self.rebalance_skew
+            if not force and (threshold is None or skew < threshold):
+                return {"skew": skew, "moved": 0, "pending": 0,
+                        "active": False}
+            mig = plan_rebalance(self.plan, self.engines)
+            if mig.total_rows == 0:
+                # same assignment for every live row: adopt the re-cut
+                # (future routing may still improve) and back off
+                self.plan = mig.new_plan
+                self._futile_total = int(live_shard_edges(self.engines).sum())
+                return {"skew": skew, "moved": 0, "pending": 0,
+                        "active": False}
+            self._migration = mig
+            self.stats.rebalances += 1
+            self._futile_total = None
+        moved = self._apply_migration(max_moves)
+        return {"skew": skew, "moved": moved,
+                "pending": self._migration.pending_rows
+                if self._migration is not None else 0,
+                "active": self._migration is not None}
+
+    def _apply_migration(self, max_moves: int | None = None) -> int:
+        """Migrate up to `max_moves` pending rows; finalize when drained.
+
+        Each batch inserts into the destination overlay BEFORE tombstoning
+        the source — both sides change inside this method, so no query can
+        observe the transient double-ownership — and bumps only the two
+        touched shards' generations. Once every move has been applied the
+        successor plan becomes the routing plan: at that point it is the
+        exact description of where every row lives.
+        """
+        mig = self._migration
+        moved = 0
+        for src, dst, batch in mig.take(max_moves):
+            e_src, e_dst = self.engines[src], self.engines[dst]
+            before = e_src.rebuild_count + e_dst.rebuild_count
+            e_dst.insert_triples(batch)
+            e_src.delete_triples(batch)
+            self.stats.rebuilds += \
+                e_src.rebuild_count + e_dst.rebuild_count - before
+            moved += len(batch)
+            self.invalidate(src)
+            self.invalidate(dst)
+        self.stats.migrated_rows += moved
+        if mig.done:
+            self.plan = mig.new_plan
+            self._migration = None
+        return moved
+
+    def _maybe_auto_rebalance(self) -> None:
+        """Mutation-path trigger: start a rebalance once live skew reaches
+        the threshold, migrating at most ``_AUTO_MOVES_PER_CALL`` rows per
+        mutation call — the trigger pays the plan computation, then every
+        subsequent applied mutation drains another bounded chunk, so no
+        single write blocks on moving the whole diff. Backoff: when a
+        triggered re-cut could not move anything, auto checks stay off
+        until the tier's live size drifts >25% from that futile snapshot —
+        an unfixable structural skew must not cost an O(graph) plan
+        computation per mutation."""
+        if self.rebalance_skew is None or self.n_shards < 2:
+            return
+        if self._migration is not None:  # drain the in-flight migration
+            self._apply_migration(_AUTO_MOVES_PER_CALL)
+            return
+        counts = live_shard_edges(self.engines)
+        total = int(counts.sum())
+        if self._futile_total is not None and \
+                abs(total - self._futile_total) * 4 <= self._futile_total:
+            return
+        if measure_skew(counts) >= self.rebalance_skew:
+            self.rebalance(force=True, max_moves=_AUTO_MOVES_PER_CALL)
+
+    @property
+    def migration_active(self) -> bool:
+        """True while rebalance moves are pending (routing is in its
+        conservative dual-plan mode)."""
+        return self._migration is not None
+
+    def live_edges(self) -> list[int]:
+        """Per-shard live triple counts (compressed base + overlay), the
+        load signal rebalancing watches — unlike :meth:`shard_sizes`,
+        which reports compressed start-graph edges."""
+        return [int(v) for v in live_shard_edges(self.engines)]
+
+    def skew(self) -> float:
+        """Live ``max/mean`` shard-load ratio (1.0 = balanced; compare
+        against `rebalance_skew`)."""
+        return measure_skew(live_shard_edges(self.engines))
 
     # -- maintenance / introspection -------------------------------------
     def invalidate(self, shard: int | None = None) -> None:

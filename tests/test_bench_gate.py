@@ -11,7 +11,8 @@ from benchmarks.run import (
 )
 
 
-def _mini_bench(speedup=10.0, dispatch=1.0, warm=5.0, view=4.0, sg=2.0):
+def _mini_bench(speedup=10.0, dispatch=1.0, warm=5.0, view=4.0, sg=2.0,
+                skew=0.5, full_mig=3.0):
     return {
         "patterns": {"s??": {"speedup_vs_scalar": speedup}},
         "warm_cache": {
@@ -23,6 +24,10 @@ def _mini_bench(speedup=10.0, dispatch=1.0, warm=5.0, view=4.0, sg=2.0):
         "sharded": {
             "warm_view": {"speedup_vs_materialized": view},
             "scatter_gather": {"?p?": {"sharded_vs_single": sg}},
+        },
+        "rebalance": {
+            "skew_after_vs_before": skew,
+            "full_vs_migration": full_mig,
         },
     }
 
@@ -44,7 +49,21 @@ def test_gate_metrics_flattening():
     assert m["crossover_dispatch.spo.dispatched_vs_scalar"] == 1.0
     assert m["sharded.warm_view.speedup_vs_materialized"] == 4.0
     assert m["sharded.scatter_gather.?p?.sharded_vs_single"] == 2.0
+    assert m["rebalance.skew_after_vs_before"] == 0.5
+    assert m["rebalance.full_vs_migration"] == 3.0
     assert gate_metrics({}) == {}  # sections all optional
+
+
+def test_gate_rebalance_metric_directions(tmp_path):
+    # skew ratio is lower-is-better: 0.5 -> 2.0 exceeds the 3x ceiling
+    # (bound is 0.5 * 3 = 1.5); full_vs_migration is higher-is-better:
+    # 3.0 -> 0.5 falls through the 3.0 / 3 floor
+    smoke = _mini_bench(skew=2.0, full_mig=0.5)
+    sp, bp = _write(tmp_path, smoke, gate_metrics(_mini_bench()))
+    assert check_regressions(sp, bp, tolerance=3.0) == 2
+    smoke = _mini_bench(skew=1.4, full_mig=1.1)  # inside tolerance both ways
+    sp, bp = _write(tmp_path, smoke, gate_metrics(_mini_bench()))
+    assert check_regressions(sp, bp, tolerance=3.0) == 0
 
 
 def test_gate_passes_within_tolerance(tmp_path):

@@ -1,0 +1,166 @@
+"""Randomized mutate/query/rebalance/rebuild state machine, cross-checked
+against a plain-Python set oracle.
+
+Each example drives one `ShardedTripleService` through a random
+interleaving of `insert_triples` / `delete_triples` / `rebuild` /
+`rebalance` (full and partial, leaving migrations in flight) and
+all-8-pattern query checks, for both partition strategies and 1/2/4
+shards. The oracle is a bare ``set`` of (s, p, o) tuples mutated by the
+same set semantics — no engine code on the reference side — so any
+divergence (stale cache entry, resurrected tombstone, row lost or
+duplicated by a migration, mis-routed pattern mid-flight) shows up as a
+pattern mismatch.
+
+The tier-1 run keeps a small example budget; the nightly lane
+(``pytest -m slow``, see .github/workflows/nightly.yml) re-runs the same
+machine with a bigger budget and bigger graphs via ``ITR_ORACLE_EXAMPLES``.
+"""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.partition import STRATEGIES
+from repro.serve.sharded import ShardedTripleService
+
+PATTERN_NAMES = ["s??", "?p?", "??o", "sp?", "s?o", "?po", "spo", "???"]
+
+# nightly lane budget for the @slow machine (tier-1 uses the small ones)
+SLOW_EXAMPLES = int(os.environ.get("ITR_ORACLE_EXAMPLES", "60"))
+
+
+def _bind(pattern, s, p, o):
+    return (s if pattern[0] == "s" else None,
+            p if pattern[1] == "p" else None,
+            o if pattern[2] == "o" else None)
+
+
+def _oracle_query(triples: set, s, p, o) -> list[tuple]:
+    """Reference answer in the service's result shape: (p, (s, o))."""
+    return sorted(
+        (tp, (ts, to)) for ts, tp, to in triples
+        if (s is None or ts == s) and (p is None or tp == p)
+        and (o is None or to == o))
+
+
+def _check_all_patterns(svc, oracle: set, probe) -> None:
+    s, p, o = (int(v) for v in probe)
+    for pattern in PATTERN_NAMES:
+        qs, qp, qo = _bind(pattern, s, p, o)
+        got = sorted(svc.query(qs, qp, qo))
+        want = _oracle_query(oracle, qs, qp, qo)
+        assert got == want, (pattern, (s, p, o),
+                             svc.plan.strategy, svc.n_shards,
+                             svc.migration_active)
+
+
+def _rand_rows(rng, k, n_nodes, n_preds) -> np.ndarray:
+    return np.stack([rng.integers(0, n_nodes, k),
+                     rng.integers(0, n_preds, k),
+                     rng.integers(0, n_nodes, k)], axis=1)
+
+
+def _probe(rng, oracle: set, n_nodes, n_preds):
+    if oracle and rng.integers(0, 4) > 0:  # mostly probe live rows
+        rows = sorted(oracle)
+        return rows[int(rng.integers(0, len(rows)))]
+    return tuple(int(v) for v in _rand_rows(rng, 1, n_nodes, n_preds)[0])
+
+
+def _run_machine(seed: int, strategy: str, n_shards: int, *, n_ops=8,
+                 n_nodes=16, n_preds=4, n_edges=50, auto=False) -> None:
+    rng = np.random.default_rng(seed)
+    base = np.unique(_rand_rows(rng, n_edges, n_nodes, n_preds), axis=0)
+    oracle = {tuple(map(int, r)) for r in base}
+    # small budgets sometimes, so migrations/mutations also exercise the
+    # budget-driven per-shard auto-rebuild mid-interleaving
+    delta_budget = None if rng.integers(0, 2) else int(rng.integers(4, 16))
+    svc = ShardedTripleService.build(
+        base, n_nodes, n_preds, n_shards=n_shards, strategy=strategy,
+        delta_budget=delta_budget,
+        rebalance_skew=(1.0 if auto else None))
+
+    for _ in range(n_ops):
+        op = int(rng.integers(0, 100))
+        if op < 30:  # insert: fresh rows + occasional live duplicates
+            rows = _rand_rows(rng, int(rng.integers(1, 8)), n_nodes, n_preds)
+            want = {tuple(map(int, r)) for r in rows}
+            assert svc.insert_triples(rows) == len(want - oracle)
+            oracle |= want
+        elif op < 55:  # delete: mix of live rows and absent ones
+            k = int(rng.integers(1, 8))
+            pool = [list(r) for r in sorted(oracle)]
+            picks = [pool[int(rng.integers(0, len(pool)))]
+                     for _ in range(k)] if pool else []
+            picks += _rand_rows(rng, max(1, k // 2),
+                                n_nodes, n_preds).tolist()
+            rows = np.asarray(picks, dtype=np.int64)
+            want = {tuple(map(int, r)) for r in rows}
+            assert svc.delete_triples(rows) == len(want & oracle)
+            oracle -= want
+        elif op < 80:  # query: all 8 patterns against the set oracle
+            _check_all_patterns(svc, oracle,
+                                _probe(rng, oracle, n_nodes, n_preds))
+        elif op < 92:  # rebalance, sometimes leaving moves in flight
+            if rng.integers(0, 2):
+                svc.rebalance(force=True,
+                              max_moves=int(rng.integers(1, 12)))
+            else:
+                svc.rebalance(force=True)
+        else:  # incremental rebuild (also legal mid-migration)
+            svc.rebuild(force=bool(rng.integers(0, 2)))
+
+    if svc.stats.rebalances == 0:  # the suite's contract: >= 1 rebalance
+        svc.rebalance(force=True)
+    if svc.migration_active:
+        svc.rebalance()  # drain
+    assert not svc.migration_active
+
+    for _ in range(2):
+        _check_all_patterns(svc, oracle, _probe(rng, oracle, n_nodes, n_preds))
+    # tier-level invariants after the dust settles
+    assert sum(svc.live_edges()) == len(oracle)
+    for k, engine in enumerate(svc.engines):
+        rows = engine.current_triples()
+        assert {tuple(map(int, r)) for r in rows} <= oracle
+        if len(rows):  # adopted plan == physical placement, per shard
+            assert (svc.plan.triple_shards(rows) == k).all()
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10**9))
+def test_rebalance_oracle_state_machine(seed):
+    """Explicit (incl. partial/in-flight) rebalances interleaved with
+    mutations and queries: exact for every strategy and shard count."""
+    rng = np.random.default_rng(seed)
+    for strategy in STRATEGIES:
+        for n_shards in (1, 2, 4):
+            _run_machine(int(rng.integers(0, 2**31)), strategy, n_shards)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10**9))
+def test_rebalance_oracle_auto_trigger(seed):
+    """Same machine with the mutation-path auto-trigger armed at the
+    lowest threshold: rebalances fire inside insert/delete calls."""
+    rng = np.random.default_rng(seed)
+    for strategy in STRATEGIES:
+        _run_machine(int(rng.integers(0, 2**31)), strategy, n_shards=2,
+                     n_ops=6, auto=True)
+
+
+@pytest.mark.slow
+@settings(max_examples=SLOW_EXAMPLES, deadline=None)
+@given(st.integers(0, 10**9))
+def test_rebalance_oracle_state_machine_slow(seed):
+    """Nightly-budget version: more ops, bigger graphs, more examples
+    (ITR_ORACLE_EXAMPLES; see the nightly workflow lane)."""
+    rng = np.random.default_rng(seed)
+    for strategy in STRATEGIES:
+        for n_shards in (1, 2, 4):
+            _run_machine(int(rng.integers(0, 2**31)), strategy, n_shards,
+                         n_ops=16, n_nodes=24, n_edges=110)
+    for strategy in STRATEGIES:
+        _run_machine(int(rng.integers(0, 2**31)), strategy, n_shards=4,
+                     n_ops=10, auto=True)
