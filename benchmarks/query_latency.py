@@ -31,7 +31,13 @@ trajectory from PR 1 onward:
   boundaries online: mixed-workload latency before/after, live skew
   before/after, and the cost of the incremental tombstone/insert
   migration vs a full re-partition (fresh `ShardedTripleService.build`)
-  of the same logical triples.
+  of the same logical triples;
+* a `recovery` section (PR 6) — durable-tier cold start: reopening the
+  service from its mmap-able snapshot (`DurableShardedService.open`) vs
+  recompressing the same triples through RePair from scratch, gated as
+  ``cold_start_speedup``; plus the WAL replay rate (records/s through
+  recovery) and the first-query-after-restore latency (the page-fault
+  cost mmap defers out of the open path).
 """
 from __future__ import annotations
 
@@ -114,6 +120,7 @@ def run(dataset="geo-coordinates-en", n_queries=500, quiet=False,
     _bench_sharded(itr, ds, bench, n_queries, quiet)
     _bench_mutation(itr, ds, bench, n_queries, quiet)
     _bench_rebalance(itr, ds, bench, n_queries, quiet)
+    _bench_recovery(ds, bench, quiet)
     _finalize_throughput(bench, n_queries)
     if json_path:
         try:  # a full rewrite must not erase the committed CI gate baseline
@@ -648,6 +655,99 @@ def _bench_rebalance(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None:
               f"full={full_s * 1e3:9.1f}ms "
               f"({bench['rebalance']['full_vs_migration']:5.1f}x), "
               f"pending={res['pending']}")
+
+
+def _bench_recovery(ds, bench: dict, quiet: bool) -> None:
+    """Durable-tier cold start and WAL replay (PR 6).
+
+    Three measurements land in ``bench["recovery"]``:
+
+    * ``cold_start_speedup`` (gated): reopening the service from its
+      snapshot (`DurableShardedService.open`, mmap-backed arrays, no
+      RePair) vs compressing the same triples from scratch — the whole
+      point of persisting engine state;
+    * ``first_query_after_open_us``: the first query on the reopened
+      tier, i.e. the page-fault cost mmap defers out of the open path;
+    * ``wal_replay_records_per_s``: recovery throughput with a log of
+      mutation records to replay over the snapshot (recorded, not gated
+      — an absolute rate, machine-dependent).
+    """
+    import shutil
+    import tempfile
+
+    from repro.persist.service import DurableShardedService
+    from repro.serve.sharded import ShardedTripleService
+
+    n_shards = 2
+    kwargs = dict(n_shards=n_shards, cache=None, crossover=0,
+                  delta_budget=None, rebalance_skew=None)
+    root = tempfile.mkdtemp(prefix="itr-bench-recovery-")
+    try:
+        svc = DurableShardedService.build(
+            ds.triples, ds.n_nodes, ds.n_preds, root=root, **kwargs)
+        svc.close()
+        # min over reps: cold_start_speedup feeds the CI gate
+        def timed_open():
+            t0 = time.perf_counter()
+            opened = DurableShardedService.open(
+                root, cache=None, rebalance_skew=None)
+            return time.perf_counter() - t0, opened
+
+        cold_start_s, svc = timed_open()
+        for _ in range(1):
+            svc.close()
+            again_s, svc = timed_open()
+            cold_start_s = min(cold_start_s, again_s)
+        s0 = int(ds.triples[0, 0])
+        t0 = time.perf_counter()
+        svc.query(s0, None, None)
+        first_query_us = (time.perf_counter() - t0) * 1e6
+
+        repair_s = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            ShardedTripleService.build(
+                ds.triples, ds.n_nodes, ds.n_preds, **kwargs)
+            repair_s = min(repair_s, time.perf_counter() - t0)
+
+        # a log's worth of mutation records to replay over the snapshot
+        rng = np.random.default_rng(13)
+        n_records, per_record = 32, 8
+        for _ in range(n_records):
+            svc.insert_triples(np.stack(
+                [rng.integers(0, ds.n_nodes, per_record),
+                 rng.integers(0, ds.n_preds, per_record),
+                 rng.integers(0, ds.n_nodes, per_record)], axis=1))
+        svc.close()
+        t0 = time.perf_counter()
+        svc = DurableShardedService.open(
+            root, cache=None, rebalance_skew=None)
+        replay_open_s = time.perf_counter() - t0
+        replayed = svc.last_recovery.replayed_records
+        svc.close()
+
+        bench["recovery"] = {
+            "n_shards": n_shards,
+            "cold_start_s": cold_start_s,
+            "repair_rebuild_s": repair_s,
+            "cold_start_speedup": repair_s / cold_start_s
+            if cold_start_s > 0 else float("inf"),
+            "first_query_after_open_us": first_query_us,
+            "wal_records_replayed": int(replayed),
+            "replay_open_s": replay_open_s,
+            "wal_replay_records_per_s": replayed / replay_open_s
+            if replay_open_s > 0 else float("inf"),
+        }
+        if not quiet:
+            r = bench["recovery"]
+            print(f"recovery cold-start={cold_start_s * 1e3:9.1f}ms "
+                  f"repair-rebuild={repair_s * 1e3:9.1f}ms "
+                  f"({r['cold_start_speedup']:5.1f}x) "
+                  f"first-query={first_query_us:9.1f}us "
+                  f"replay={replayed}rec/{replay_open_s * 1e3:.1f}ms "
+                  f"({r['wal_replay_records_per_s']:.0f}rec/s)")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
 
 
 def _finalize_throughput(bench: dict, n_queries: int) -> None:

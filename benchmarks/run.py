@@ -76,7 +76,30 @@ def gate_metrics(bench: dict) -> dict[str, float]:
             rebalance["skew_after_vs_before"]
         # migration must stay cheaper than a full re-partition
         out["rebalance.full_vs_migration"] = rebalance["full_vs_migration"]
+    recovery = bench.get("recovery", {})
+    if "cold_start_speedup" in recovery:
+        # snapshot cold start must stay cheaper than a RePair rebuild
+        out["recovery.cold_start_speedup"] = recovery["cold_start_speedup"]
     return {k: float(v) for k, v in out.items()}
+
+
+def _load_bench_json(path: str, remedy: str) -> dict | None:
+    """Read one bench JSON artifact; on any failure print an actionable
+    `gate ERROR` (what is wrong + how to fix it) and return None."""
+    try:
+        doc = json.loads(Path(path).read_text())
+    except FileNotFoundError:
+        print(f"gate ERROR: {path} not found — {remedy}", file=sys.stderr)
+        return None
+    except json.JSONDecodeError as exc:
+        print(f"gate ERROR: {path} is not valid JSON ({exc}) — {remedy}",
+              file=sys.stderr)
+        return None
+    if not isinstance(doc, dict):
+        print(f"gate ERROR: {path} must hold a JSON object, got "
+              f"{type(doc).__name__} — {remedy}", file=sys.stderr)
+        return None
+    return doc
 
 
 def check_regressions(smoke_path: str = SMOKE_JSON,
@@ -92,16 +115,50 @@ def check_regressions(smoke_path: str = SMOKE_JSON,
     one recorded alongside the baseline (so re-recording with
     `--update-baseline --tolerance N` actually changes the gate).
     Returns the number of regressions; prints one `gate ...` line each.
+    Every malformed-input path (missing file, invalid JSON, missing
+    `smoke_baseline` section, a section metric that lost its value)
+    fails with an actionable `gate ERROR` line instead of a traceback.
     """
-    smoke = gate_metrics(json.loads(Path(smoke_path).read_text()))
-    baseline_doc = json.loads(Path(baseline_path).read_text())
-    section = baseline_doc.get("smoke_baseline", {})
+    smoke_doc = _load_bench_json(
+        smoke_path, "re-run `python -m benchmarks.run --smoke --check` "
+        "(the smoke run writes it)")
+    baseline_doc = _load_bench_json(
+        baseline_path, "restore the tracked artifact or re-record it with "
+        "`python -m benchmarks.run` then `--smoke --update-baseline`")
+    if smoke_doc is None or baseline_doc is None:
+        return 1
+    try:
+        smoke = gate_metrics(smoke_doc)
+    except (KeyError, TypeError) as exc:
+        print(f"gate ERROR: {smoke_path} has a bench section missing its "
+              f"expected metric ({exc!r}); the smoke run and the gate "
+              f"disagree about the schema — re-run "
+              f"`python -m benchmarks.run --smoke --check` from this "
+              f"checkout", file=sys.stderr)
+        return 1
+    section = baseline_doc.get("smoke_baseline")
+    if not isinstance(section, dict):
+        print(f"gate ERROR: no smoke_baseline section in {baseline_path}; "
+              f"record one with "
+              f"`python -m benchmarks.run --smoke --update-baseline`",
+              file=sys.stderr)
+        return 1
     if tolerance is None:
         tolerance = float(section.get("tolerance", GATE_TOLERANCE))
     base = section.get("metrics")
-    if not base:
-        print(f"gate ERROR: no smoke_baseline in {baseline_path}; record one "
-              f"with `python -m benchmarks.run --smoke --update-baseline`",
+    if not isinstance(base, dict) or not base:
+        print(f"gate ERROR: smoke_baseline in {baseline_path} has no "
+              f"metrics mapping; re-record it with "
+              f"`python -m benchmarks.run --smoke --update-baseline`",
+              file=sys.stderr)
+        return 1
+    bad = {k: v for k, v in base.items()
+           if not isinstance(v, (int, float)) or isinstance(v, bool)}
+    if bad:
+        print(f"gate ERROR: smoke_baseline metrics in {baseline_path} "
+              f"must be numbers; offending entries: "
+              f"{', '.join(sorted(bad))} — re-record with "
+              f"`python -m benchmarks.run --smoke --update-baseline`",
               file=sys.stderr)
         return 1
     failures = 0
@@ -251,6 +308,14 @@ def main(smoke: bool = False, check: bool = False,
                       f"{rebalance['full_vs_migration']:.2f},x")
                 print(f"rebalance/migrated_rows,"
                       f"{rebalance['migrated_rows']},rows")
+            recovery = bench.get("recovery", {})
+            if recovery:
+                print(f"recovery/cold_start_speedup,"
+                      f"{recovery['cold_start_speedup']:.2f},x")
+                print(f"recovery/wal_replay_records_per_s,"
+                      f"{recovery['wal_replay_records_per_s']:.0f},rec_per_s")
+                print(f"recovery/first_query_after_open_us,"
+                      f"{recovery['first_query_after_open_us']:.1f},us")
         except Exception as e:
             print(f"# {BASELINE_JSON} unavailable: {e}", file=sys.stderr)
     p = plus[0]

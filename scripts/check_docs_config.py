@@ -1,6 +1,6 @@
 #!/usr/bin/env python
-"""Docs-consistency gate: every ITR_* env var referenced in src/ must be
-documented in docs/CONFIG.md.
+"""Docs-consistency gate: every ITR_* env var referenced in src/,
+benchmarks/, or scripts/ must be documented in docs/CONFIG.md.
 
 Run from the repo root (CI does): exits 1 listing any undocumented
 variable. Documented-but-unreferenced variables are reported as warnings
@@ -15,13 +15,18 @@ from pathlib import Path
 
 ENV_RE = re.compile(r"\bITR_[A-Z0-9_]+\b")
 
+# every tree whose python sources can read a knob (tests are exempt:
+# test-only tuning vars are documented next to the lane that sets them)
+SCAN_DIRS = ("src", "benchmarks", "scripts")
 
-def referenced_vars(src_root: Path) -> dict[str, list[str]]:
+
+def referenced_vars(*roots: Path) -> dict[str, list[str]]:
     """ITR_* names -> files referencing them, over all python sources."""
     refs: dict[str, list[str]] = {}
-    for path in sorted(src_root.rglob("*.py")):
-        for name in set(ENV_RE.findall(path.read_text())):
-            refs.setdefault(name, []).append(str(path))
+    for root in roots:
+        for path in sorted(root.rglob("*.py")):
+            for name in set(ENV_RE.findall(path.read_text())):
+                refs.setdefault(name, []).append(str(path))
     return refs
 
 
@@ -35,7 +40,7 @@ def main() -> int:
     if not config_md.exists():
         print(f"docs gate: {config_md} missing", file=sys.stderr)
         return 1
-    refs = referenced_vars(root / "src")
+    refs = referenced_vars(*(root / d for d in SCAN_DIRS))
     documented = documented_vars(config_md)
     missing = sorted(set(refs) - documented)
     for name in missing:
@@ -43,7 +48,7 @@ def main() -> int:
               f"but absent from docs/CONFIG.md", file=sys.stderr)
     for name in sorted(documented - set(refs)):
         print(f"docs gate: warning: {name} documented but no longer "
-              f"referenced under src/")
+              f"referenced under {'/'.join(SCAN_DIRS)}")
     print(f"docs gate: {len(refs)} env var(s) referenced, "
           f"{len(missing)} undocumented")
     return 1 if missing else 0

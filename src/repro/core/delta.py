@@ -143,6 +143,18 @@ class DeltaOverlay:
         self._inserts = _EMPTY_ROWS
         self._tombstones = _EMPTY_ROWS
 
+    def load_rows(self, inserts: np.ndarray, tombstones: np.ndarray) -> None:
+        """Restore persisted overlay state (the snapshot load path).
+
+        The rows must already be canonical — each side sorted, deduped,
+        disjoint from the other, with the module invariants (inserts not
+        in the visible base, tombstones in it) guaranteed by whoever
+        persisted them; they are adopted as-is. Read-only (mmap) arrays
+        are fine: the overlay never mutates its buffers in place.
+        """
+        self._inserts = np.asarray(inserts, dtype=np.int64).reshape(-1, 3)
+        self._tombstones = np.asarray(tombstones, dtype=np.int64).reshape(-1, 3)
+
     # -- mutation --------------------------------------------------------
     def insert_rows(self, rows: np.ndarray) -> int:
         """Record insertions of `rows`, which the caller has verified are

@@ -192,6 +192,24 @@ class FlatGrammar:
                    edge_ranks, param_offsets, params, nt_gen)
 
     # ------------------------------------------------------------------
+    _ARRAY_FIELDS = ("rule_index", "rule_labels", "edge_offsets",
+                     "edge_labels", "edge_ranks", "param_offsets", "params",
+                     "nt_gen")
+
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        """The CSR as a flat name -> array dict — the snapshot wire form.
+        (`nt_gen` stays 2-D bool; ``.npy`` serializes it natively.)"""
+        return {name: getattr(self, name) for name in self._ARRAY_FIELDS}
+
+    @classmethod
+    def from_arrays(cls, n_terminals: int,
+                    arrays: dict[str, np.ndarray]) -> "FlatGrammar":
+        """Inverse of :meth:`to_arrays` — rebuilds the flat view with no
+        per-rule Python loop (arrays may be read-only mmap views)."""
+        return cls(int(n_terminals),
+                   *(np.asarray(arrays[name]) for name in cls._ARRAY_FIELDS))
+
+    # ------------------------------------------------------------------
     def generates(self, labels: np.ndarray, preds: np.ndarray) -> np.ndarray:
         """Vectorized NT[label, p]: does each (nonterminal label, terminal p)
         pair hold? Labels must be nonterminals with a rule slot."""

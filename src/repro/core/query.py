@@ -56,6 +56,7 @@ from repro.core.grammar import Grammar
 from repro.core.hypergraph import _ragged_take
 from repro.core.result_cache import QueryResultCache
 from repro.core.succinct import K2Tree
+from repro.persist.crash import crash_point
 
 _EMPTY = np.zeros(0, dtype=np.int64)
 
@@ -251,6 +252,68 @@ class TripleQueryEngine:
             self.delta_budget = None if delta_budget is None \
                 else resolve_delta_budget(delta_budget)
         self.rebuild_count = 0
+
+    @classmethod
+    def from_state(cls, grammar: Grammar, encoded: EncodedGrammar,
+                   flat: FlatGrammar, *, crossover: int, cache=_DEFAULT_CACHE,
+                   delta_budget: int | None = None, config=None,
+                   base_edges: int | None = None,
+                   rebuild_count: int = 0) -> "TripleQueryEngine":
+        """Reconstruct an engine from prebuilt parts — the snapshot load
+        path. No RePair, no `encode`, no `FlatGrammar.from_grammar`, no
+        crossover calibration: everything expensive arrives precomputed.
+
+        `grammar.start` must be in label-sorted edge order (the order
+        `encoded.incidence` indexes and snapshots persist); `crossover`
+        and `delta_budget` are the already-resolved stored values. The
+        overlay starts empty — callers restore it via
+        :meth:`~repro.core.delta.DeltaOverlay.load_rows`. Attribute
+        assignments mirror ``__init__`` one-for-one; keep the two in sync.
+        """
+        self = cls.__new__(cls)
+        self.grammar = grammar
+        self.encoded = encoded
+        self.T = grammar.table.n_terminals
+        self.ranks = grammar.table.ranks
+        # NT k²-tree from the flat bitsets instead of grammar.nt_generates()
+        # (identical content: flat rows are label-T slots, and encode
+        # guarantees rule labels are contiguous)
+        if flat.nt_gen.size:
+            r, c = np.nonzero(flat.nt_gen)
+            self.nt_k2 = K2Tree(r, c, flat.nt_gen.shape[0], flat.nt_gen.shape[1])
+        else:
+            self.nt_k2 = None
+        self._nt_rows = {}
+        self.flat = flat
+        g = grammar.start
+        if g.n_edges and bool(np.any(np.diff(g.labels) < 0)):
+            raise ValueError("from_state needs a label-sorted start graph")
+        self._start_sorted = g
+        self._sorted_labels = g.labels
+        self._sorted_ranks = g.ranks()
+        self._sorted_offsets = g.offsets
+        self._sorted_nodes = g.nodes_flat
+        self._rules = {
+            lbl: [(int(r.rhs.labels[j]), r.rhs.edge_nodes(j))
+                  for j in range(r.rhs.n_edges)]
+            for lbl, r in grammar.rules.items()
+        }
+        self._edge_cache = [
+            (int(g.labels[j]), g.nodes_flat[g.offsets[j]:g.offsets[j + 1]])
+            for j in range(g.n_edges)
+        ]
+        self._arena = FrontierArena()
+        if cache is _DEFAULT_CACHE:
+            cache = QueryResultCache() if _env_flag("ITR_RESULT_CACHE", True) else None
+        self.cache = cache
+        self.crossover = int(crossover)
+        self.delta = DeltaOverlay()
+        self._base_edges = None if base_edges is None else int(base_edges)
+        self.config = config
+        self.delta_budget = None if delta_budget is None \
+            else resolve_delta_budget(delta_budget)
+        self.rebuild_count = int(rebuild_count)
+        return self
 
     # -- crossover calibration -------------------------------------------
     def _calibrate_crossover(self) -> int:
@@ -762,6 +825,9 @@ class TripleQueryEngine:
                                   config=config)
         fresh._base_edges = len(triples)  # the new base IS these rows
         rebuilds = self.rebuild_count + 1
+        # a kill here loses only memory: the swap below never touches disk,
+        # so recovery replays snapshot + WAL and re-reaches this state
+        crash_point("engine.rebuild")
         self.__dict__.update(fresh.__dict__)
         self.rebuild_count = rebuilds
         if self.cache is not None:

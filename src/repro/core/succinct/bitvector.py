@@ -98,6 +98,23 @@ class BitVector:
             bits[np.asarray(positions, dtype=np.int64)] = 1
         return cls(bits)
 
+    @classmethod
+    def from_words(cls, words: np.ndarray, n: int) -> "BitVector":
+        """Reconstruct from already-packed words (the snapshot load path):
+        only the rank index is recomputed — no unpack/repack round-trip.
+        `words` may be a read-only mmap view; it is never written to."""
+        self = cls.__new__(cls)
+        self.n = int(n)
+        self.words = np.asarray(words, dtype=np.uint32)
+        if len(self.words) != (self.n + 31) // 32:
+            raise ValueError(
+                f"{len(self.words)} words cannot back {self.n} bits")
+        pc = popcount32(self.words)
+        self.word_ranks = np.concatenate([[0], np.cumsum(pc)]).astype(np.int64)
+        self.n_ones = int(self.word_ranks[-1])
+        self._jax_words = None
+        return self
+
     def __len__(self) -> int:
         return self.n
 

@@ -29,6 +29,22 @@ class EliasFano:
         # packed low bits
         self._low_words, self._low_bits = self._pack_lows()
 
+    @classmethod
+    def from_parts(cls, n: int, universe: int, l: int, lows: np.ndarray,
+                   upper_words: np.ndarray, upper_n: int,
+                   low_words: np.ndarray, low_bits: int) -> "EliasFano":
+        """Reconstruct from persisted internals (the snapshot load path) —
+        no re-derivation of the split or re-packing of the low bits."""
+        self = cls.__new__(cls)
+        self.n = int(n)
+        self.universe = int(universe)
+        self.l = int(l)
+        self._lows = np.asarray(lows, dtype=np.uint64)
+        self._upper = BitVector.from_words(upper_words, upper_n)
+        self._low_words = np.asarray(low_words, dtype=np.uint32)
+        self._low_bits = int(low_bits)
+        return self
+
     def _pack_lows(self):
         if self.l == 0 or self.n == 0:
             return np.zeros(0, dtype=np.uint32), 0

@@ -36,6 +36,27 @@ class K2Tree:
         self.levels: list[BitVector] = []
         self._build(rows, cols)
 
+    @classmethod
+    def from_levels(cls, n_rows: int, n_cols: int, k: int, h: int,
+                    n_points: int, level_words: list, level_bits: list) -> "K2Tree":
+        """Reconstruct from persisted per-level bitvector words (the
+        snapshot load path): no COO radix build, only rank-index
+        recomputation inside each :meth:`BitVector.from_words`."""
+        from repro.core.succinct.bitvector import BitVector as _BV
+
+        self = cls.__new__(cls)
+        self.n_rows, self.n_cols, self.k = int(n_rows), int(n_cols), int(k)
+        self.h = int(h)
+        self.side = self.k ** self.h
+        self.n_points = int(n_points)
+        if len(level_words) != self.h and not (len(level_words) == 1
+                                               and n_points == 0):
+            raise ValueError(
+                f"{len(level_words)} levels for a height-{self.h} k2-tree")
+        self.levels = [_BV.from_words(w, int(nb))
+                       for w, nb in zip(level_words, level_bits)]
+        return self
+
     def _build(self, rows: np.ndarray, cols: np.ndarray):
         k, k2, h = self.k, self.k * self.k, self.h
         if rows.size == 0:

@@ -164,6 +164,33 @@ class PartitionPlan:
         return np.where(s >= 0, self._node_shard(np.maximum(s, 0)), -1)
 
 
+def plan_to_dict(plan: PartitionPlan) -> dict:
+    """JSON-serializable form of a plan — the wire format service
+    snapshots and WAL plan records use. Inverse: :func:`plan_from_dict`."""
+    d = {"strategy": plan.strategy, "n_shards": int(plan.n_shards),
+         "n_nodes": int(plan.n_nodes), "n_preds": int(plan.n_preds)}
+    if plan.boundaries is not None:
+        d["boundaries"] = [int(v) for v in plan.boundaries]
+    if plan.pred_assign is not None:
+        d["pred_assign"] = [int(v) for v in plan.pred_assign]
+    return d
+
+
+def plan_from_dict(d: dict) -> PartitionPlan:
+    """Rebuild a plan from :func:`plan_to_dict` output (validation reruns
+    in ``PartitionPlan.__post_init__``, so a corrupted record fails loudly
+    instead of mis-routing rows)."""
+    boundaries = d.get("boundaries")
+    pred_assign = d.get("pred_assign")
+    return PartitionPlan(
+        d["strategy"], int(d["n_shards"]), int(d["n_nodes"]),
+        int(d["n_preds"]),
+        boundaries=None if boundaries is None
+        else np.asarray(boundaries, dtype=np.int64),
+        pred_assign=None if pred_assign is None
+        else np.asarray(pred_assign, dtype=np.int64))
+
+
 def make_plan(strategy: str, n_shards: int, n_nodes: int, n_preds: int,
               triples: np.ndarray | None = None) -> PartitionPlan:
     """Build a partition plan.

@@ -239,6 +239,13 @@ def plan_rebalance(plan: PartitionPlan, engines) -> RebalancePlan:
                                     prior=plan.pred_assignment())
         new_plan = PartitionPlan("predicate_hash", plan.n_shards, n_nodes,
                                  plan.n_preds, pred_assign=assign)
+    return RebalancePlan(plan, new_plan, _moves_for(new_plan, per_shard))
+
+
+def _moves_for(new_plan: PartitionPlan, per_shard: list) -> list:
+    """(src, dst, rows) moves turning the given physical placement into
+    `new_plan`'s: for each shard, the rows the successor plan routes
+    elsewhere."""
     moves = []
     for k, shard_rows in enumerate(per_shard):
         if len(shard_rows) == 0:
@@ -248,4 +255,19 @@ def plan_rebalance(plan: PartitionPlan, engines) -> RebalancePlan:
             d = int(d)
             if d != k:
                 moves.append((k, d, shard_rows[dst == d]))
-    return RebalancePlan(plan, new_plan, moves)
+    return moves
+
+
+def migration_moves(new_plan: PartitionPlan, engines) -> list:
+    """Pending (src, dst, rows) moves for an ALREADY-DECIDED successor
+    plan, diffed against the engines' current physical rows.
+
+    This is the WAL-replay / snapshot-restore path: a journaled
+    ``rebalance_begin`` record (and a snapshot taken mid-migration) stores
+    only the successor plan — the rows still waiting to move are exactly
+    the ones the recovered engines hold on shards the plan routes
+    elsewhere, so recomputing the diff reconstructs the in-flight
+    migration without persisting row lists. Deterministic given engine
+    state: replaying the same mutation history yields the same moves.
+    """
+    return _moves_for(new_plan, [e.current_triples() for e in engines])

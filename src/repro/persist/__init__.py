@@ -1,0 +1,50 @@
+"""Durability: engine snapshots, mutation write-ahead log, crash injection.
+
+Submodules:
+
+* `repro.persist.crash` — :func:`crash_point` injection hooks + the
+  :class:`CrashInjector` test harness (no repro imports; safe to call
+  from any layer).
+* `repro.persist.snapshot` — versioned, checksummed, mmap-able on-disk
+  engine snapshots (``save_snapshot`` / ``load_snapshot``).
+* `repro.persist.wal` — framed, fsync-controlled write-ahead log with a
+  truncation-tolerant reader.
+* `repro.persist.service` — :class:`DurableShardedService`: the sharded
+  serving tier wrapped with snapshot + WAL + replay recovery.
+
+Attribute access is lazy (PEP 562): ``repro.core.query`` and
+``repro.serve.sharded`` import ``repro.persist.crash`` for their
+injection hooks, and an eager package import of ``snapshot``/``service``
+(which import those same modules) would be circular.
+"""
+from __future__ import annotations
+
+from repro.persist.crash import (  # noqa: F401  (dependency-free, safe eager)
+    CrashInjector,
+    CrashPoint,
+    crash_point,
+    inject_crashes,
+)
+
+_LAZY = {
+    "save_snapshot": "repro.persist.snapshot",
+    "load_snapshot": "repro.persist.snapshot",
+    "SnapshotError": "repro.persist.snapshot",
+    "WriteAheadLog": "repro.persist.wal",
+    "read_wal_records": "repro.persist.wal",
+    "DurableShardedService": "repro.persist.service",
+}
+
+__all__ = [
+    "CrashInjector", "CrashPoint", "crash_point", "inject_crashes",
+    *_LAZY,
+]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

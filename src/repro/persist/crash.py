@@ -1,0 +1,119 @@
+"""Crash-point injection for durability testing.
+
+Real kill -9s cannot be produced inside the test process, so — in the
+style of `repro.train.fault_tolerance.FailureInjector` — the durability
+paths (snapshot write, WAL append, engine rebuild, migration apply) are
+instrumented with named :func:`crash_point` calls, and tests arm a
+:class:`CrashInjector` with a schedule ``{point_name: hit_number}``. When
+an armed point reaches its scheduled hit it raises :class:`CrashPoint`,
+which models the process dying *at that instant*: everything in memory is
+garbage, and only what has already reached disk matters. The randomized
+crash oracle (`tests/test_crash_oracle.py`) catches the exception, throws
+the live service away, recovers from disk, and checks query parity.
+
+`CrashPoint` subclasses ``BaseException`` on purpose: production code
+that defensively catches ``Exception`` must not be able to "survive" a
+simulated kill.
+
+Disarmed cost is one global read and a ``None`` check per point — cheap
+enough to leave the hooks in production paths permanently.
+
+``ITR_CRASH_POINTS`` (e.g. ``"wal.append:2,snapshot.pre_commit:1"``) arms
+a process-wide schedule at first use, for driving crash drills from the
+command line without writing a test.
+
+This module deliberately imports nothing from the rest of `repro` so any
+layer (core, serve, persist) can call :func:`crash_point` without import
+cycles.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+_ENV_VAR = "ITR_CRASH_POINTS"
+
+
+class CrashPoint(BaseException):
+    """A simulated kill at a named injection point (not an ``Exception``:
+    broad handlers must not swallow a crash)."""
+
+    def __init__(self, name: str):
+        super().__init__(name)
+        self.name = name
+
+
+class CrashInjector:
+    """Deterministic crash schedule: ``{point_name: hit_number}`` raises
+    :class:`CrashPoint` the `hit_number`-th (1-based) time that point is
+    visited. `hits` keeps per-point visit counts for assertions."""
+
+    def __init__(self, schedule: dict[str, int] | None = None):
+        self.schedule = {str(k): int(v) for k, v in (schedule or {}).items()}
+        self.hits: dict[str, int] = {}
+
+    def visit(self, name: str) -> None:
+        n = self.hits.get(name, 0) + 1
+        self.hits[name] = n
+        if self.schedule.get(name) == n:
+            raise CrashPoint(name)
+
+
+# the armed injector (None = disarmed); module-global so every layer's
+# crash_point() calls see one schedule without threading state through APIs
+_ACTIVE: CrashInjector | None = None
+_ENV_CHECKED = False
+
+
+def crash_point(name: str) -> None:
+    """Visit the named injection point; raises :class:`CrashPoint` when an
+    armed schedule says this visit is the crash."""
+    global _ENV_CHECKED, _ACTIVE
+    if not _ENV_CHECKED:
+        _ENV_CHECKED = True
+        spec = os.environ.get(_ENV_VAR, "").strip()
+        if spec and _ACTIVE is None:
+            _ACTIVE = CrashInjector(parse_crash_points(spec))
+    if _ACTIVE is not None:
+        _ACTIVE.visit(name)
+
+
+def active_injector() -> CrashInjector | None:
+    return _ACTIVE
+
+
+@contextmanager
+def inject_crashes(schedule: dict[str, int]):
+    """Arm a crash schedule for the duration of the block; yields the
+    :class:`CrashInjector` (its `hits` survive the block for assertions).
+    Nested arming restores the previous injector on exit."""
+    global _ACTIVE
+    injector = CrashInjector(schedule)
+    prev = _ACTIVE
+    _ACTIVE = injector
+    try:
+        yield injector
+    finally:
+        _ACTIVE = prev
+
+
+def parse_crash_points(spec: str) -> dict[str, int]:
+    """Parse an ``ITR_CRASH_POINTS`` spec: comma-separated ``name:hit``
+    entries (hit defaults to 1). Malformed entries raise — a typo'd crash
+    drill silently testing nothing is worse than an error."""
+    schedule: dict[str, int] = {}
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        name, _, hit = entry.partition(":")
+        name = name.strip()
+        if not name:
+            raise ValueError(f"bad {_ENV_VAR} entry {entry!r}: empty point name")
+        try:
+            schedule[name] = int(hit) if hit.strip() else 1
+        except ValueError:
+            raise ValueError(
+                f"bad {_ENV_VAR} entry {entry!r}: hit count must be an "
+                f"integer") from None
+    return schedule

@@ -1,0 +1,436 @@
+"""Durable sharded serving: snapshots + write-ahead log + replay recovery.
+
+:class:`DurableShardedService` wraps a
+:class:`~repro.serve.sharded.ShardedTripleService` with the two on-disk
+structures that make it survive a kill at any instant:
+
+* **Versioned service snapshots** — ``snap_NNNNNN/`` directories under
+  the service root, each holding one engine snapshot per shard
+  (`repro.persist.snapshot`) plus a ``service.json`` with the routing
+  plan (and, when taken mid-migration, the successor plan). The manifest
+  is written last and the directory is published by one ``os.rename``,
+  so the newest *complete* directory is always a consistent state;
+  older directories are garbage-collected only after the rename.
+* **A write-ahead log** (`repro.persist.wal`) — every mutation and every
+  rebalance state change appends a record BEFORE it applies in memory.
+  Recovery = load the newest snapshot, replay the log over it.
+
+Recovery invariants the crash oracle (`tests/test_crash_oracle.py`)
+enforces at every injection point:
+
+* an operation whose record predates the crash is fully recovered; one
+  whose record never hit the disk never happened — there is no third
+  state, because a torn final record is dropped by the tolerant reader;
+* replay is idempotent: a crash *between* snapshot commit and WAL
+  truncation replays the entire old log onto the new snapshot, which is
+  a no-op by construction (mutations are last-writer-wins set
+  operations; migration batches re-apply through a source-visibility
+  probe — see ``ShardedTripleService._apply_migration_batch``);
+* an in-flight migration needs no row lists on disk: the snapshot (or
+  the ``rebalance_begin`` record) pins the successor plan, and the rows
+  still to move are recomputed as the diff between where rows physically
+  sit and where that plan routes them
+  (:func:`repro.distributed.rebalance.migration_moves`);
+* a shard whose snapshot is corrupt degrades instead of killing the
+  tier: the service serves the surviving shards (holes counted in
+  ``stats.degraded_patterns``), refuses writes to the hole, and
+  :meth:`ShardedTripleService.reingest_shard` restores it from re-fed
+  rows.
+
+Knobs: ``ITR_SNAPSHOT_DIR`` (default service root), ``ITR_WAL_FSYNC``
+(fsync-per-append, default on).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.delta import as_triple_rows
+from repro.core.query import _env_flag
+from repro.core.result_cache import QueryResultCache
+from repro.distributed.partition import plan_from_dict, plan_to_dict
+from repro.distributed.rebalance import RebalancePlan, migration_moves
+from repro.persist.crash import crash_point
+from repro.persist.snapshot import SnapshotError, load_snapshot, save_snapshot
+from repro.persist.wal import (
+    OP_DELETE,
+    OP_INSERT,
+    OP_MIGRATE,
+    OP_PLAN_SWAP,
+    OP_REBALANCE_BEGIN,
+    WriteAheadLog,
+    read_wal_records,
+)
+from repro.serve.sharded import (
+    _DEFAULT_CACHE,
+    _DEFAULT_SKEW,
+    ShardedTripleService,
+)
+
+SERVICE_MANIFEST = "service.json"
+WAL_FILE = "wal.log"
+
+_SNAP_RE = re.compile(r"^snap_(\d{6})$")
+
+_MIGRATE_HDR = struct.Struct("<ii")  # src shard, dst shard
+
+
+def resolve_snapshot_dir(root=None) -> str:
+    """Service root: explicit `root`, else ``ITR_SNAPSHOT_DIR``."""
+    if root is not None:
+        return os.fspath(root)
+    env = os.environ.get("ITR_SNAPSHOT_DIR", "").strip()
+    if not env:
+        raise ValueError(
+            "no snapshot root: pass root= or set ITR_SNAPSHOT_DIR")
+    return env
+
+
+@dataclass
+class RecoveryReport:
+    """What :meth:`DurableShardedService.open` found and did."""
+
+    snapshot_dir: str = ""
+    snapshot_step: int = 0
+    replayed_records: int = 0
+    skipped_rows: int = 0        # mutation rows dropped (failed shards)
+    skipped_batches: int = 0     # migration batches dropped (failed shards)
+    torn_tail: bool = False      # WAL ended in a dropped partial record
+    torn_reason: str = ""
+    migration_resumed: bool = False
+    failed_shards: list = field(default_factory=list)
+
+
+# -- record packing --------------------------------------------------------
+
+def _pack_rows(op: int, rows: np.ndarray) -> bytes:
+    return bytes([op]) + np.ascontiguousarray(rows, dtype="<i8").tobytes()
+
+def _unpack_rows(payload: bytes) -> np.ndarray:
+    return np.frombuffer(payload, dtype="<i8").astype(np.int64).reshape(-1, 3)
+
+def _pack_plan(op: int, plan) -> bytes:
+    return bytes([op]) + json.dumps(plan_to_dict(plan)).encode()
+
+def _pack_migrate(src: int, dst: int, rows: np.ndarray) -> bytes:
+    return bytes([OP_MIGRATE]) + _MIGRATE_HDR.pack(src, dst) \
+        + np.ascontiguousarray(rows, dtype="<i8").tobytes()
+
+
+class DurableShardedService:
+    """A sharded triple service whose state survives ``kill -9``.
+
+    Build fresh with :meth:`build` (compress + initial snapshot) or
+    recover with :meth:`open` (newest snapshot + WAL replay). The query
+    plane and maintenance surface delegate to the wrapped
+    :class:`ShardedTripleService`; the mutation surface
+    (``insert_triples``/``delete_triples``) writes ahead to the log, and
+    rebalance state changes journal themselves through the service's
+    ``_journal`` hook. :meth:`snapshot` persists the current state and
+    compacts the log.
+    """
+
+    def __init__(self, service: ShardedTripleService, root: str,
+                 wal: WriteAheadLog, recovery: RecoveryReport | None = None):
+        self.service = service
+        self.root = os.fspath(root)
+        self.wal = wal
+        #: report of the recovery that produced this instance (None when
+        #: built fresh)
+        self.last_recovery = recovery
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def build(cls, triples, n_nodes: int, n_preds: int, root=None,
+              fsync: bool | None = None, **kwargs) -> "DurableShardedService":
+        """Compress + shard `triples` (all :meth:`ShardedTripleService
+        .build` kwargs pass through), then make the result durable: write
+        the initial snapshot under `root` and open the WAL."""
+        root = resolve_snapshot_dir(root)
+        service = ShardedTripleService.build(
+            np.asarray(triples, dtype=np.int64), n_nodes, n_preds, **kwargs)
+        os.makedirs(root, exist_ok=True)
+        wal = WriteAheadLog(os.path.join(root, WAL_FILE), fsync=fsync)
+        self = cls(service, root, wal)
+        self.snapshot()
+        self._attach()
+        return self
+
+    @classmethod
+    def open(cls, root=None, *, fsync: bool | None = None, mmap: bool = True,
+             verify: bool = True, max_batch: int = 1024, config=None,
+             rebalance_skew=_DEFAULT_SKEW,
+             cache=_DEFAULT_CACHE) -> "DurableShardedService":
+        """Recover a service from disk: newest complete snapshot + replay.
+
+        Shards whose snapshot fails to load degrade (served as holes)
+        instead of failing the open; the log replays with journaling and
+        auto-rebalance suppressed, dropping only records that touch
+        failed shards. The returned instance carries a
+        :class:`RecoveryReport` as ``last_recovery``.
+        """
+        root = resolve_snapshot_dir(root)
+        step, snap = _newest_snapshot(root)
+        manifest = _read_service_manifest(snap)
+        plan = plan_from_dict(manifest["plan"])
+        report = RecoveryReport(snapshot_dir=snap, snapshot_step=step)
+        if cache is _DEFAULT_CACHE:
+            cache = QueryResultCache() \
+                if _env_flag("ITR_RESULT_CACHE", True) else None
+
+        engines: list = []
+        failed: list[int] = []
+        for k in range(plan.n_shards):
+            shard_view = cache.shard_view(k) if cache is not None else None
+            try:
+                engines.append(load_snapshot(
+                    os.path.join(snap, f"shard_{k}"),
+                    cache=shard_view, mmap=mmap, verify=verify))
+            except SnapshotError:
+                engines.append(None)  # placeholder built by mark_shard_failed
+                failed.append(k)
+        if config is None:
+            config = next(
+                (e.config for e in engines if e is not None), None)
+        svc = ShardedTripleService(
+            engines, plan, cache, max_batch, config=config,
+            rebalance_skew=rebalance_skew)
+        for k in failed:
+            svc.mark_shard_failed(k)
+        report.failed_shards = failed
+
+        mig_plan = manifest.get("migration_plan")
+        if mig_plan is not None:
+            new_plan = plan_from_dict(mig_plan)
+            svc._migration = RebalancePlan(
+                plan, new_plan, migration_moves(new_plan, svc.engines))
+            report.migration_resumed = True
+
+        wal = WriteAheadLog(os.path.join(root, WAL_FILE), fsync=fsync)
+        self = cls(svc, root, wal, recovery=report)
+        self._replay(report)
+        self._attach()
+        return self
+
+    def _attach(self) -> None:
+        self.service._journal = self._on_journal
+
+    # -- mutation (write-ahead) --------------------------------------------
+    def insert_triples(self, triples) -> int:
+        """Durably insert (s, p, o) rows: logged before applied."""
+        return self._mutate(triples, OP_INSERT)
+
+    def delete_triples(self, triples) -> int:
+        """Durably delete (s, p, o) rows: logged before applied."""
+        return self._mutate(triples, OP_DELETE)
+
+    def _mutate(self, triples, op: int) -> int:
+        svc = self.service
+        rows = as_triple_rows(triples)
+        if len(rows) == 0:
+            return 0
+        # validate BEFORE the append: a record that cannot apply must
+        # never reach the log, or replay would trip over it
+        if int(rows[:, 1].max()) >= svc.plan.n_preds:
+            raise ValueError(
+                f"predicate ids must be < {svc.plan.n_preds}; "
+                f"got {int(rows[:, 1].max())}")
+        if svc.failed_shards:
+            bad = sorted(svc.failed_shards)
+            routed = svc.plan.route_triples(rows)
+            if svc._migration is not None:
+                hits = np.isin(routed, bad) | np.isin(
+                    svc._migration.new_plan.route_triples(rows), bad)
+            else:
+                hits = np.isin(routed, bad)
+            if hits.any():
+                raise RuntimeError(
+                    f"cannot mutate failed shards {bad}; "
+                    "restore them with reingest_shard() first")
+        self.wal.append(_pack_rows(op, rows))
+        return svc.insert_triples(rows) if op == OP_INSERT \
+            else svc.delete_triples(rows)
+
+    # -- journaling hook (rebalance state changes) -------------------------
+    def _on_journal(self, kind: str, payload) -> None:
+        if kind == "migrate":
+            src, dst, batch = payload
+            self.wal.append(_pack_migrate(int(src), int(dst), batch))
+        elif kind == "rebalance_begin":
+            self.wal.append(_pack_plan(OP_REBALANCE_BEGIN, payload))
+        elif kind == "plan_swap":
+            self.wal.append(_pack_plan(OP_PLAN_SWAP, payload))
+        else:  # a silent drop would corrupt recovery
+            raise ValueError(f"unknown journal event {kind!r}")
+
+    # -- snapshot / compaction ---------------------------------------------
+    def snapshot(self, keep: int = 2) -> str:
+        """Persist the current state as a new versioned snapshot, then
+        compact: older snapshots are GC'd and the WAL truncated. Crash-safe
+        at every step — a kill before the commit rename leaves the previous
+        snapshot authoritative; one after it but before the WAL truncation
+        replays the (now redundant) log onto the new snapshot, which is
+        idempotent by construction."""
+        svc = self.service
+        if svc.failed_shards:
+            raise RuntimeError(
+                f"cannot snapshot with failed shards "
+                f"{sorted(svc.failed_shards)}: the hole would become "
+                "permanent; restore them with reingest_shard() first")
+        steps = _snapshot_steps(self.root)
+        step = (steps[-1] if steps else 0) + 1
+        final = os.path.join(self.root, f"snap_{step:06d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for k, engine in enumerate(svc.engines):
+            save_snapshot(engine, os.path.join(tmp, f"shard_{k}"),
+                          atomic=False)
+        manifest = {
+            "format": 1,
+            "plan": plan_to_dict(svc.plan),
+            "migration_plan": None if svc._migration is None
+            else plan_to_dict(svc._migration.new_plan),
+        }
+        # service manifest last: the directory's commit marker
+        with open(os.path.join(tmp, SERVICE_MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        crash_point("snapshot.pre_commit")
+        os.rename(tmp, final)
+        crash_point("snapshot.post_commit")
+        # gc only AFTER the new snapshot is committed: at no instant is
+        # there zero complete snapshots on disk
+        for old in steps[:len(steps) - keep + 1]:
+            shutil.rmtree(os.path.join(self.root, f"snap_{old:06d}"),
+                          ignore_errors=True)
+        self.wal.reset()
+        return final
+
+    # -- replay ------------------------------------------------------------
+    def _replay(self, report: RecoveryReport) -> None:
+        """Apply every intact WAL record to the freshly loaded service.
+
+        Journaling is detached (nothing re-logs) and the auto-rebalance
+        trigger is disabled for the duration, so replay applies exactly
+        the logged history — no new plans, no new migrations. Records
+        that touch failed shards are dropped (and counted): their state
+        is lost with the shard and comes back through re-ingest.
+        """
+        svc = self.service
+        records, wal_report = read_wal_records(self.wal.path)
+        # the WAL truncated any torn tail when it opened; report from its
+        # open-time scan, where the tear was still visible
+        scan = self.wal.recovery or wal_report
+        report.torn_tail = scan.torn_tail
+        report.torn_reason = scan.torn_reason
+        svc._journal = None
+        saved_skew = svc.rebalance_skew
+        svc.rebalance_skew = None  # no auto-rebalance mid-replay
+        try:
+            for payload in records:
+                self._apply_record(svc, payload, report)
+                report.replayed_records += 1
+        finally:
+            svc.rebalance_skew = saved_skew
+
+    def _apply_record(self, svc: ShardedTripleService, payload: bytes,
+                      report: RecoveryReport) -> None:
+        op = payload[0]
+        if op in (OP_INSERT, OP_DELETE):
+            rows = _unpack_rows(payload[1:])
+            rows = self._drop_failed(svc, rows, report)
+            if len(rows) == 0:
+                return
+            if op == OP_INSERT:
+                svc.insert_triples(rows)
+            else:
+                svc.delete_triples(rows)
+        elif op == OP_MIGRATE:
+            src, dst = _MIGRATE_HDR.unpack_from(payload, 1)
+            batch = _unpack_rows(payload[1 + _MIGRATE_HDR.size:])
+            if src in svc.failed_shards or dst in svc.failed_shards:
+                report.skipped_batches += 1
+                return
+            if svc._migration is not None:
+                svc._migration.discard(batch)
+            moved = svc._apply_migration_batch(src, dst, batch)
+            svc.stats.migrated_rows += moved
+        elif op == OP_REBALANCE_BEGIN:
+            new_plan = plan_from_dict(json.loads(payload[1:].decode()))
+            svc._migration = RebalancePlan(
+                svc.plan, new_plan, migration_moves(new_plan, svc.engines))
+            report.migration_resumed = not svc._migration.done
+        elif op == OP_PLAN_SWAP:
+            svc.plan = plan_from_dict(json.loads(payload[1:].decode()))
+            svc._migration = None
+            report.migration_resumed = False
+        else:
+            raise SnapshotError(f"unknown WAL op code {op}")
+
+    @staticmethod
+    def _drop_failed(svc: ShardedTripleService, rows: np.ndarray,
+                     report: RecoveryReport) -> np.ndarray:
+        if not svc.failed_shards or len(rows) == 0:
+            return rows
+        bad = sorted(svc.failed_shards)
+        keep = ~np.isin(svc.plan.route_triples(rows), bad)
+        if svc._migration is not None:
+            keep &= ~np.isin(
+                svc._migration.new_plan.route_triples(rows), bad)
+        report.skipped_rows += int((~keep).sum())
+        return rows[keep]
+
+    # -- lifecycle / delegation --------------------------------------------
+    def close(self) -> None:
+        self.service._journal = None
+        self.wal.close()
+
+    def __enter__(self) -> "DurableShardedService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __getattr__(self, name: str):
+        # query plane + maintenance surface of the wrapped service
+        # (submit/flush/query/rebalance/rebuild/stats/...); mutations are
+        # intercepted above so they hit the log first
+        return getattr(self.service, name)
+
+
+# -- snapshot directory scanning -------------------------------------------
+
+def _snapshot_steps(root: str) -> list[int]:
+    """Ascending steps of COMPLETE snapshot dirs (service manifest
+    present — an aborted ``.tmp`` or manifest-less dir never counts)."""
+    steps = []
+    for entry in os.listdir(root):
+        m = _SNAP_RE.match(entry)
+        if m and os.path.exists(os.path.join(root, entry, SERVICE_MANIFEST)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def _newest_snapshot(root: str) -> tuple[int, str]:
+    if not os.path.isdir(root):
+        raise SnapshotError(f"no snapshot root at {root}")
+    steps = _snapshot_steps(root)
+    if not steps:
+        raise SnapshotError(f"no complete snapshot under {root}")
+    return steps[-1], os.path.join(root, f"snap_{steps[-1]:06d}")
+
+
+def _read_service_manifest(snap: str) -> dict:
+    try:
+        with open(os.path.join(snap, SERVICE_MANIFEST)) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        raise SnapshotError(
+            f"unreadable service manifest in {snap}: {exc}") from exc

@@ -1,0 +1,287 @@
+"""Versioned, checksummed, mmap-able on-disk engine snapshots.
+
+A built :class:`~repro.core.query.TripleQueryEngine` is expensive: RePair
+compression, succinct encoding, grammar flattening, crossover calibration.
+All of it is deterministic *data*, so cold start should be a read, not a
+recomputation. A snapshot persists every array the engine's hot path
+touches — flattened CSR rule arrays, the label-sorted start graph, the
+k²-tree level bitvectors and Elias–Fano words of the succinct encoding,
+the delta overlay, dictionaries and calibration scalars — each as its own
+``.npy`` file, so :func:`load_snapshot` can hand the arrays back as
+read-only ``np.load(mmap_mode="r")`` views: the OS pages in only what
+queries actually touch, and N processes share one physical copy.
+
+Layout of a snapshot directory::
+
+    manifest.json      scalars + per-file crc32 checksums  (written LAST)
+    <name>.npy         one file per array
+
+The manifest doubles as the commit marker — a directory without a
+parseable manifest is an aborted write, never a corrupt load. Writes are
+crash-safe the same way `repro.train.checkpoint` is: everything lands in
+``<path>.tmp`` and one ``os.rename`` publishes it; a kill mid-write
+leaves a ``.tmp`` orphan and the previous snapshot intact. Checksums are
+verified on load by default, so bit rot surfaces as a loud
+:class:`SnapshotError` instead of silently wrong query answers.
+
+Reconstruction is loop-free where it matters: the grammar's rule dict is
+rebuilt by slicing the flattened CSR (no re-parse of δ-streams), and the
+succinct structures are adopted word-for-word through their
+``from_parts`` / ``from_levels`` constructors — no re-encoding, no
+re-ranking beyond one cumsum per bitvector.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from dataclasses import asdict
+
+import numpy as np
+
+from repro.core.encode import EncodedGrammar
+from repro.core.flatten import FlatGrammar
+from repro.core.grammar import Grammar, Rule
+from repro.core.hypergraph import Hypergraph, LabelTable
+from repro.core.query import _DEFAULT_CACHE, TripleQueryEngine
+from repro.core.repair import RepairConfig
+from repro.core.succinct import EliasFano, K2Tree
+from repro.persist.crash import crash_point
+
+FORMAT_VERSION = 1
+
+MANIFEST = "manifest.json"
+
+
+class SnapshotError(RuntimeError):
+    """A snapshot directory is unreadable: missing/unparseable manifest,
+    missing arrays, checksum mismatch, or a format this code can't read."""
+
+
+# -- saving ----------------------------------------------------------------
+
+def save_snapshot(engine: TripleQueryEngine, path, *, atomic: bool = True) -> str:
+    """Persist `engine` to the directory `path`; returns `path`.
+
+    With ``atomic=True`` (default) the write goes through ``<path>.tmp``
+    + ``os.rename``, replacing any existing snapshot only at the final
+    instant; callers embedding engine snapshots inside their own staged
+    directory (the sharded service) pass ``atomic=False`` to write in
+    place. The delta overlay is persisted as-is — a snapshot is the full
+    logical state, not just the compressed base.
+    """
+    path = os.fspath(path)
+    if not atomic:
+        _write_engine_dir(engine, path)
+        return path
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    _write_engine_dir(engine, tmp)
+    crash_point("snapshot.pre_commit")
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    crash_point("snapshot.post_commit")
+    return path
+
+
+def _write_engine_dir(engine: TripleQueryEngine, d: str) -> None:
+    """Write one engine's arrays + manifest into (fresh) directory `d`."""
+    os.makedirs(d, exist_ok=True)
+    enc = engine.encoded
+    ef = enc.label_ef
+    k2 = enc.incidence
+    start = engine._start_sorted  # the order `enc.incidence` indexes
+    arrays: dict[str, np.ndarray] = {
+        "table_ranks": engine.grammar.table.ranks,
+        "start_labels": start.labels,
+        "start_nodes": start.nodes_flat,
+        "start_offsets": start.offsets,
+        "delta_inserts": engine.delta.inserts,
+        "delta_tombstones": engine.delta.tombstones,
+        "enc_terminal_ranks": enc.terminal_ranks,
+        "enc_fn_lengths": np.asarray(enc.fn_lengths, dtype=np.int64),
+        "ef_lows": ef._lows,
+        "ef_low_words": ef._low_words,
+        "ef_upper_words": ef._upper.words,
+        "fn_words": enc.fn_stream[0],
+        "edge_fn_words": enc.edge_fn_stream[0],
+        "rule_words": enc.rule_stream[0],
+    }
+    for name, arr in engine.flat.to_arrays().items():
+        arrays[f"flat_{name}"] = arr
+    for i, level in enumerate(k2.levels):
+        arrays[f"k2_level_{i}"] = level.words
+
+    checksums: dict[str, int] = {}
+    for name, arr in arrays.items():
+        fname = f"{name}.npy"
+        fpath = os.path.join(d, fname)
+        np.save(fpath, np.ascontiguousarray(arr))
+        with open(fpath, "rb") as f:
+            checksums[fname] = zlib.crc32(f.read())
+        # mid-write kill: some arrays on disk, no manifest -> aborted dir
+        crash_point("snapshot.write_arrays")
+
+    config = engine.config
+    manifest = {
+        "format": FORMAT_VERSION,
+        "checksums": checksums,
+        "n_terminals": int(engine.T),
+        "start_n_nodes": int(start.n_nodes),
+        "names": engine.grammar.table.names,
+        "crossover": int(engine.crossover),
+        "delta_budget": None if engine.delta_budget is None
+        else int(engine.delta_budget),
+        "base_edges": None if engine._base_edges is None
+        else int(engine._base_edges),
+        "rebuild_count": int(engine.rebuild_count),
+        "config": None if config is None else asdict(config),
+        "encoded": {
+            "n_nodes": int(enc.n_nodes),
+            "n_edges": int(enc.n_edges),
+            "n_fns": int(enc.n_fns),
+            "n_rules": int(enc.n_rules),
+            "rule_symbol_count": int(enc.rule_symbol_count),
+            "fn_bits": int(enc.fn_stream[1]),
+            "edge_fn_bits": int(enc.edge_fn_stream[1]),
+            "rule_bits": int(enc.rule_stream[1]),
+        },
+        "ef": {
+            "n": int(ef.n), "universe": int(ef.universe), "l": int(ef.l),
+            "low_bits": int(ef._low_bits), "upper_n": int(ef._upper.n),
+        },
+        "k2": {
+            "n_rows": int(k2.n_rows), "n_cols": int(k2.n_cols),
+            "k": int(k2.k), "h": int(k2.h), "n_points": int(k2.n_points),
+            "level_bits": [int(lv.n) for lv in k2.levels],
+        },
+    }
+    # manifest last: its presence is the directory's commit marker
+    with open(os.path.join(d, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+
+
+# -- loading ---------------------------------------------------------------
+
+def read_manifest(path) -> dict:
+    """Parse + version-check a snapshot manifest (SnapshotError on any
+    problem — an unreadable manifest means an uncommitted/corrupt dir)."""
+    mpath = os.path.join(os.fspath(path), MANIFEST)
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        raise SnapshotError(f"unreadable snapshot manifest {mpath}: {exc}") \
+            from exc
+    fmt = manifest.get("format")
+    if fmt != FORMAT_VERSION:
+        raise SnapshotError(
+            f"{mpath}: snapshot format {fmt!r} (this build reads "
+            f"{FORMAT_VERSION})")
+    return manifest
+
+
+def _load_arrays(d: str, manifest: dict, mmap: bool, verify: bool) -> dict:
+    out: dict[str, np.ndarray] = {}
+    for fname, crc in manifest["checksums"].items():
+        fpath = os.path.join(d, fname)
+        if not os.path.exists(fpath):
+            raise SnapshotError(f"snapshot array missing: {fpath}")
+        if verify:
+            with open(fpath, "rb") as f:
+                actual = zlib.crc32(f.read())
+            if actual != crc:
+                raise SnapshotError(
+                    f"checksum mismatch in {fpath}: "
+                    f"stored {crc:#010x}, actual {actual:#010x}")
+        out[fname[:-len(".npy")]] = np.load(
+            fpath, mmap_mode="r" if mmap else None)
+    return out
+
+
+def load_snapshot(path, *, cache=_DEFAULT_CACHE, mmap: bool = True,
+                  verify: bool = True) -> TripleQueryEngine:
+    """Rebuild an engine from a snapshot directory — the cold-start path.
+
+    ``mmap=True`` backs every array with a read-only memory map (safe:
+    the engine never mutates its structural arrays in place; a rebuild
+    swaps in fresh ones). ``verify=True`` checks each file's crc32 before
+    trusting it. `cache` follows ``TripleQueryEngine`` semantics (default:
+    a fresh cache unless ``ITR_RESULT_CACHE=0``).
+    """
+    d = os.fspath(path)
+    manifest = read_manifest(d)
+    arrays = _load_arrays(d, manifest, mmap, verify)
+    try:
+        engine = _reconstruct(manifest, arrays, cache)
+    except (KeyError, ValueError, IndexError) as exc:
+        raise SnapshotError(f"inconsistent snapshot {d}: {exc}") from exc
+    return engine
+
+
+def _reconstruct(manifest: dict, arrays: dict, cache) -> TripleQueryEngine:
+    T = int(manifest["n_terminals"])
+    names = manifest["names"]
+    table = LabelTable(np.asarray(arrays["table_ranks"], dtype=np.int64), T,
+                       list(names) if names is not None else None)
+    start = Hypergraph(int(manifest["start_n_nodes"]),
+                       arrays["start_labels"], arrays["start_nodes"],
+                       arrays["start_offsets"])
+    flat = FlatGrammar.from_arrays(
+        T, {name: arrays[f"flat_{name}"] for name in FlatGrammar._ARRAY_FIELDS})
+    rules = _rules_from_flat(flat, table)
+    grammar = Grammar(table, start, rules)
+
+    e = manifest["encoded"]
+    efm = manifest["ef"]
+    label_ef = EliasFano.from_parts(
+        efm["n"], efm["universe"], efm["l"], arrays["ef_lows"],
+        arrays["ef_upper_words"], efm["upper_n"],
+        arrays["ef_low_words"], efm["low_bits"])
+    k2m = manifest["k2"]
+    incidence = K2Tree.from_levels(
+        k2m["n_rows"], k2m["n_cols"], k2m["k"], k2m["h"], k2m["n_points"],
+        [arrays[f"k2_level_{i}"] for i in range(len(k2m["level_bits"]))],
+        k2m["level_bits"])
+    encoded = EncodedGrammar(
+        n_nodes=e["n_nodes"], n_edges=e["n_edges"], n_terminals=T,
+        terminal_ranks=np.asarray(arrays["enc_terminal_ranks"]),
+        label_ef=label_ef, incidence=incidence,
+        fn_stream=(arrays["fn_words"], e["fn_bits"]),
+        fn_lengths=np.asarray(arrays["enc_fn_lengths"]),
+        n_fns=e["n_fns"],
+        edge_fn_stream=(arrays["edge_fn_words"], e["edge_fn_bits"]),
+        rule_stream=(arrays["rule_words"], e["rule_bits"]),
+        rule_symbol_count=e["rule_symbol_count"], n_rules=e["n_rules"],
+        names=list(names) if names is not None else None)
+
+    cfg = manifest["config"]
+    engine = TripleQueryEngine.from_state(
+        grammar, encoded, flat,
+        crossover=manifest["crossover"], cache=cache,
+        delta_budget=manifest["delta_budget"],
+        config=None if cfg is None else RepairConfig(**cfg),
+        base_edges=manifest["base_edges"],
+        rebuild_count=manifest["rebuild_count"])
+    engine.delta.load_rows(arrays["delta_inserts"], arrays["delta_tombstones"])
+    return engine
+
+
+def _rules_from_flat(flat: FlatGrammar, table: LabelTable) -> dict[int, Rule]:
+    """Rule dict from CSR slices — per-rule views, no stream decoding."""
+    rules: dict[int, Rule] = {}
+    eo, po = flat.edge_offsets, flat.param_offsets
+    for r in range(flat.n_rules):
+        lbl = int(flat.rule_labels[r])
+        rank = int(table.ranks[lbl])
+        e0, e1 = int(eo[r]), int(eo[r + 1])
+        rhs = Hypergraph(
+            rank,
+            np.asarray(flat.edge_labels[e0:e1], dtype=np.int64),
+            np.asarray(flat.params[po[e0]:po[e1]], dtype=np.int64),
+            np.asarray(po[e0:e1 + 1] - po[e0], dtype=np.int64))
+        rules[lbl] = Rule(lbl, rank, rhs)
+    return rules

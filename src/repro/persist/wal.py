@@ -1,0 +1,194 @@
+"""Mutation write-ahead log: framed, checksummed, truncation-tolerant.
+
+The delta overlay (`repro.core.delta`) makes the sharded tier *mutable*;
+this log makes the mutations *durable*. Every state change the snapshot
+does not yet cover — triple inserts/deletes, rebalance plan decisions,
+migration batches — is appended here BEFORE it applies in memory
+(write-ahead ordering), so a crash at any instant loses at most work that
+was never acknowledged:
+
+* crash before the append    -> the operation never happened;
+* crash during the append    -> a torn tail record, dropped by the reader;
+* crash any time after       -> replay over the snapshot reproduces it.
+
+Record framing is byte-exact and self-delimiting::
+
+    header:  MAGIC (8 bytes, includes the format version)
+    record:  u32 payload length | u32 crc32(payload) | payload
+
+The reader walks frames until the file ends mid-frame or a CRC mismatch —
+both are treated as the torn tail of the final, unacknowledged append (the
+only place a crashed-but-fsynced log can be damaged) and reported, not
+raised. Payloads are opaque here; `repro.persist.service` packs them
+(numpy row blocks, JSON plan blobs) and owns the op-code registry below.
+
+Durability knob: ``ITR_WAL_FSYNC`` (default on) controls fsync-per-append.
+Off trades the crash-durability of the last few records for append
+throughput — replay correctness is unaffected, only the loss window.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from dataclasses import dataclass, field
+
+from repro.persist.crash import crash_point
+
+MAGIC = b"ITRWAL01"
+
+_FRAME = struct.Struct("<II")  # payload length, crc32(payload)
+
+# op codes for service-level payloads (first byte of every payload)
+OP_INSERT = 1          # triple rows inserted
+OP_DELETE = 2          # triple rows deleted
+OP_MIGRATE = 3         # one rebalance migration batch (src, dst, rows)
+OP_REBALANCE_BEGIN = 4  # successor plan decided; migration starts
+OP_PLAN_SWAP = 5       # successor plan adopted as THE routing plan
+
+
+def resolve_wal_fsync(value=None) -> bool:
+    """fsync-per-append policy: ``value`` if given, else ``ITR_WAL_FSYNC``
+    (``0``/``false``/``off``/``no`` disable; anything else — including
+    unset — keeps the default-on durable behavior)."""
+    if value is not None:
+        return bool(value)
+    env = os.environ.get("ITR_WAL_FSYNC", "").strip().lower()
+    return env not in ("0", "false", "off", "no")
+
+
+@dataclass
+class WalReadReport:
+    """What the tolerant reader saw: clean records, plus whether (and
+    where) it stopped at a damaged tail."""
+
+    n_records: int = 0
+    valid_bytes: int = 0    # offset of the first byte NOT covered by a record
+    torn_tail: bool = False  # file continued past valid_bytes with garbage
+    torn_reason: str = ""
+    errors: list = field(default_factory=list)
+
+
+class WriteAheadLog:
+    """Append-only mutation log over one file.
+
+    `append` is the whole write surface: frame the payload, write, flush,
+    fsync (unless disabled). Crash points ``wal.append`` (before any
+    bytes), ``wal.torn`` (half the frame written and flushed — the
+    torn-write simulation), and ``wal.post_append`` (bytes durable,
+    acknowledgement not yet returned) let the crash oracle kill the
+    process at every interesting instant.
+    """
+
+    def __init__(self, path, fsync: bool | None = None):
+        self.path = os.fspath(path)
+        self.fsync = resolve_wal_fsync(fsync)
+        fresh = not os.path.exists(self.path) \
+            or os.path.getsize(self.path) < len(MAGIC)
+        #: tolerant scan of the pre-existing log (None when created fresh)
+        self.recovery: WalReadReport | None = None
+        # unbuffered: every write() reaches the OS immediately, so an
+        # abandoned handle (simulated kill) can never flush half-written
+        # frames AFTER recovery has already read the file
+        self._f = open(self.path, "ab" if not fresh else "wb", buffering=0)
+        if fresh:
+            self._f.write(MAGIC)
+            self._flush()
+        else:
+            _, self.recovery = read_wal_records(self.path)
+            if self.recovery.torn_tail:
+                # drop the torn tail NOW: appending after garbage would
+                # make every later record unreadable to the next recovery
+                self._f.truncate(self.recovery.valid_bytes)
+                self._flush()
+
+    # -- writing -----------------------------------------------------------
+    def append(self, payload: bytes) -> None:
+        """Durably append one record; returns only once the record is as
+        durable as the fsync policy promises."""
+        crash_point("wal.append")
+        frame = _FRAME.pack(len(payload), zlib.crc32(payload)) + payload
+        half = len(frame) // 2
+        self._f.write(frame[:half])
+        self._f.flush()
+        # a kill here leaves half a frame on disk: the torn tail the
+        # reader must drop without failing recovery
+        crash_point("wal.torn")
+        self._f.write(frame[half:])
+        self._flush()
+        crash_point("wal.post_append")
+
+    def _flush(self) -> None:
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def reset(self) -> None:
+        """Truncate to an empty log (after a snapshot makes the records
+        redundant — log compaction)."""
+        self._f.truncate(len(MAGIC))
+        self._f.seek(len(MAGIC))
+        self._flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "WriteAheadLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_wal_records(path) -> tuple[list[bytes], WalReadReport]:
+    """Read every intact record; tolerate a torn tail.
+
+    Damage anywhere that can only be the final, unacknowledged append —
+    a frame running past EOF, or a CRC mismatch on the last bytes — stops
+    the scan and is *reported* (``report.torn_tail``), never raised:
+    dropping an operation nobody was told succeeded is correct recovery.
+    A missing file reads as an empty log; a bad magic header raises
+    ``ValueError`` (that is corruption of acknowledged state, not a tail).
+    """
+    report = WalReadReport()
+    records: list[bytes] = []
+    if not os.path.exists(path):
+        return records, report
+    with open(path, "rb") as f:
+        data = f.read()
+    if len(data) < len(MAGIC):
+        # even the header didn't finish: an empty log mid-creation
+        report.torn_tail = len(data) > 0
+        report.torn_reason = "short header" if data else ""
+        return records, report
+    if data[:len(MAGIC)] != MAGIC:
+        raise ValueError(
+            f"{path}: bad WAL magic {data[:len(MAGIC)]!r} (expected {MAGIC!r})")
+    pos = len(MAGIC)
+    report.valid_bytes = pos
+    while pos < len(data):
+        if pos + _FRAME.size > len(data):
+            report.torn_tail = True
+            report.torn_reason = f"short frame header at byte {pos}"
+            break
+        length, crc = _FRAME.unpack_from(data, pos)
+        start = pos + _FRAME.size
+        if start + length > len(data):
+            report.torn_tail = True
+            report.torn_reason = f"short payload at byte {pos}"
+            break
+        payload = data[start:start + length]
+        if zlib.crc32(payload) != crc:
+            report.torn_tail = True
+            report.torn_reason = f"crc mismatch at byte {pos}"
+            break
+        records.append(payload)
+        pos = start + length
+        report.n_records += 1
+        report.valid_bytes = pos
+    else:
+        report.valid_bytes = pos
+    if report.torn_tail:
+        report.errors.append(report.torn_reason)
+    return records, report

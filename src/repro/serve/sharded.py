@@ -85,6 +85,7 @@ from repro.distributed.rebalance import (
     plan_rebalance,
     resolve_rebalance_skew,
 )
+from repro.persist.crash import crash_point
 from repro.serve.triple_service import MicroBatchService
 
 # sentinel: "create a default shared QueryResultCache unless disabled by env"
@@ -131,6 +132,7 @@ class ShardedServiceStats:
     rebuilds: int = 0     # per-shard grammar recompressions (auto + explicit)
     rebalances: int = 0   # migrations started (auto-trigger + explicit)
     migrated_rows: int = 0  # rows moved between shards by rebalancing
+    degraded_patterns: int = 0  # patterns answered with a failed shard's hole
     total_s: float = 0.0
     last_flush_qps: float = 0.0
 
@@ -168,6 +170,11 @@ class ShardedTripleService(MicroBatchService):
                 else resolve_rebalance_skew(rebalance_skew)
         self._migration = None        # in-flight RebalancePlan, or None
         self._futile_total: int | None = None  # auto-trigger backoff anchor
+        #: shards whose recovery failed — served as empty holes, writes refused
+        self.failed_shards: set[int] = set()
+        # durability hook (repro.persist.service installs it): called as
+        # _journal(kind, payload) BEFORE a rebalance state change applies
+        self._journal = None
 
     # -- construction ----------------------------------------------------
     @classmethod
@@ -265,10 +272,18 @@ class ShardedTripleService(MicroBatchService):
         scatter = np.asarray(scatter, dtype=np.int64)
         self.stats.owned += int((routes >= 0).sum())
         self.stats.scattered += int((routes < 0).sum())
+        if self.failed_shards:
+            # every pattern owned by (or scattered across) a failed shard is
+            # answered with that shard's rows missing — count the holes
+            failed = sorted(self.failed_shards)
+            self.stats.degraded_patterns += \
+                int(np.isin(routes, failed).sum()) + len(scatter)
 
         # merge-missing scattered patterns accumulate one chunk per shard
         parts: dict[int, list] = {int(u): [] for u in scatter}
         for k, engine in enumerate(self.engines):
+            if k in self.failed_shards:
+                continue  # hole: owned patterns fall through to empty entries
             own = np.flatnonzero(routes == k)
             idx = own if len(scatter) == 0 else np.concatenate([own, scatter])
             if len(idx) == 0:
@@ -366,6 +381,11 @@ class ShardedTripleService(MicroBatchService):
                     shards: np.ndarray) -> int:
         """Apply mutation rows to the given per-row shards; bump only the
         shards that actually changed."""
+        if self.failed_shards and \
+                np.isin(shards, sorted(self.failed_shards)).any():
+            raise RuntimeError(
+                f"cannot mutate failed shards {sorted(self.failed_shards)}; "
+                "restore them with reingest_shard() first")
         applied = 0
         for k in np.unique(shards):
             k = int(k)
@@ -419,6 +439,16 @@ class ShardedTripleService(MicroBatchService):
             applied += self._apply_rows(mrows, False, ma)
             applied += self._apply_rows(mrows, False, mb)
         return applied
+
+    def contains_triples(self, triples) -> np.ndarray:
+        """bool[n]: is each (s, p, o) row currently visible in the tier?
+        Routed like fully-bound queries, so it is exact mid-migration and
+        while degraded (rows on a failed shard read as absent)."""
+        rows = np.asarray(triples, dtype=np.int64).reshape(-1, 3)
+        out = np.zeros(len(rows), dtype=bool)
+        for i, (s, p, o) in enumerate(rows):
+            out[i] = len(self.query(int(s), int(p), int(o))) > 0
+        return out
 
     def rebuild(self, shard: int | None = None, force: bool = False) -> list[int]:
         """Incrementally recompress dirty shards; returns rebuilt shard ids.
@@ -475,6 +505,11 @@ class ShardedTripleService(MicroBatchService):
         by THIS call), ``pending`` (rows still to move), ``active``
         (migration still in flight).
         """
+        if self.failed_shards:
+            raise RuntimeError(
+                f"cannot rebalance with failed shards "
+                f"{sorted(self.failed_shards)}; restore them with "
+                "reingest_shard() first")
         skew = self.skew()
         if self._migration is None:
             threshold = self.rebalance_skew
@@ -485,10 +520,12 @@ class ShardedTripleService(MicroBatchService):
             if mig.total_rows == 0:
                 # same assignment for every live row: adopt the re-cut
                 # (future routing may still improve) and back off
+                self._journal_event("plan_swap", mig.new_plan)
                 self.plan = mig.new_plan
                 self._futile_total = int(live_shard_edges(self.engines).sum())
                 return {"skew": skew, "moved": 0, "pending": 0,
                         "active": False}
+            self._journal_event("rebalance_begin", mig.new_plan)
             self._migration = mig
             self.stats.rebalances += 1
             self._futile_total = None
@@ -511,20 +548,48 @@ class ShardedTripleService(MicroBatchService):
         mig = self._migration
         moved = 0
         for src, dst, batch in mig.take(max_moves):
-            e_src, e_dst = self.engines[src], self.engines[dst]
-            before = e_src.rebuild_count + e_dst.rebuild_count
-            e_dst.insert_triples(batch)
-            e_src.delete_triples(batch)
-            self.stats.rebuilds += \
-                e_src.rebuild_count + e_dst.rebuild_count - before
-            moved += len(batch)
-            self.invalidate(src)
-            self.invalidate(dst)
+            self._journal_event("migrate", (src, dst, batch))
+            moved += self._apply_migration_batch(src, dst, batch)
         self.stats.migrated_rows += moved
         if mig.done:
+            self._journal_event("plan_swap", mig.new_plan)
             self.plan = mig.new_plan
             self._migration = None
         return moved
+
+    def _apply_migration_batch(self, src: int, dst: int,
+                               batch: np.ndarray) -> int:
+        """Move one logged batch from `src` to `dst` — idempotently.
+
+        Only the rows still *visible at the source* are inserted at the
+        destination. Live migration never notices (the `RebalancePlan`
+        contract puts every pending row on its src shard), but WAL replay
+        does: re-applying an already-applied batch after a crash must not
+        duplicate rows onto dst, and a batch replayed after the row was
+        deleted (discard happened post-append) must not resurrect it.
+        The src-side delete is set-semantic, so it is idempotent as-is.
+        """
+        e_src, e_dst = self.engines[src], self.engines[dst]
+        at_src = e_src.contains_triples(batch)
+        batch = batch[at_src]
+        if len(batch) == 0:
+            return 0
+        before = e_src.rebuild_count + e_dst.rebuild_count
+        crash_point("migrate.pre_apply")
+        e_dst.insert_triples(batch)
+        crash_point("migrate.mid_apply")
+        e_src.delete_triples(batch)
+        self.stats.rebuilds += \
+            e_src.rebuild_count + e_dst.rebuild_count - before
+        self.invalidate(src)
+        self.invalidate(dst)
+        return len(batch)
+
+    def _journal_event(self, kind: str, payload) -> None:
+        """Hand a rebalance state change to the installed durability hook
+        BEFORE it applies (write-ahead ordering); no-op when undurable."""
+        if self._journal is not None:
+            self._journal(kind, payload)
 
     def _maybe_auto_rebalance(self) -> None:
         """Mutation-path trigger: start a rebalance once live skew reaches
@@ -536,7 +601,8 @@ class ShardedTripleService(MicroBatchService):
         until the tier's live size drifts >25% from that futile snapshot —
         an unfixable structural skew must not cost an O(graph) plan
         computation per mutation."""
-        if self.rebalance_skew is None or self.n_shards < 2:
+        if self.rebalance_skew is None or self.n_shards < 2 \
+                or self.failed_shards:
             return
         if self._migration is not None:  # drain the in-flight migration
             self._apply_migration(_AUTO_MOVES_PER_CALL)
@@ -565,6 +631,54 @@ class ShardedTripleService(MicroBatchService):
         """Live ``max/mean`` shard-load ratio (1.0 = balanced; compare
         against `rebalance_skew`)."""
         return measure_skew(live_shard_edges(self.engines))
+
+    # -- degraded serving --------------------------------------------------
+    def mark_shard_failed(self, shard: int) -> None:
+        """Degrade one shard: serve around it instead of dying with it.
+
+        The recovery path calls this when a shard's snapshot won't load
+        (corruption, missing files). The shard's engine is replaced by an
+        empty placeholder, queries keep flowing — owned patterns answer
+        empty, scattered patterns merge the surviving shards — with every
+        affected pattern counted in ``stats.degraded_patterns``. Writes to
+        the failed shard and rebalancing are refused until
+        :meth:`reingest_shard` restores it.
+        """
+        k = int(shard)
+        if not 0 <= k < self.n_shards:
+            raise ValueError(f"shard {k} out of range [0, {self.n_shards})")
+        self.failed_shards.add(k)
+        self.engines[k] = self._build_shard_engine(
+            k, np.zeros((0, 3), dtype=np.int64))
+        self.invalidate(k)
+
+    def reingest_shard(self, shard: int, triples) -> int:
+        """Restore a failed shard from re-ingested rows (e.g. re-extracted
+        from the upstream source); returns how many rows it now holds.
+        Compresses the rows into a fresh engine, clears the failure flag,
+        and invalidates the shard's (and merged) cache namespaces."""
+        k = int(shard)
+        if k not in self.failed_shards:
+            raise ValueError(f"shard {k} is not marked failed")
+        rows = as_triple_rows(triples)
+        mine = rows[self.plan.route_triples(rows) == k] if len(rows) else rows
+        self.engines[k] = self._build_shard_engine(k, mine)
+        self.failed_shards.discard(k)
+        self.invalidate(k)
+        return len(mine)
+
+    def _build_shard_engine(self, k: int, rows: np.ndarray) -> TripleQueryEngine:
+        """Compress `rows` into a fresh engine wired to shard `k`'s cache
+        view (the build-time recipe, reused by degrade/reingest)."""
+        table = LabelTable.terminals([2] * self.plan.n_preds)
+        graph = Hypergraph.from_triples(rows, self.plan.n_nodes)
+        grammar, _ = compress(graph, table, self.config)
+        engine = TripleQueryEngine(
+            grammar,
+            cache=self.cache.shard_view(k) if self.cache is not None else None,
+            config=self.config)
+        engine._base_edges = len(rows)
+        return engine
 
     # -- maintenance / introspection -------------------------------------
     def invalidate(self, shard: int | None = None) -> None:

@@ -12,9 +12,11 @@ from benchmarks.run import (
 
 
 def _mini_bench(speedup=10.0, dispatch=1.0, warm=5.0, view=4.0, sg=2.0,
-                skew=0.5, full_mig=3.0):
+                skew=0.5, full_mig=3.0, cold=6.0):
     return {
         "patterns": {"s??": {"speedup_vs_scalar": speedup}},
+        "recovery": {"cold_start_speedup": cold,
+                     "wal_replay_records_per_s": 1000.0},
         "warm_cache": {
             "patterns": {"?p?": {"warm_speedup_vs_uncached": warm}},
             "point_lookup": {"warm_speedup": 20.0},
@@ -51,6 +53,9 @@ def test_gate_metrics_flattening():
     assert m["sharded.scatter_gather.?p?.sharded_vs_single"] == 2.0
     assert m["rebalance.skew_after_vs_before"] == 0.5
     assert m["rebalance.full_vs_migration"] == 3.0
+    # cold-start speedup is gated; the absolute replay rate is not
+    assert m["recovery.cold_start_speedup"] == 6.0
+    assert "recovery.wal_replay_records_per_s" not in m
     assert gate_metrics({}) == {}  # sections all optional
 
 
@@ -121,6 +126,48 @@ def test_gate_errors_without_baseline_section(tmp_path):
     sp.write_text(json.dumps(_mini_bench()))
     bp.write_text(json.dumps({"patterns": {}}))  # no smoke_baseline
     assert check_regressions(str(sp), str(bp), tolerance=3.0) == 1
+
+
+def test_gate_errors_are_actionable_not_tracebacks(tmp_path, capsys):
+    """Every malformed input fails with one `gate ERROR` line telling the
+    operator what to run — never a KeyError/JSONDecodeError traceback."""
+    good_smoke = tmp_path / "smoke.json"
+    good_smoke.write_text(json.dumps(_mini_bench()))
+    good_base = tmp_path / "baseline.json"
+    good_base.write_text(json.dumps(
+        {"smoke_baseline": {"metrics": gate_metrics(_mini_bench())}}))
+
+    def expect_error(sp, bp, needle):
+        assert check_regressions(str(sp), str(bp), tolerance=3.0) == 1
+        err = capsys.readouterr().err
+        assert "gate ERROR" in err and needle in err, err
+
+    # missing / corrupt files on either side
+    expect_error(tmp_path / "absent.json", good_base, "not found")
+    expect_error(good_smoke, tmp_path / "absent.json", "not found")
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    expect_error(bad, good_base, "not valid JSON")
+    expect_error(good_smoke, bad, "not valid JSON")
+    listdoc = tmp_path / "list.json"
+    listdoc.write_text("[1, 2]")
+    expect_error(listdoc, good_base, "JSON object")
+
+    # baseline section damage: absent, metrics missing, metrics non-numeric
+    bp = tmp_path / "b2.json"
+    bp.write_text(json.dumps({"smoke_baseline": {"tolerance": 3.0}}))
+    expect_error(good_smoke, bp, "no ")
+    bp.write_text(json.dumps({"smoke_baseline": {"metrics": {
+        "patterns.s??.speedup_vs_scalar": "fast"}}}))
+    expect_error(good_smoke, bp, "must be numbers")
+
+    # a smoke bench section that lost its expected metric key
+    broken = _mini_bench()
+    del broken["patterns"]["s??"]["speedup_vs_scalar"]
+    broken["patterns"]["s??"]["latency_us"] = 3.0
+    sp = tmp_path / "s2.json"
+    sp.write_text(json.dumps(broken))
+    expect_error(sp, good_base, "missing its")
 
 
 def test_update_baseline_roundtrip(tmp_path):

@@ -1,0 +1,326 @@
+"""Crash-point-injected recovery oracle for the durable sharded tier.
+
+Two layers over `repro.persist`:
+
+* a deterministic sweep that kills the service at EVERY injection point
+  (WAL append/torn/post-append, snapshot write/pre-commit/post-commit,
+  migration pre/mid-batch, engine rebuild), recovers from disk, and
+  asserts the exact durability contract for that point — an operation
+  acknowledged before the kill is fully recovered, one never
+  acknowledged either fully recovered (its record was durable) or never
+  happened, with no third state;
+* a randomized state machine (the crash-point extension of
+  `tests/test_rebalance_oracle.py`): random interleavings of durable
+  mutations, queries, rebalances, snapshots, and rebuilds, with random
+  crash schedules armed per op. Whenever a kill fires, the live instance
+  is discarded, the service recovers via ``DurableShardedService.open``,
+  the plain-Python set oracle re-synchronizes by probing one marker row
+  (each mutation batch is one atomic WAL record, so one probe decides
+  the whole batch), and all 8 query patterns must match the oracle.
+
+The tier-1 run keeps a small example budget; the nightly crash lane
+(``pytest -m slow``, see .github/workflows/nightly.yml) re-runs the
+machine with a bigger budget via ``ITR_CRASH_EXAMPLES``.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.partition import STRATEGIES
+from repro.persist.crash import CrashPoint, inject_crashes
+from repro.persist.service import DurableShardedService
+
+PATTERN_NAMES = ["s??", "?p?", "??o", "sp?", "s?o", "?po", "spo", "???"]
+
+# every injection point threaded through the durability paths
+CRASH_POINTS = [
+    "wal.append", "wal.torn", "wal.post_append",
+    "snapshot.write_arrays", "snapshot.pre_commit", "snapshot.post_commit",
+    "migrate.pre_apply", "migrate.mid_apply",
+    "engine.rebuild",
+]
+
+# nightly crash-lane budget (tier-1 uses the small settings below)
+SLOW_EXAMPLES = int(os.environ.get("ITR_CRASH_EXAMPLES", "40"))
+
+N_NODES, N_PREDS = 16, 4
+
+
+def _bind(pattern, s, p, o):
+    return (s if pattern[0] == "s" else None,
+            p if pattern[1] == "p" else None,
+            o if pattern[2] == "o" else None)
+
+
+def _oracle_query(triples: set, s, p, o) -> list[tuple]:
+    return sorted(
+        (tp, (ts, to)) for ts, tp, to in triples
+        if (s is None or ts == s) and (p is None or tp == p)
+        and (o is None or to == o))
+
+
+def _check_all_patterns(svc, oracle: set, probe) -> None:
+    s, p, o = (int(v) for v in probe)
+    for pattern in PATTERN_NAMES:
+        qs, qp, qo = _bind(pattern, s, p, o)
+        got = sorted(svc.query(qs, qp, qo))
+        want = _oracle_query(oracle, qs, qp, qo)
+        assert got == want, (pattern, (s, p, o),
+                             svc.plan.strategy, svc.n_shards,
+                             svc.migration_active)
+
+
+def _rand_rows(rng, k) -> np.ndarray:
+    return np.stack([rng.integers(0, N_NODES, k),
+                     rng.integers(0, N_PREDS, k),
+                     rng.integers(0, N_NODES, k)], axis=1)
+
+
+def _probe(rng, oracle: set):
+    if oracle and rng.integers(0, 4) > 0:
+        rows = sorted(oracle)
+        return rows[int(rng.integers(0, len(rows)))]
+    return tuple(int(v) for v in _rand_rows(rng, 1)[0])
+
+
+def _contains(svc, row) -> bool:
+    s, p, o = (int(v) for v in row)
+    return len(svc.query(s, p, o)) > 0
+
+
+def _recover(svc, root):
+    """Simulate the kill: abandon the live instance, reopen from disk."""
+    svc.wal.close()
+    recovered = DurableShardedService.open(root, rebalance_skew=None)
+    assert recovered.last_recovery is not None
+    assert recovered.last_recovery.failed_shards == []
+    return recovered
+
+
+def _spread_base() -> np.ndarray:
+    return np.array([[s, s % N_PREDS, (s * 5) % N_NODES]
+                     for s in range(N_NODES)], dtype=np.int64)
+
+
+def _hot_rows() -> np.ndarray:
+    """Rows piled onto one subject: inserted AFTER build they skew the
+    tier, so a node_range re-cut must move something — guarantees the
+    migration crash points are reachable."""
+    return np.array([[0, p, o] for p in range(N_PREDS)
+                     for o in range(12)], dtype=np.int64)
+
+
+# -- deterministic sweep: every injection point, exact contract ------------
+
+@pytest.mark.parametrize("point", CRASH_POINTS)
+def test_every_injection_point_recovers(point, tmp_path):
+    root = str(tmp_path / "svc")
+    base = _spread_base()
+    oracle = {tuple(map(int, r)) for r in base}
+    svc = DurableShardedService.build(
+        base, N_NODES, N_PREDS, root=root, n_shards=2,
+        strategy="node_range", rebalance_skew=None)
+
+    fresh = np.array([[3, 1, 14], [7, 2, 11]], dtype=np.int64)
+    try:
+        if point.startswith("wal."):
+            with pytest.raises(CrashPoint):
+                with inject_crashes({point: 1}):
+                    svc.insert_triples(fresh)
+            svc = _recover(svc, root)
+            landed = _contains(svc, fresh[0])
+            if point == "wal.post_append":
+                # the record was durable before the kill: must replay
+                assert landed, point
+            else:
+                # no durable record: the operation never happened
+                assert not landed, point
+            if landed:
+                oracle |= {tuple(map(int, r)) for r in fresh}
+            if point == "wal.torn":
+                assert svc.last_recovery.torn_tail
+        elif point.startswith("snapshot."):
+            svc.insert_triples(fresh)
+            oracle |= {tuple(map(int, r)) for r in fresh}
+            with pytest.raises(CrashPoint):
+                with inject_crashes({point: 1}):
+                    svc.snapshot()
+            svc = _recover(svc, root)
+            if point == "snapshot.post_commit":
+                # committed: recovery must come off the NEW snapshot and
+                # replay the stale (untruncated) log idempotently
+                assert svc.last_recovery.snapshot_step == 2
+            else:
+                assert svc.last_recovery.snapshot_step == 1
+        elif point.startswith("migrate."):
+            hot = _hot_rows()
+            svc.insert_triples(hot)
+            oracle |= {tuple(map(int, r)) for r in hot}
+            with pytest.raises(CrashPoint):
+                with inject_crashes({point: 1}):
+                    svc.rebalance(force=True)
+            svc = _recover(svc, root)
+            assert svc.migration_active  # resumed, not lost
+            svc.rebalance()  # drain the remaining moves
+            assert not svc.migration_active
+        else:  # engine.rebuild — needs a non-empty overlay to run
+            svc.insert_triples(fresh)
+            oracle |= {tuple(map(int, r)) for r in fresh}
+            with pytest.raises(CrashPoint):
+                with inject_crashes({point: 1}):
+                    svc.rebuild(force=True)
+            svc = _recover(svc, root)
+
+        if svc.migration_active:
+            svc.rebalance()
+        _check_all_patterns(svc, oracle, (0, 1, 5))
+        _check_all_patterns(svc, oracle, (3, 1, 14))
+        assert sum(svc.live_edges()) == len(oracle)
+    finally:
+        svc.close()
+
+
+# -- randomized kill-anywhere state machine --------------------------------
+
+def _run_crash_machine(seed: int, strategy: str, n_shards: int, *,
+                       n_ops=8, n_edges=45) -> None:
+    rng = np.random.default_rng(seed)
+    base = np.unique(_rand_rows(rng, n_edges), axis=0)
+    oracle = {tuple(map(int, r)) for r in base}
+    with tempfile.TemporaryDirectory() as root:
+        delta_budget = None if rng.integers(0, 2) else int(rng.integers(4, 16))
+        svc = DurableShardedService.build(
+            base, N_NODES, N_PREDS, root=root, n_shards=n_shards,
+            strategy=strategy, delta_budget=delta_budget,
+            rebalance_skew=None)
+        try:
+            for _ in range(n_ops):
+                op = int(rng.integers(0, 100))
+                # arm a kill at a point the chosen op can actually reach
+                # (hit > occurrences is fine: the op just completes)
+                points = _points_for(op)
+                schedule = {}
+                if points and rng.integers(0, 4) > 0:
+                    name = points[int(rng.integers(0, len(points)))]
+                    schedule = {name: int(rng.integers(1, 3))}
+                try:
+                    with inject_crashes(schedule):
+                        oracle = _one_op(rng, svc, oracle, op)
+                except CrashPoint:
+                    svc = _recover(svc, root)
+                    oracle = _sync_oracle(svc, oracle, op)
+                    _check_all_patterns(svc, oracle, _probe(rng, oracle))
+                if rng.integers(0, 8) == 0:  # clean restart, no crash
+                    svc.close()
+                    svc = DurableShardedService.open(
+                        root, rebalance_skew=None)
+                    _check_all_patterns(svc, oracle, _probe(rng, oracle))
+
+            if svc.migration_active:
+                svc.rebalance()  # drain
+            assert not svc.migration_active
+            for _ in range(2):
+                _check_all_patterns(svc, oracle, _probe(rng, oracle))
+            assert sum(svc.live_edges()) == len(oracle)
+            for k, engine in enumerate(svc.engines):
+                rows = engine.current_triples()
+                assert {tuple(map(int, r)) for r in rows} <= oracle
+                if len(rows):
+                    assert (svc.plan.triple_shards(rows) == k).all()
+        finally:
+            svc.close()
+
+
+def _points_for(op: int) -> list[str]:
+    """Injection points reachable by the op code `_one_op` maps to."""
+    if op < 55:   # mutations: the WAL path + budget-driven auto-rebuild
+        return ["wal.append", "wal.torn", "wal.post_append",
+                "engine.rebuild"]
+    if op < 75:   # queries touch no durability path
+        return []
+    if op < 87:   # rebalance: journal appends + migration batches
+        return ["migrate.pre_apply", "migrate.mid_apply",
+                "wal.append", "wal.post_append"]
+    if op < 95:   # snapshot
+        return ["snapshot.write_arrays", "snapshot.pre_commit",
+                "snapshot.post_commit"]
+    return ["engine.rebuild"]
+
+
+_PENDING: dict = {}  # op payload, for post-crash oracle resync
+
+
+def _one_op(rng, svc, oracle: set, op: int) -> set:
+    _PENDING.clear()
+    if op < 30:  # durable insert
+        rows = _rand_rows(rng, int(rng.integers(1, 8)))
+        want = {tuple(map(int, r)) for r in rows}
+        _PENDING.update(kind="insert", want=want, new=want - oracle)
+        assert svc.insert_triples(rows) == len(want - oracle)
+        return oracle | want
+    if op < 55:  # durable delete
+        k = int(rng.integers(1, 8))
+        pool = [list(r) for r in sorted(oracle)]
+        picks = [pool[int(rng.integers(0, len(pool)))]
+                 for _ in range(k)] if pool else []
+        picks += _rand_rows(rng, max(1, k // 2)).tolist()
+        rows = np.asarray(picks, dtype=np.int64)
+        want = {tuple(map(int, r)) for r in rows}
+        _PENDING.update(kind="delete", want=want, gone=want & oracle)
+        assert svc.delete_triples(rows) == len(want & oracle)
+        return oracle - want
+    if op < 75:  # query parity (no state change)
+        _check_all_patterns(svc, oracle, _probe(rng, oracle))
+        return oracle
+    if op < 87:  # rebalance, sometimes partial
+        if rng.integers(0, 2):
+            svc.rebalance(force=True, max_moves=int(rng.integers(1, 12)))
+        else:
+            svc.rebalance(force=True)
+        return oracle
+    if op < 95:  # snapshot + compaction
+        svc.snapshot()
+        return oracle
+    svc.rebuild(force=bool(rng.integers(0, 2)))
+    return oracle
+
+
+def _sync_oracle(svc, oracle: set, op: int) -> set:
+    """Re-derive the oracle after a kill mid-mutation: the batch is one
+    atomic WAL record, so probing one marker row decides all of it."""
+    kind = _PENDING.get("kind")
+    if kind == "insert" and _PENDING["new"]:
+        marker = sorted(_PENDING["new"])[0]
+        if _contains(svc, marker):
+            return oracle | _PENDING["want"]
+    elif kind == "delete" and _PENDING["gone"]:
+        marker = sorted(_PENDING["gone"])[0]
+        if not _contains(svc, marker):
+            return oracle - _PENDING["want"]
+    return oracle
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 10**9))
+def test_crash_oracle_state_machine(seed):
+    """Kill-anywhere recovery parity for every strategy and shard count."""
+    rng = np.random.default_rng(seed)
+    for strategy in STRATEGIES:
+        for n_shards in (1, 2, 4):
+            _run_crash_machine(int(rng.integers(0, 2**31)),
+                               strategy, n_shards)
+
+
+@pytest.mark.slow
+@settings(max_examples=SLOW_EXAMPLES, deadline=None)
+@given(st.integers(0, 10**9))
+def test_crash_oracle_state_machine_slow(seed):
+    """Nightly crash lane: more ops and examples (ITR_CRASH_EXAMPLES)."""
+    rng = np.random.default_rng(seed)
+    for strategy in STRATEGIES:
+        for n_shards in (1, 2, 4):
+            _run_crash_machine(int(rng.integers(0, 2**31)),
+                               strategy, n_shards, n_ops=14, n_edges=80)

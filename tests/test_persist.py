@@ -1,0 +1,492 @@
+"""Deterministic durability tests: snapshot format, WAL framing, recovery.
+
+The randomized crash oracle lives in `tests/test_crash_oracle.py`; this
+file pins the deterministic contracts it builds on — byte-level WAL
+torn-tail tolerance, snapshot checksum verification, mmap cold start,
+migration-batch replay idempotency, and degraded serving around a shard
+whose snapshot is gone.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.hypergraph import Hypergraph, LabelTable
+from repro.core.query import TripleQueryEngine
+from repro.core.repair import RepairConfig, compress
+from repro.distributed.rebalance import migration_moves, plan_rebalance
+from repro.persist.crash import (
+    CrashInjector,
+    CrashPoint,
+    crash_point,
+    inject_crashes,
+    parse_crash_points,
+)
+from repro.persist.service import DurableShardedService, RecoveryReport
+from repro.persist.snapshot import (
+    MANIFEST,
+    SnapshotError,
+    load_snapshot,
+    save_snapshot,
+)
+from repro.persist.wal import (
+    MAGIC,
+    WriteAheadLog,
+    read_wal_records,
+    resolve_wal_fsync,
+)
+from repro.serve.sharded import ShardedTripleService
+
+ALL_PATTERNS = [(-1, -1, -1), (1, -1, -1), (-1, 1, -1), (-1, -1, 1),
+                (1, 1, -1), (1, -1, 1), (-1, 1, 1), (1, 1, 1)]
+
+
+def _rand_triples(seed, n, n_nodes=24, n_preds=4):
+    rng = np.random.default_rng(seed)
+    return np.unique(np.stack([rng.integers(0, n_nodes, n),
+                               rng.integers(0, n_preds, n),
+                               rng.integers(0, n_nodes, n)], axis=1), axis=0)
+
+
+def _build_engine(rows, n_nodes=24, n_preds=4, config=None):
+    graph = Hypergraph.from_triples(rows, n_nodes)
+    table = LabelTable.terminals(np.full(n_preds, 2, dtype=np.int64))
+    grammar, _ = compress(graph, table, config)
+    engine = TripleQueryEngine(grammar, config=config)
+    engine._base_edges = len(rows)
+    return engine
+
+
+def _answers(engine):
+    return {pat: sorted(engine.query(*pat)) for pat in ALL_PATTERNS}
+
+
+def _svc_answers(svc):
+    return {pat: sorted(svc.query(*(v if v >= 0 else None for v in pat)))
+            for pat in ALL_PATTERNS}
+
+
+# -- crash injection harness ----------------------------------------------
+
+class TestCrashInjection:
+    def test_schedule_fires_on_exact_hit(self):
+        inj = CrashInjector({"pt": 3})
+        inj.visit("pt")
+        inj.visit("pt")
+        with pytest.raises(CrashPoint) as exc:
+            inj.visit("pt")
+        assert exc.value.name == "pt"
+        assert inj.hits["pt"] == 3
+        inj.visit("pt")  # past the scheduled hit: disarmed again
+
+    def test_crash_point_is_not_an_exception(self):
+        # defensive `except Exception` must not swallow a simulated kill
+        assert not issubclass(CrashPoint, Exception)
+        with pytest.raises(CrashPoint):
+            with inject_crashes({"x": 1}):
+                try:
+                    crash_point("x")
+                except Exception:  # noqa: BLE001 - the point of the test
+                    pytest.fail("CrashPoint caught by `except Exception`")
+
+    def test_inject_crashes_restores_previous(self):
+        with inject_crashes({"a": 1}) as outer:
+            with inject_crashes({"b": 1}) as inner:
+                crash_point("a")  # counts against the INNER schedule only
+            with pytest.raises(CrashPoint):
+                crash_point("a")
+        assert inner.hits == {"a": 1}
+        assert outer.hits == {"a": 1}
+        crash_point("a")  # disarmed outside all blocks
+
+    def test_parse_crash_points(self):
+        assert parse_crash_points("wal.append:2, snapshot.pre_commit") == \
+            {"wal.append": 2, "snapshot.pre_commit": 1}
+        assert parse_crash_points("") == {}
+        with pytest.raises(ValueError):
+            parse_crash_points("wal.append:two")
+        with pytest.raises(ValueError):
+            parse_crash_points(":3")
+
+    def test_resolve_wal_fsync(self, monkeypatch):
+        assert resolve_wal_fsync(True) is True
+        assert resolve_wal_fsync(False) is False
+        monkeypatch.delenv("ITR_WAL_FSYNC", raising=False)
+        assert resolve_wal_fsync() is True  # durable by default
+        monkeypatch.setenv("ITR_WAL_FSYNC", "0")
+        assert resolve_wal_fsync() is False
+        monkeypatch.setenv("ITR_WAL_FSYNC", "1")
+        assert resolve_wal_fsync() is True
+
+
+# -- write-ahead log -------------------------------------------------------
+
+class TestWal:
+    def test_roundtrip(self, tmp_path):
+        path = tmp_path / "wal.log"
+        payloads = [b"alpha", b"", b"x" * 1000, bytes(range(256))]
+        with WriteAheadLog(path) as wal:
+            for p in payloads:
+                wal.append(p)
+        records, report = read_wal_records(path)
+        assert records == payloads
+        assert report.n_records == 4 and not report.torn_tail
+
+    def test_append_survives_reopen(self, tmp_path):
+        path = tmp_path / "wal.log"
+        with WriteAheadLog(path) as wal:
+            wal.append(b"one")
+        with WriteAheadLog(path) as wal:  # reopen appends, never clobbers
+            wal.append(b"two")
+        records, _ = read_wal_records(path)
+        assert records == [b"one", b"two"]
+
+    def test_reset_compacts(self, tmp_path):
+        path = tmp_path / "wal.log"
+        with WriteAheadLog(path) as wal:
+            wal.append(b"old")
+            wal.reset()
+            wal.append(b"new")
+        records, _ = read_wal_records(path)
+        assert records == [b"new"]
+
+    def test_missing_file_is_empty_log(self, tmp_path):
+        records, report = read_wal_records(tmp_path / "absent.log")
+        assert records == [] and not report.torn_tail
+
+    def test_bad_magic_raises(self, tmp_path):
+        path = tmp_path / "wal.log"
+        path.write_bytes(b"NOTAWAL!rest")
+        with pytest.raises(ValueError, match="magic"):
+            read_wal_records(path)
+
+    def test_torn_tail_every_byte_offset(self, tmp_path):
+        """Truncating anywhere inside the final record loses exactly that
+        record — recovery keeps every earlier one and reports the tear."""
+        path = tmp_path / "wal.log"
+        with WriteAheadLog(path) as wal:
+            wal.append(b"first")
+            wal.append(b"second")
+        full = path.read_bytes()
+        keep_upto = len(MAGIC) + 8 + len(b"first")  # end of record 1
+        for cut in range(keep_upto + 1, len(full)):
+            path.write_bytes(full[:cut])
+            records, report = read_wal_records(path)
+            assert records == [b"first"], cut
+            assert report.torn_tail and report.n_records == 1, cut
+        # the header itself torn: empty log, still no exception
+        for cut in range(1, len(MAGIC)):
+            path.write_bytes(full[:cut])
+            records, report = read_wal_records(path)
+            assert records == [] and report.torn_tail
+
+    def test_corrupt_tail_crc_dropped(self, tmp_path):
+        path = tmp_path / "wal.log"
+        with WriteAheadLog(path) as wal:
+            wal.append(b"good")
+            wal.append(b"evil")
+        data = bytearray(path.read_bytes())
+        data[-1] ^= 0xFF  # flip a payload byte of the LAST record
+        path.write_bytes(bytes(data))
+        records, report = read_wal_records(path)
+        assert records == [b"good"]
+        assert report.torn_tail and "crc" in report.torn_reason
+
+    def test_reopen_truncates_torn_tail_before_appending(self, tmp_path):
+        """Appending after a torn tail would bury the new records behind
+        garbage; reopening must cut the tear first."""
+        path = tmp_path / "wal.log"
+        with WriteAheadLog(path) as wal:
+            wal.append(b"first")
+            wal.append(b"second")
+        full = path.read_bytes()
+        path.write_bytes(full[:-3])  # tear the last record
+        with WriteAheadLog(path) as wal:
+            assert wal.recovery is not None and wal.recovery.torn_tail
+            wal.append(b"third")
+        records, report = read_wal_records(path)
+        assert records == [b"first", b"third"]
+        assert not report.torn_tail
+
+    def test_torn_crash_point_leaves_recoverable_tail(self, tmp_path):
+        path = tmp_path / "wal.log"
+        wal = WriteAheadLog(path)
+        wal.append(b"committed")
+        with pytest.raises(CrashPoint):
+            with inject_crashes({"wal.torn": 1}):
+                wal.append(b"torn-away")
+        records, report = read_wal_records(path)
+        assert records == [b"committed"]
+        assert report.torn_tail
+
+
+# -- engine snapshots ------------------------------------------------------
+
+class TestEngineSnapshot:
+    def test_roundtrip_parity_mmap_and_copy(self, tmp_path):
+        rows = _rand_triples(0, 220)
+        engine = _build_engine(rows, config=RepairConfig(max_rank=8))
+        engine.insert_triples([[1, 2, 3], [5, 0, 9]])
+        engine.delete_triples(rows[:4])
+        want = _answers(engine)
+        path = str(tmp_path / "snap")
+        save_snapshot(engine, path)
+        for mmap in (True, False):
+            loaded = load_snapshot(path, mmap=mmap)
+            assert _answers(loaded) == want
+            assert loaded.delta.n_inserts == 2
+            assert loaded.delta.n_tombstones == 4
+            assert loaded.base_edges == len(rows)
+            assert loaded.crossover == engine.crossover
+            assert loaded.config == RepairConfig(max_rank=8)
+            assert loaded.rebuild_count == engine.rebuild_count
+
+    def test_loaded_engine_stays_mutable(self, tmp_path):
+        rows = _rand_triples(1, 150)
+        path = str(tmp_path / "snap")
+        save_snapshot(_build_engine(rows), path)
+        loaded = load_snapshot(path)  # mmap-backed arrays
+        assert loaded.insert_triples([[0, 1, 2]]) == 1
+        assert loaded.delete_triples(rows[:3]) == 3
+        assert loaded.rebuild() is True  # recompress over mmap views
+        got = {tuple(map(int, r)) for r in loaded.current_triples()}
+        want = {tuple(map(int, r)) for r in rows[3:]} | {(0, 1, 2)}
+        assert got == want
+
+    def test_empty_engine_roundtrip(self, tmp_path):
+        engine = _build_engine(np.zeros((0, 3), dtype=np.int64))
+        path = str(tmp_path / "snap")
+        save_snapshot(engine, path)
+        loaded = load_snapshot(path)
+        assert loaded.query(-1, -1, -1) == []
+
+    def test_checksum_mismatch_raises(self, tmp_path):
+        path = str(tmp_path / "snap")
+        save_snapshot(_build_engine(_rand_triples(2, 100)), path)
+        target = os.path.join(path, "flat_params.npy")
+        data = bytearray(open(target, "rb").read())
+        data[-1] ^= 0x01
+        open(target, "wb").write(bytes(data))
+        with pytest.raises(SnapshotError, match="checksum"):
+            load_snapshot(path)
+        # opting out of verification loads the (corrupt) bytes silently
+        load_snapshot(path, verify=False)
+
+    def test_missing_array_raises(self, tmp_path):
+        path = str(tmp_path / "snap")
+        save_snapshot(_build_engine(_rand_triples(3, 80)), path)
+        os.remove(os.path.join(path, "start_labels.npy"))
+        with pytest.raises(SnapshotError, match="missing"):
+            load_snapshot(path)
+
+    def test_manifestless_dir_raises(self, tmp_path):
+        path = str(tmp_path / "snap")
+        save_snapshot(_build_engine(_rand_triples(4, 80)), path)
+        os.remove(os.path.join(path, MANIFEST))
+        with pytest.raises(SnapshotError, match="manifest"):
+            load_snapshot(path)
+
+    def test_format_version_gate(self, tmp_path):
+        path = str(tmp_path / "snap")
+        save_snapshot(_build_engine(_rand_triples(5, 80)), path)
+        mpath = os.path.join(path, MANIFEST)
+        manifest = json.load(open(mpath))
+        manifest["format"] = 999
+        json.dump(manifest, open(mpath, "w"))
+        with pytest.raises(SnapshotError, match="format"):
+            load_snapshot(path)
+
+    def test_atomic_overwrite_keeps_previous_on_crash(self, tmp_path):
+        rows = _rand_triples(6, 120)
+        engine = _build_engine(rows)
+        path = str(tmp_path / "snap")
+        save_snapshot(engine, path)
+        engine.insert_triples([[2, 2, 2]])
+        with pytest.raises(CrashPoint):
+            with inject_crashes({"snapshot.write_arrays": 3}):
+                save_snapshot(engine, path)
+        # the committed snapshot is intact; the aborted write is a .tmp
+        loaded = load_snapshot(path)
+        assert not loaded.contains_triples([[2, 2, 2]])[0]
+        assert os.path.isdir(path + ".tmp")
+        save_snapshot(engine, path)  # retry cleans the leftover .tmp
+        assert not os.path.exists(path + ".tmp")
+        assert load_snapshot(path).contains_triples([[2, 2, 2]])[0]
+
+
+# -- durable sharded service ----------------------------------------------
+
+def _build_durable(tmp_path, seed=7, n_shards=3, strategy="predicate_hash",
+                   **kwargs):
+    rows = _rand_triples(seed, 260)
+    root = str(tmp_path / "svc")
+    svc = DurableShardedService.build(
+        rows, 24, 4, root=root, n_shards=n_shards, strategy=strategy,
+        rebalance_skew=None, **kwargs)
+    return svc, rows, root
+
+
+class TestDurableService:
+    def test_recover_replays_mutations(self, tmp_path):
+        svc, rows, root = _build_durable(tmp_path)
+        svc.insert_triples([[9, 3, 9], [0, 0, 1]])
+        svc.delete_triples(rows[:6])
+        want = _svc_answers(svc)
+        svc.close()
+        recovered = DurableShardedService.open(root)
+        assert _svc_answers(recovered) == want
+        rep = recovered.last_recovery
+        assert isinstance(rep, RecoveryReport)
+        assert rep.replayed_records == 2 and not rep.torn_tail
+        recovered.close()
+
+    def test_snapshot_compacts_wal_and_gc(self, tmp_path):
+        svc, rows, root = _build_durable(tmp_path)
+        svc.insert_triples([[1, 1, 1]])
+        svc.snapshot()
+        _, report = read_wal_records(os.path.join(root, "wal.log"))
+        assert report.n_records == 0  # compacted
+        svc.insert_triples([[2, 2, 2]])
+        want = _svc_answers(svc)
+        svc.close()
+        recovered = DurableShardedService.open(root)
+        assert recovered.last_recovery.snapshot_step == 2
+        assert recovered.last_recovery.replayed_records == 1
+        assert _svc_answers(recovered) == want
+        # gc keeps a bounded number of versioned dirs
+        snaps = [d for d in os.listdir(root) if d.startswith("snap_")
+                 and not d.endswith(".tmp")]
+        assert len(snaps) <= 2
+        recovered.close()
+
+    def test_crash_between_commit_and_truncate_is_idempotent(self, tmp_path):
+        """The whole old WAL replayed onto the NEW snapshot (kill after
+        the rename, before the truncation) must be a no-op."""
+        svc, rows, root = _build_durable(tmp_path)
+        svc.insert_triples([[3, 3, 3]])
+        svc.delete_triples(rows[:5])
+        svc.insert_triples(rows[:2])  # delete-then-reinsert interleaving
+        want = _svc_answers(svc)
+        with pytest.raises(CrashPoint):
+            with inject_crashes({"snapshot.post_commit": 1}):
+                svc.snapshot()
+        _, report = read_wal_records(os.path.join(root, "wal.log"))
+        assert report.n_records == 3  # truncation never happened
+        recovered = DurableShardedService.open(root)
+        assert recovered.last_recovery.snapshot_step == 2
+        assert recovered.last_recovery.replayed_records == 3
+        assert _svc_answers(recovered) == want
+        recovered.close()
+
+    def test_mid_migration_snapshot_resumes(self, tmp_path):
+        svc, rows, root = _build_durable(tmp_path, strategy="node_range",
+                                         n_shards=2)
+        svc.insert_triples(  # hot subjects: skews the node_range cut
+            np.stack([np.arange(24) % 5, np.full(24, 3),
+                      np.arange(24)], axis=1))
+        svc.rebalance(force=True, max_moves=5)
+        assert svc.migration_active
+        svc.snapshot()  # migration plan persisted, pending rows are a diff
+        want = _svc_answers(svc)
+        svc.close()
+        recovered = DurableShardedService.open(root)
+        assert recovered.last_recovery.migration_resumed
+        assert recovered.migration_active
+        assert _svc_answers(recovered) == want
+        recovered.rebalance()  # drain to completion
+        assert not recovered.migration_active
+        assert _svc_answers(recovered) == want
+        recovered.close()
+
+    def test_migration_batch_replay_is_idempotent(self, tmp_path):
+        """Satellite pin: re-applying a logged migration batch must not
+        duplicate rows at dst or resurrect a row deleted post-append."""
+        rows = _rand_triples(11, 200)
+        svc = ShardedTripleService.build(rows, 24, 4, n_shards=2,
+                                         strategy="node_range",
+                                         rebalance_skew=None)
+        # pile rows onto one hot subject: the re-quantiled boundary then
+        # moves every other low-subject row off shard 0
+        hot = np.array([[0, p, o] for p in range(4) for o in range(15)])
+        svc.insert_triples(hot)
+        mig = plan_rebalance(svc.plan, svc.engines)
+        moves = mig.pending_moves()
+        assert moves, "re-cut must move something for this pin to bite"
+        src, dst, batch = moves[0]
+        svc._migration = mig
+        mig.take(None)  # drain the bookkeeping; apply the batch by hand
+        applied = svc._apply_migration_batch(src, dst, batch)
+        assert applied == len(batch)
+        before = {tuple(map(int, r))
+                  for r in svc.engines[dst].current_triples()}
+        # replay 1: full batch again -> no row is still at src -> no-op
+        assert svc._apply_migration_batch(src, dst, batch) == 0
+        after = {tuple(map(int, r))
+                 for r in svc.engines[dst].current_triples()}
+        assert after == before, "replay duplicated migrated rows"
+        # replay 2: a row deleted after the move (through the in-flight
+        # dual-shard delete path) must stay dead when the batch re-applies
+        dead = batch[0].reshape(1, 3)
+        assert svc.delete_triples(dead) == 1
+        assert not svc.engines[dst].contains_triples(dead)[0]
+        assert svc._apply_migration_batch(src, dst, batch) == 0
+        assert not svc.engines[dst].contains_triples(dead)[0], \
+            "replay resurrected a deleted row"
+
+    def test_degraded_shard_serves_and_reingests(self, tmp_path):
+        svc, rows, root = _build_durable(tmp_path, n_shards=3)
+        full = _svc_answers(svc)
+        svc.close()
+        # nuke one shard's snapshot payload (build wrote snap_000001)
+        victim = os.path.join(root, "snap_000001", "shard_1",
+                              "flat_params.npy")
+        data = bytearray(open(victim, "rb").read())
+        data[-1] ^= 0xFF
+        open(victim, "wb").write(bytes(data))
+        recovered = DurableShardedService.open(root)
+        assert recovered.last_recovery.failed_shards == [1]
+        assert recovered.failed_shards == {1}
+        # the tier still answers: surviving shards' rows only
+        got = _svc_answers(recovered)
+        lost = {tuple(map(int, r)) for r in rows
+                if int(recovered.plan.route_triples(
+                    r.reshape(1, 3))[0]) == 1}
+        assert lost, "test needs the victim shard to own rows"
+        survivors = {tuple(map(int, r)) for r in rows} - lost
+        assert set(
+            (s, p, o) for p, (s, o) in got[(-1, -1, -1)]
+        ) == {(s, p, o) for s, p, o in survivors}
+        assert recovered.stats.degraded_patterns > 0
+        # writes to the hole and rebalancing are refused
+        bad_row = next(iter(lost))
+        with pytest.raises(RuntimeError, match="failed shards"):
+            recovered.insert_triples([list(bad_row)])
+        with pytest.raises(RuntimeError, match="failed shards"):
+            recovered.rebalance(force=True)
+        with pytest.raises(RuntimeError, match="failed shards"):
+            recovered.snapshot()
+        # re-ingest restores exact parity with the pre-failure answers
+        recovered.reingest_shard(1, rows)
+        assert recovered.failed_shards == set()
+        assert _svc_answers(recovered) == full
+        recovered.snapshot()  # snapshotting is legal again
+        recovered.close()
+
+    def test_open_without_snapshot_raises(self, tmp_path):
+        with pytest.raises(SnapshotError, match="no snapshot root"):
+            DurableShardedService.open(str(tmp_path / "empty"))
+        empty = tmp_path / "present-but-empty"
+        empty.mkdir()
+        with pytest.raises(SnapshotError, match="no complete snapshot"):
+            DurableShardedService.open(str(empty))
+
+    def test_snapshot_dir_env_knob(self, tmp_path, monkeypatch):
+        from repro.persist.service import resolve_snapshot_dir
+        monkeypatch.delenv("ITR_SNAPSHOT_DIR", raising=False)
+        with pytest.raises(ValueError, match="ITR_SNAPSHOT_DIR"):
+            resolve_snapshot_dir()
+        monkeypatch.setenv("ITR_SNAPSHOT_DIR", str(tmp_path / "via-env"))
+        assert resolve_snapshot_dir() == str(tmp_path / "via-env")
+        assert resolve_snapshot_dir(str(tmp_path / "arg")) == \
+            str(tmp_path / "arg")

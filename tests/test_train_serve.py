@@ -84,6 +84,69 @@ def test_checkpoint_roundtrip_and_atomicity(tmp_path):
     assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
 
 
+def test_checkpoint_crash_leaves_tmp_and_previous_survives(tmp_path, monkeypatch):
+    """A save that dies mid-write must leave the previous checkpoint
+    authoritative, and the next save must clean up the stale .tmp."""
+    tree = {"w": jnp.arange(8).astype(jnp.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+
+    real_save = np.save
+    calls = {"n": 0}
+
+    def dying_save(path, arr, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:  # second leaf of the step-2 save
+            raise OSError("disk gone")
+        real_save(path, arr, **kw)
+
+    monkeypatch.setattr(np, "save", dying_save)
+    tree2 = {"w": jnp.full((8,), 2.0), "b": jnp.ones((3,))}
+    with pytest.raises(OSError, match="disk gone"):
+        save_checkpoint(str(tmp_path), 2, tree2)
+    monkeypatch.setattr(np, "save", real_save)
+
+    # the aborted attempt is visible only as a .tmp; restore ignores it
+    assert any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    assert latest_step(str(tmp_path)) == 1
+    got, step = restore_checkpoint(str(tmp_path))
+    assert step == 1
+    np.testing.assert_array_equal(got["w"], np.arange(8, dtype=np.float32))
+
+    # retrying the same step reuses the name: stale .tmp cleaned, commit ok
+    save_checkpoint(str(tmp_path), 2, tree2)
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    got, step = restore_checkpoint(str(tmp_path))
+    assert step == 2
+    np.testing.assert_array_equal(got["b"], np.ones(3, np.float32))
+
+
+def test_checkpoint_exotic_dtype_views_roundtrip(tmp_path):
+    """bf16/fp8 leaves serialize as integer views; restore must hand back
+    the original dtype with bit-exact contents."""
+    import ml_dtypes
+
+    rng = np.random.default_rng(3)
+    base = rng.standard_normal(16).astype(np.float32)
+    tree = {
+        "bf16": base.astype(ml_dtypes.bfloat16),
+        "fp8_e4m3": base.astype(ml_dtypes.float8_e4m3fn),
+        "fp8_e5m2": base.astype(ml_dtypes.float8_e5m2),
+        "plain": base,
+    }
+    save_checkpoint(str(tmp_path), 3, tree)
+    got, step = restore_checkpoint(str(tmp_path))
+    assert step == 3
+    for key, want in tree.items():
+        assert got[key].dtype == want.dtype, key
+        # bit-exact: compare through the integer view, not float equality
+        view = {"bf16": np.uint16}.get(key, np.uint8)
+        if key == "plain":
+            np.testing.assert_array_equal(got[key], want)
+        else:
+            np.testing.assert_array_equal(got[key].view(view),
+                                          want.view(view), err_msg=key)
+
+
 def test_checkpoint_restart_resumes_training(tmp_path):
     cfg = get_arch("qwen2-1.5b").reduced()
     params = tf_mod.init_params(cfg, jax.random.PRNGKey(0))
