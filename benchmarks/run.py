@@ -80,6 +80,15 @@ def gate_metrics(bench: dict) -> dict[str, float]:
     if "cold_start_speedup" in recovery:
         # snapshot cold start must stay cheaper than a RePair rebuild
         out["recovery.cold_start_speedup"] = recovery["cold_start_speedup"]
+    load = bench.get("serving_load", {}).get("smoke_signals", {})
+    if "achieved_vs_offered" in load:
+        # open-loop throughput ratio at a sub-saturation offered rate:
+        # collapses when the concurrent request plane stops keeping up
+        out["serving_load.achieved_vs_offered"] = load["achieved_vs_offered"]
+    if "scatter_fanout_speedup" in load:
+        # threaded vs sequential scatter fan-out (~1.0 on 1-core runners)
+        out["serving_load.scatter_fanout_speedup"] = \
+            load["scatter_fanout_speedup"]
     return {k: float(v) for k, v in out.items()}
 
 
@@ -241,7 +250,18 @@ def main(smoke: bool = False, check: bool = False,
         itr_plus_bench,
         kernels_bench,
         query_latency,
+        serving_load,
     )
+
+    def _merge_serving_load(quiet: bool = True) -> dict:
+        """Run the load-harness smoke pass and fold it into the smoke
+        artifact, so the gate sees its dimensionless signals alongside the
+        query-latency ones."""
+        load = serving_load.run_smoke(quiet=quiet)
+        doc = json.loads(Path(SMOKE_JSON).read_text())
+        doc["serving_load"] = load
+        Path(SMOKE_JSON).write_text(json.dumps(doc, indent=2))
+        return doc
 
     print("== Table 1b / Figure 3: compression ratio per dataset ==")
     fig3 = compression_ratio.run(datasets=["ttt-win"] if smoke else compression_ratio.DATASETS)
@@ -251,8 +271,15 @@ def main(smoke: bool = False, check: bool = False,
         # stay write-free (BENCH_*.json artifacts are never overwritten)
         smoke_json = SMOKE_JSON if (check or update) else None
         fig4 = query_latency.run(n_queries=25, scale=0.02, json_path=smoke_json)
+        print("\n== serving load (open-loop smoke) ==")
+        if smoke_json:
+            _merge_serving_load(quiet=False)
+        else:
+            serving_load.run_smoke(quiet=False)
     else:
         fig4 = query_latency.run()
+        print("\n== serving load (open-loop) ==")
+        load_bench = serving_load.run()
     print("\n== §ITR+: node-label hyperedges (ttt-win) ==")
     plus = itr_plus_bench.run()
     print("\n== ablations: §Handling loops + mfd selection ==")
@@ -318,6 +345,13 @@ def main(smoke: bool = False, check: bool = False,
                       f"{recovery['first_query_after_open_us']:.1f},us")
         except Exception as e:
             print(f"# {BASELINE_JSON} unavailable: {e}", file=sys.stderr)
+        lat = load_bench.get("latency", {})
+        for q in ("p50_ms", "p95_ms", "p99_ms"):
+            print(f"serving_load/{q},{lat.get(q, 0.0):.3f},ms")
+        print(f"serving_load/saturation_qps,"
+              f"{load_bench['saturation']['saturation_qps']:.0f},qps")
+        print(f"serving_load/scatter_fanout_speedup,"
+              f"{load_bench['scatter_fanout']['speedup']:.2f},x")
     p = plus[0]
     print(f"itr_plus/ttt-win/gain,{p['plus_gain']:.4f},fraction")
     for row in abl["loop_rules"]:
@@ -351,9 +385,11 @@ def main(smoke: bool = False, check: bool = False,
         # would flag noise; the worst observed side per metric won't
         runs = [json.loads(Path(SMOKE_JSON).read_text())]
         for _ in range(2):
+            # query_latency.run rewrites SMOKE_JSON from scratch, so the
+            # serving_load section must be re-run and re-merged per pass
             query_latency.run(n_queries=25, scale=0.02, json_path=SMOKE_JSON,
                               quiet=True)
-            runs.append(json.loads(Path(SMOKE_JSON).read_text()))
+            runs.append(_merge_serving_load())
         update_baseline_from(runs, tolerance=tolerance)
     if smoke and check:
         print("\n== benchmark-regression gate ==")

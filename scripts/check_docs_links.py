@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Docs dead-link gate: every relative markdown link and every
+repo-path reference in README.md, ROADMAP.md, and docs/*.md must point
+at a file or directory that actually exists.
+
+Run from the repo root (CI does): exits 1 listing each dead link.
+Two classes of reference are checked:
+
+* Markdown links ``[text](target)`` whose target is not an absolute URL
+  (``http(s)://``, ``mailto:``) — resolved relative to the file that
+  contains them, ``#anchor`` suffixes stripped (a pure ``#anchor`` link
+  is same-file and always fine).
+* Backticked repo paths like ``src/repro/persist/wal.py`` or
+  ``benchmarks/serving_load.py`` — conservatively, only tokens rooted at
+  a known top-level source directory, so prose like ``state/`` or
+  ``snap_NNNNNN/`` never false-positives. A trailing ``::name`` (pytest
+  node id) is ignored.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `docs/FILE.md`, `src/pkg/mod.py`, `tests/test_x.py::test_y`, `.github/...`
+PATH_RE = re.compile(
+    r"`((?:src|docs|tests|benchmarks|scripts|examples|roofline|\.github)"
+    r"/[\w./\-]+)(?:::[\w\[\]./\-]+)?`"
+)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path) -> list[Path]:
+    files = [root / "README.md", root / "ROADMAP.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def dead_links(root: Path) -> list[str]:
+    """Human-readable ``file: target`` entries for every dead reference."""
+    errors: list[str] = []
+    for doc in doc_files(root):
+        rel = doc.relative_to(root)
+        text = doc.read_text()
+        for target in LINK_RE.findall(text):
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (doc.parent / path).exists():
+                errors.append(f"{rel}: dead link ({target})")
+        for path in PATH_RE.findall(text):
+            if not (root / path.rstrip("/")).exists():
+                errors.append(f"{rel}: missing path (`{path}`)")
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    errors = dead_links(root)
+    for err in errors:
+        print(f"links gate: {err}", file=sys.stderr)
+    print(f"links gate: {len(doc_files(root))} doc file(s) scanned, "
+          f"{len(errors)} dead reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

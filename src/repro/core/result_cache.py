@@ -36,9 +36,18 @@ Segment routing is computed from the *pattern* alone, never the shard or
 generation: a shard-qualified ``?P?`` entry still lands in the predicate
 segment, so bursts of point lookups from any number of shards cannot
 evict it past the segment's own budget floor.
+
+The cache is **thread-safe**: every operation (lookup, insert,
+generation bump, clear) runs under one internal lock, because the shared
+tier is hit concurrently by every reader thread of a
+:class:`~repro.serve.sharded.ShardedTripleService` flush — the LRU
+``move_to_end`` on lookup makes even reads mutating. Entries themselves
+are immutable (read-only numpy arrays), so returning them outside the
+lock is safe. See ``docs/CONCURRENCY.md``.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
@@ -133,6 +142,9 @@ class QueryResultCache:
         self._general = _LruSegment(self.max_entries, self.max_edges)
         self._predicate = _LruSegment(self.predicate_entries, self.predicate_edges)
         self._generations: dict[int, int] = {}  # shard -> current generation
+        # one lock over both segments + stats: lookups mutate LRU order, so
+        # concurrent reader threads need exclusion even on the "read" path
+        self._lock = threading.RLock()
 
     # -- routing ---------------------------------------------------------
     def _segment_key(self, s: int, p: int, o: int, shard: int):
@@ -148,26 +160,28 @@ class QueryResultCache:
 
     # -- engine API ------------------------------------------------------
     def lookup(self, s: int, p: int, o: int, shard: int = -1) -> CacheEntry | None:
-        is_pred, key = self._segment_key(s, p, o, shard)
-        val = self._segment(is_pred).get(key)
-        if val is None:
-            self.stats.misses += 1
-        else:
-            self.stats.hits += 1
-            if is_pred:
-                self.stats.predicate_hits += 1
-        return val
+        with self._lock:
+            is_pred, key = self._segment_key(s, p, o, shard)
+            val = self._segment(is_pred).get(key)
+            if val is None:
+                self.stats.misses += 1
+            else:
+                self.stats.hits += 1
+                if is_pred:
+                    self.stats.predicate_hits += 1
+            return val
 
     def insert(self, s: int, p: int, o: int, value: CacheEntry,
                shard: int = -1) -> None:
-        if len(value[0]) > self.max_entry_edges:
-            self.stats.oversize_skips += 1
-            return
         for arr in value:  # entries may be returned to callers by reference:
             arr.flags.writeable = False  # fail loudly on in-place mutation
-        is_pred, key = self._segment_key(s, p, o, shard)
-        self.stats.evictions += self._segment(is_pred).put(key, value)
-        self.stats.inserts += 1
+        with self._lock:
+            if len(value[0]) > self.max_entry_edges:
+                self.stats.oversize_skips += 1
+                return
+            is_pred, key = self._segment_key(s, p, o, shard)
+            self.stats.evictions += self._segment(is_pred).put(key, value)
+            self.stats.inserts += 1
 
     # -- shared-tier API -------------------------------------------------
     def shard_view(self, shard: int) -> "ShardCacheView":
@@ -177,7 +191,8 @@ class QueryResultCache:
         return ShardCacheView(self, shard)
 
     def generation(self, shard: int = -1) -> int:
-        return self._generations.get(shard, 0)
+        with self._lock:
+            return self._generations.get(shard, 0)
 
     def bump_generation(self, shard: int = -1) -> int:
         """Invalidate one shard's entries (the hook for graph mutability).
@@ -187,26 +202,30 @@ class QueryResultCache:
         the edge budgets reflect live data, not garbage awaiting LRU churn.
         Other shards' warm entries are untouched. Returns the new generation.
         """
-        gen = self._generations.get(shard, 0) + 1
-        self._generations[shard] = gen
-        for seg in (self._general, self._predicate):
-            stale = [k for k in seg.entries if k[1] == shard and k[0] < gen]
-            for k in stale:
-                seg.edges -= len(seg.entries.pop(k)[0])
-        return gen
+        with self._lock:
+            gen = self._generations.get(shard, 0) + 1
+            self._generations[shard] = gen
+            for seg in (self._general, self._predicate):
+                stale = [k for k in seg.entries if k[1] == shard and k[0] < gen]
+                for k in stale:
+                    seg.edges -= len(seg.entries.pop(k)[0])
+            return gen
 
     # -- introspection ---------------------------------------------------
     def __len__(self) -> int:
-        return len(self._general.entries) + len(self._predicate.entries)
+        with self._lock:
+            return len(self._general.entries) + len(self._predicate.entries)
 
     @property
     def cached_edges(self) -> int:
-        return self._general.edges + self._predicate.edges
+        with self._lock:
+            return self._general.edges + self._predicate.edges
 
     def clear(self) -> None:
         """Drop all entries (stats are kept; reassign `stats` to reset)."""
-        self._general.clear()
-        self._predicate.clear()
+        with self._lock:
+            self._general.clear()
+            self._predicate.clear()
 
 
 class ShardCacheView:

@@ -165,8 +165,8 @@ class DurableShardedService:
     @classmethod
     def open(cls, root=None, *, fsync: bool | None = None, mmap: bool = True,
              verify: bool = True, max_batch: int = 1024, config=None,
-             rebalance_skew=_DEFAULT_SKEW,
-             cache=_DEFAULT_CACHE) -> "DurableShardedService":
+             rebalance_skew=_DEFAULT_SKEW, cache=_DEFAULT_CACHE,
+             serve_threads: int | None = None) -> "DurableShardedService":
         """Recover a service from disk: newest complete snapshot + replay.
 
         Shards whose snapshot fails to load degrade (served as holes)
@@ -200,7 +200,7 @@ class DurableShardedService:
                 (e.config for e in engines if e is not None), None)
         svc = ShardedTripleService(
             engines, plan, cache, max_batch, config=config,
-            rebalance_skew=rebalance_skew)
+            rebalance_skew=rebalance_skew, serve_threads=serve_threads)
         for k in failed:
             svc.mark_shard_failed(k)
         report.failed_shards = failed
@@ -235,27 +235,34 @@ class DurableShardedService:
         rows = as_triple_rows(triples)
         if len(rows) == 0:
             return 0
-        # validate BEFORE the append: a record that cannot apply must
-        # never reach the log, or replay would trip over it
-        if int(rows[:, 1].max()) >= svc.plan.n_preds:
-            raise ValueError(
-                f"predicate ids must be < {svc.plan.n_preds}; "
-                f"got {int(rows[:, 1].max())}")
-        if svc.failed_shards:
-            bad = sorted(svc.failed_shards)
-            routed = svc.plan.route_triples(rows)
-            if svc._migration is not None:
-                hits = np.isin(routed, bad) | np.isin(
-                    svc._migration.new_plan.route_triples(rows), bad)
-            else:
-                hits = np.isin(routed, bad)
-            if hits.any():
-                raise RuntimeError(
-                    f"cannot mutate failed shards {bad}; "
-                    "restore them with reingest_shard() first")
-        self.wal.append(_pack_rows(op, rows))
-        return svc.insert_triples(rows) if op == OP_INSERT \
-            else svc.delete_triples(rows)
+        # one exclusive section for validate + append + apply: WAL order
+        # must equal apply order (concurrent mutations appending in one
+        # order and applying in another would diverge on replay), and the
+        # routing state validated against must be the one applied under.
+        # The inner service mutation re-takes write — the lock is
+        # writer-reentrant for exactly this nesting.
+        with svc._rw.write():
+            # validate BEFORE the append: a record that cannot apply must
+            # never reach the log, or replay would trip over it
+            if int(rows[:, 1].max()) >= svc.plan.n_preds:
+                raise ValueError(
+                    f"predicate ids must be < {svc.plan.n_preds}; "
+                    f"got {int(rows[:, 1].max())}")
+            if svc.failed_shards:
+                bad = sorted(svc.failed_shards)
+                routed = svc.plan.route_triples(rows)
+                if svc._migration is not None:
+                    hits = np.isin(routed, bad) | np.isin(
+                        svc._migration.new_plan.route_triples(rows), bad)
+                else:
+                    hits = np.isin(routed, bad)
+                if hits.any():
+                    raise RuntimeError(
+                        f"cannot mutate failed shards {bad}; "
+                        "restore them with reingest_shard() first")
+            self.wal.append(_pack_rows(op, rows))
+            return svc.insert_triples(rows) if op == OP_INSERT \
+                else svc.delete_triples(rows)
 
     # -- journaling hook (rebalance state changes) -------------------------
     def _on_journal(self, kind: str, payload) -> None:
@@ -278,40 +285,45 @@ class DurableShardedService:
         replays the (now redundant) log onto the new snapshot, which is
         idempotent by construction."""
         svc = self.service
-        if svc.failed_shards:
-            raise RuntimeError(
-                f"cannot snapshot with failed shards "
-                f"{sorted(svc.failed_shards)}: the hole would become "
-                "permanent; restore them with reingest_shard() first")
-        steps = _snapshot_steps(self.root)
-        step = (steps[-1] if steps else 0) + 1
-        final = os.path.join(self.root, f"snap_{step:06d}")
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        for k, engine in enumerate(svc.engines):
-            save_snapshot(engine, os.path.join(tmp, f"shard_{k}"),
-                          atomic=False)
-        manifest = {
-            "format": 1,
-            "plan": plan_to_dict(svc.plan),
-            "migration_plan": None if svc._migration is None
-            else plan_to_dict(svc._migration.new_plan),
-        }
-        # service manifest last: the directory's commit marker
-        with open(os.path.join(tmp, SERVICE_MANIFEST), "w") as f:
-            json.dump(manifest, f)
-        crash_point("snapshot.pre_commit")
-        os.rename(tmp, final)
-        crash_point("snapshot.post_commit")
-        # gc only AFTER the new snapshot is committed: at no instant is
-        # there zero complete snapshots on disk
-        for old in steps[:len(steps) - keep + 1]:
-            shutil.rmtree(os.path.join(self.root, f"snap_{old:06d}"),
-                          ignore_errors=True)
-        self.wal.reset()
-        return final
+        # exclusive for the whole capture + commit + WAL reset: the
+        # snapshot must be one instant of the tier, and a mutation
+        # appended between the commit rename and the truncation would be
+        # silently erased by the reset
+        with svc._rw.write():
+            if svc.failed_shards:
+                raise RuntimeError(
+                    f"cannot snapshot with failed shards "
+                    f"{sorted(svc.failed_shards)}: the hole would become "
+                    "permanent; restore them with reingest_shard() first")
+            steps = _snapshot_steps(self.root)
+            step = (steps[-1] if steps else 0) + 1
+            final = os.path.join(self.root, f"snap_{step:06d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            for k, engine in enumerate(svc.engines):
+                save_snapshot(engine, os.path.join(tmp, f"shard_{k}"),
+                              atomic=False)
+            manifest = {
+                "format": 1,
+                "plan": plan_to_dict(svc.plan),
+                "migration_plan": None if svc._migration is None
+                else plan_to_dict(svc._migration.new_plan),
+            }
+            # service manifest last: the directory's commit marker
+            with open(os.path.join(tmp, SERVICE_MANIFEST), "w") as f:
+                json.dump(manifest, f)
+            crash_point("snapshot.pre_commit")
+            os.rename(tmp, final)
+            crash_point("snapshot.post_commit")
+            # gc only AFTER the new snapshot is committed: at no instant is
+            # there zero complete snapshots on disk
+            for old in steps[:len(steps) - keep + 1]:
+                shutil.rmtree(os.path.join(self.root, f"snap_{old:06d}"),
+                              ignore_errors=True)
+            self.wal.reset()
+            return final
 
     # -- replay ------------------------------------------------------------
     def _replay(self, report: RecoveryReport) -> None:
@@ -390,6 +402,7 @@ class DurableShardedService:
     # -- lifecycle / delegation --------------------------------------------
     def close(self) -> None:
         self.service._journal = None
+        self.service.close()  # drain the scatter fan-out pool
         self.wal.close()
 
     def __enter__(self) -> "DurableShardedService":

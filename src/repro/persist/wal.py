@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import os
 import struct
+import threading
 import zlib
 from dataclasses import dataclass, field
 
@@ -83,6 +84,10 @@ class WriteAheadLog:
     def __init__(self, path, fsync: bool | None = None):
         self.path = os.fspath(path)
         self.fsync = resolve_wal_fsync(fsync)
+        # appends are already serialized by the durable service's exclusive
+        # write lock; this inner lock is defense in depth so two frames can
+        # never interleave even if a caller appends outside that discipline
+        self._lock = threading.Lock()
         fresh = not os.path.exists(self.path) \
             or os.path.getsize(self.path) < len(MAGIC)
         #: tolerant scan of the pre-existing log (None when created fresh)
@@ -109,13 +114,14 @@ class WriteAheadLog:
         crash_point("wal.append")
         frame = _FRAME.pack(len(payload), zlib.crc32(payload)) + payload
         half = len(frame) // 2
-        self._f.write(frame[:half])
-        self._f.flush()
-        # a kill here leaves half a frame on disk: the torn tail the
-        # reader must drop without failing recovery
-        crash_point("wal.torn")
-        self._f.write(frame[half:])
-        self._flush()
+        with self._lock:
+            self._f.write(frame[:half])
+            self._f.flush()
+            # a kill here leaves half a frame on disk: the torn tail the
+            # reader must drop without failing recovery
+            crash_point("wal.torn")
+            self._f.write(frame[half:])
+            self._flush()
         crash_point("wal.post_append")
 
     def _flush(self) -> None:

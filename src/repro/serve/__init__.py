@@ -1,3 +1,4 @@
+from repro.serve.concurrency import RWLock, resolve_serve_threads
 from repro.serve.engine import GenerationResult, ServeEngine
 from repro.serve.sharded import ShardedServiceStats, ShardedTripleService
 from repro.serve.triple_service import (
@@ -14,4 +15,6 @@ __all__ = [
     "ServiceStats",
     "ShardedTripleService",
     "ShardedServiceStats",
+    "RWLock",
+    "resolve_serve_threads",
 ]

@@ -1,0 +1,162 @@
+"""Concurrency primitives for the serving tier.
+
+Two things live here, both consumed by `repro.serve.sharded` (and, through
+it, `repro.persist.service`):
+
+* :class:`RWLock` — the reader-writer lock behind the tier's concurrency
+  discipline (documented end to end in ``docs/CONCURRENCY.md``). Queries
+  are *readers*: any number of flushes run concurrently, each seeing one
+  consistent (plan, migration, engines) state for its whole duration.
+  Mutations, rebuilds, rebalance steps, failure handling, and snapshots
+  are *writers*: fully exclusive, so every invariant the single-threaded
+  oracle suites pin (migration-safe routing, disjoint partitions,
+  WAL-order == apply-order) holds under arbitrary interleaving — writers
+  simply never interleave with anything.
+
+  The lock is **write-preferring** (a waiting writer blocks new readers,
+  so mutation latency is bounded by in-flight flushes, not by a steady
+  reader stream) and **writer-reentrant**: the thread holding write may
+  re-acquire write (``DurableShardedService`` wraps the WAL append and
+  the in-memory apply in one exclusive section around the inner service's
+  own write-locked mutation) and may acquire read (a write-locked
+  rebalance probes visibility through the query path). Upgrading
+  read → write is refused with ``RuntimeError`` — two readers upgrading
+  simultaneously would deadlock, so the attempt fails loudly instead.
+
+* :func:`resolve_serve_threads` — the ``ITR_SERVE_THREADS`` knob: how
+  many threads a sharded flush may fan scatter-gather work out across.
+  Per-shard engines are independent and the post-build read path is
+  numpy (GIL-releasing), so unselective scatter latency drops roughly
+  with core count until the shard count or the machine runs out.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from contextlib import contextmanager
+
+
+class RWLock:
+    """Write-preferring reader-writer lock with a reentrant writer.
+
+    * ``read()``: shared — many threads at once; reentrant per thread;
+      granted immediately to the thread currently holding write.
+    * ``write()``: exclusive — waits for all readers to drain and blocks
+      new ones while waiting; reentrant in the owning thread.
+    * read → write upgrade raises ``RuntimeError`` (it deadlocks by
+      construction when two readers try it; fail loudly instead).
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers: dict[int, int] = {}   # thread ident -> read depth
+        self._writer: int | None = None      # ident of the write holder
+        self._write_depth = 0
+        self._waiting_writers = 0
+
+    @contextmanager
+    def read(self):
+        self.acquire_read()
+        try:
+            yield
+        finally:
+            self.release_read()
+
+    @contextmanager
+    def write(self):
+        self.acquire_write()
+        try:
+            yield
+        finally:
+            self.release_write()
+
+    def acquire_read(self):
+        me = threading.get_ident()
+        with self._cond:
+            # the write owner and already-admitted readers bypass the
+            # writer-preference barrier: blocking them would deadlock
+            if self._writer == me or me in self._readers:
+                self._readers[me] = self._readers.get(me, 0) + 1
+                return
+            while self._writer is not None or self._waiting_writers:
+                self._cond.wait()
+            self._readers[me] = 1
+
+    def release_read(self):
+        me = threading.get_ident()
+        with self._cond:
+            depth = self._readers.get(me)
+            if depth is None:
+                raise RuntimeError("release_read without acquire_read")
+            if depth > 1:
+                self._readers[me] = depth - 1
+            else:
+                del self._readers[me]
+                self._cond.notify_all()
+
+    def acquire_write(self):
+        me = threading.get_ident()
+        with self._cond:
+            if self._writer == me:
+                self._write_depth += 1
+                return
+            if me in self._readers:
+                raise RuntimeError(
+                    "read->write upgrade would deadlock; release the read "
+                    "lock (or take the write lock first)")
+            self._waiting_writers += 1
+            try:
+                while self._writer is not None or self._readers:
+                    self._cond.wait()
+            finally:
+                self._waiting_writers -= 1
+            self._writer = me
+            self._write_depth = 1
+
+    def release_write(self):
+        me = threading.get_ident()
+        with self._cond:
+            if self._writer != me:
+                raise RuntimeError("release_write by a non-owner thread")
+            self._write_depth -= 1
+            if self._write_depth == 0:
+                self._writer = None
+                self._cond.notify_all()
+
+    # -- introspection (tests / diagnostics) -------------------------------
+    @property
+    def write_held(self) -> bool:
+        return self._writer is not None
+
+    @property
+    def active_readers(self) -> int:
+        return len(self._readers)
+
+
+def resolve_serve_threads(value=None) -> int:
+    """Resolve the scatter-gather fan-out width (``ITR_SERVE_THREADS``).
+
+    Returns the number of threads a sharded flush may use to query shard
+    engines in parallel; ``1`` means the sequential fan-out. Resolution:
+
+    * explicit `value` wins over the environment;
+    * ``off``/``none``/``never`` (case-insensitive), ``0``, ``1``, or any
+      negative value → ``1`` (sequential);
+    * unset/empty/unparsable → ``os.cpu_count()`` (the default: shard
+      engines are independent and numpy releases the GIL, so one thread
+      per core is the natural width; the effective pool is further capped
+      at the shard count by the service).
+    """
+    if value is None:
+        value = os.environ.get("ITR_SERVE_THREADS", "")
+    text = str(value).strip().lower()
+    default = os.cpu_count() or 1
+    if not text:
+        return default
+    if text in ("off", "none", "never"):
+        return 1
+    try:
+        n = int(text)
+    except ValueError:
+        return default
+    return max(1, n)

@@ -51,10 +51,25 @@ instead — exact on disjoint partitions wherever each row currently
 sits), and mutations of in-motion rows delete on both candidate shards
 / insert on the incoming owner after probing the outgoing one, so
 serving and writes stay exact mid-migration.
+
+The tier is **safe under concurrent callers** (contract:
+``docs/CONCURRENCY.md``). Queries run as *readers* under the service's
+:class:`~repro.serve.concurrency.RWLock` — any number of threads flush at
+once, each seeing one consistent (plan, migration, engines) state —
+while mutations, rebuilds, rebalancing, and failure handling are fully
+exclusive *writers*, so every single-threaded routing invariant above
+survives arbitrary interleaving. Within one flush, scatter-gather work
+additionally fans out across shard engines on a thread pool sized by
+``ITR_SERVE_THREADS`` (engines are independent and the post-build read
+path is numpy, which releases the GIL); per-engine locks serialize the
+engines' internal scratch state, and the merge is deterministic in shard
+order, so threaded and sequential flushes are byte-identical.
 """
 from __future__ import annotations
 
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
 import numpy as np
@@ -86,6 +101,7 @@ from repro.distributed.rebalance import (
     resolve_rebalance_skew,
 )
 from repro.persist.crash import crash_point
+from repro.serve.concurrency import RWLock, resolve_serve_threads
 from repro.serve.triple_service import MicroBatchService
 
 # sentinel: "create a default shared QueryResultCache unless disabled by env"
@@ -152,7 +168,8 @@ class ShardedTripleService(MicroBatchService):
 
     def __init__(self, engines: list[TripleQueryEngine], plan: PartitionPlan,
                  cache: QueryResultCache | None = None, max_batch: int = 1024,
-                 config=None, rebalance_skew=_DEFAULT_SKEW):
+                 config=None, rebalance_skew=_DEFAULT_SKEW,
+                 serve_threads: int | None = None):
         super().__init__()
         assert len(engines) == plan.n_shards, \
             f"{len(engines)} engines for {plan.n_shards} shards"
@@ -162,6 +179,18 @@ class ShardedTripleService(MicroBatchService):
         self.max_batch = int(max_batch)
         self.config = config  # RepairConfig reused by per-shard rebuilds
         self.stats = ShardedServiceStats()
+        # concurrency discipline (docs/CONCURRENCY.md): queries read-lock,
+        # every mutating surface write-locks, so routing invariants pinned
+        # single-threaded hold under any interleaving
+        self._rw = RWLock()
+        # engines keep per-instance scratch (frontier arena, memo tables),
+        # so two threads of ONE flush must not enter the same engine at once
+        self._engine_locks = [threading.Lock() for _ in engines]
+        self._stats_lock = threading.Lock()  # stats blocks are not atomic
+        #: scatter fan-out width (threads per flush); 1 = sequential
+        self.serve_threads = resolve_serve_threads(serve_threads)
+        self._pool: ThreadPoolExecutor | None = None  # lazy, sized on first use
+        self._pool_lock = threading.Lock()
         # auto-rebalance trigger (max/mean live-edge skew); None = explicit only
         if rebalance_skew is _DEFAULT_SKEW:
             self.rebalance_skew = resolve_rebalance_skew()
@@ -182,7 +211,8 @@ class ShardedTripleService(MicroBatchService):
               n_shards: int = 4, strategy: str = "predicate_hash",
               config=None, cache=_DEFAULT_CACHE, crossover: int | None = None,
               max_batch: int = 1024, delta_budget=_DEFAULT_BUDGET,
-              rebalance_skew=_DEFAULT_SKEW) -> "ShardedTripleService":
+              rebalance_skew=_DEFAULT_SKEW,
+              serve_threads: int | None = None) -> "ShardedTripleService":
         """Partition -> compress each subgraph -> one engine per shard.
 
         `cache` is the shared result-cache tier (default: one
@@ -193,6 +223,8 @@ class ShardedTripleService(MicroBatchService):
         `rebalance_skew` is the live max/mean shard-load ratio at/above
         which the mutation path starts an online rebalance (default: read
         ``ITR_REBALANCE_SKEW``; ``None`` = only explicit ``rebalance()``).
+        `serve_threads` is the scatter fan-out width (default: read
+        ``ITR_SERVE_THREADS``, falling back to the core count).
         """
         plan = make_plan(strategy, n_shards, n_nodes, n_preds, triples=triples)
         if cache is _DEFAULT_CACHE:
@@ -211,38 +243,62 @@ class ShardedTripleService(MicroBatchService):
             engine._base_edges = len(sub)  # skew checks skip the decompress
             engines.append(engine)
         return cls(engines, plan, cache, max_batch, config=config,
-                   rebalance_skew=rebalance_skew)
+                   rebalance_skew=rebalance_skew, serve_threads=serve_threads)
 
     @property
     def n_shards(self) -> int:
         return self.plan.n_shards
 
     # -- request plane ---------------------------------------------------
-    def flush_view(self) -> QueryResultView:
-        """Execute all pending patterns; results as a shared-entry view
-        indexed by ticket (duplicate tickets share one merged entry).
-        An empty flush is a no-op: nothing counted, no time accrued."""
-        cols = self._take_pending()
-        if cols is None:
-            return QueryResultView.empty()
-        s, p, o = cols
+    def _flush_columns(self, s, p, o) -> QueryResultView:
+        """Execute one taken batch under the reader lock.
+
+        Safe from any number of threads at once: the read lock pins one
+        consistent (plan, migration, engines) state for the whole flush,
+        and everything `_run` touches concurrently (shared cache,
+        per-engine scratch, stats) is locked at its own level.
+        """
         n = len(s)
         t0 = time.perf_counter()
-        view = self._run(s, p, o)
+        with self._rw.read():
+            view = self._run(s, p, o)
         dt = time.perf_counter() - t0
-        st = self.stats
-        st.queries += n
-        st.flushes += 1
-        st.results += view.total_results()
-        st.total_s += dt
-        st.last_flush_qps = n / dt if dt > 0 else 0.0
+        with self._stats_lock:
+            st = self.stats
+            st.queries += n
+            st.flushes += 1
+            st.results += view.total_results()
+            st.total_s += dt
+            st.last_flush_qps = n / dt if dt > 0 else 0.0
         return view
 
-    def query(self, s: int | None, p: int | None, o: int | None) -> tuple:
-        """Submit one pattern and flush; returns ITS results even if other
-        submissions were already pending (they are flushed alongside)."""
-        ticket = self.submit(s, p, o)
-        return self.flush()[ticket]
+    # -- fan-out pool ------------------------------------------------------
+    def set_serve_threads(self, n: int | None) -> int:
+        """Change the scatter fan-out width; returns the resolved value.
+        ``None`` re-reads ``ITR_SERVE_THREADS``. The old pool (if any) is
+        drained and replaced lazily on the next threaded flush."""
+        self.serve_threads = resolve_serve_threads(n)
+        with self._pool_lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+        return self.serve_threads
+
+    def close(self) -> None:
+        """Drain the fan-out pool (idempotent; the service stays usable —
+        a later threaded flush just re-creates it)."""
+        with self._pool_lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        with self._pool_lock:
+            if self._pool is None:
+                width = min(self.serve_threads, max(1, self.n_shards))
+                self._pool = ThreadPoolExecutor(
+                    max_workers=width, thread_name_prefix="itr-serve")
+            return self._pool
 
     # -- scatter-gather core ---------------------------------------------
     def _run(self, s: np.ndarray, p: np.ndarray, o: np.ndarray) -> QueryResultView:
@@ -254,12 +310,12 @@ class ShardedTripleService(MicroBatchService):
         u_s, u_p, u_o = uniq[:, 0], uniq[:, 1], uniq[:, 2]
         routes = self._route_patterns(u_s, u_p, u_o)
         cache = self.cache
-        self.stats.unique_patterns += nu
 
         entries: list = [None] * nu
         # scattered patterns: the merged cross-shard result is itself cached
         # (reserved namespace), so a warm repeat is one lookup, not a fan-out
         scatter: list[int] = []
+        merged_hits = 0
         for u in np.flatnonzero(routes < 0):
             u = int(u)
             hit = cache.lookup(u_s[u], u_p[u], u_o[u], shard=_MERGED_SHARD) \
@@ -268,31 +324,56 @@ class ShardedTripleService(MicroBatchService):
                 scatter.append(u)
             else:
                 entries[u] = hit
-                self.stats.merged_hits += 1
+                merged_hits += 1
         scatter = np.asarray(scatter, dtype=np.int64)
-        self.stats.owned += int((routes >= 0).sum())
-        self.stats.scattered += int((routes < 0).sum())
+        degraded = 0
         if self.failed_shards:
             # every pattern owned by (or scattered across) a failed shard is
             # answered with that shard's rows missing — count the holes
             failed = sorted(self.failed_shards)
-            self.stats.degraded_patterns += \
-                int(np.isin(routes, failed).sum()) + len(scatter)
+            degraded = int(np.isin(routes, failed).sum()) + len(scatter)
+        with self._stats_lock:
+            self.stats.unique_patterns += nu
+            self.stats.merged_hits += merged_hits
+            self.stats.owned += int((routes >= 0).sum())
+            self.stats.scattered += int((routes < 0).sum())
+            self.stats.degraded_patterns += degraded
 
-        # merge-missing scattered patterns accumulate one chunk per shard
+        # merge-missing scattered patterns accumulate one chunk per shard;
+        # work items are collected first so they can fan out across the pool
         parts: dict[int, list] = {int(u): [] for u in scatter}
-        for k, engine in enumerate(self.engines):
+        work: list[tuple[int, np.ndarray, np.ndarray]] = []
+        for k in range(len(self.engines)):
             if k in self.failed_shards:
                 continue  # hole: owned patterns fall through to empty entries
             own = np.flatnonzero(routes == k)
             idx = own if len(scatter) == 0 else np.concatenate([own, scatter])
             if len(idx) == 0:
                 continue
-            pos_entries = self._shard_entries(engine, u_s[idx], u_p[idx], u_o[idx])
+            work.append((k, own, idx))
+        if len(work) > 1 and self.serve_threads > 1:
+            # pool workers call _shard_entries only — they never touch the
+            # RWLock (a worker acquiring read while a writer waits on the
+            # submitting reader would deadlock by writer preference)
+            pool = self._ensure_pool()
+            futs = [pool.submit(self._shard_entries, k,
+                                u_s[idx], u_p[idx], u_o[idx])
+                    for k, _, idx in work]
+            results = [f.result() for f in futs]
+        else:
+            results = [self._shard_entries(k, u_s[idx], u_p[idx], u_o[idx])
+                       for k, _, idx in work]
+        # merge in shard order (work is k-ascending): threaded and
+        # sequential flushes produce byte-identical views
+        n_batches = 0
+        for (k, own, idx), (pos_entries, nb) in zip(work, results):
+            n_batches += nb
             for j, u in enumerate(own):
                 entries[int(u)] = pos_entries[j]
             for j, u in enumerate(scatter):
                 parts[int(u)].append(pos_entries[len(own) + j])
+        with self._stats_lock:
+            self.stats.shard_batches += n_batches
         for u, chunks in parts.items():
             # merged chunks are shared across duplicate tickets: read-only.
             # A scattered result is deliberately held twice in the shared
@@ -326,16 +407,22 @@ class ShardedTripleService(MicroBatchService):
             routes = np.where(routes == incoming, routes, -1)
         return routes
 
-    def _shard_entries(self, engine: TripleQueryEngine, s, p, o) -> list:
+    def _shard_entries(self, k: int, s, p, o) -> tuple[list, int]:
         """One shard's entries for its sub-batch, in submission order —
-        one engine micro-batch per `max_batch` chunk."""
+        one engine micro-batch per `max_batch` chunk. Returns
+        ``(entries, n_batches)``; runs under the shard's engine lock, so
+        threaded fan-out never interleaves inside one engine (each keeps
+        per-instance scratch: the frontier arena, memo tables)."""
+        engine = self.engines[k]
         out: list = []
-        for lo in range(0, len(s), self.max_batch):
-            hi = min(lo + self.max_batch, len(s))
-            view = engine.query_batch_view(s[lo:hi], p[lo:hi], o[lo:hi])
-            out.extend(view.entry(i) for i in range(view.n_queries))
-            self.stats.shard_batches += 1
-        return out
+        n_batches = 0
+        with self._engine_locks[k]:
+            for lo in range(0, len(s), self.max_batch):
+                hi = min(lo + self.max_batch, len(s))
+                view = engine.query_batch_view(s[lo:hi], p[lo:hi], o[lo:hi])
+                out.extend(view.entry(i) for i in range(view.n_queries))
+                n_batches += 1
+        return out, n_batches
 
     # -- mutation ---------------------------------------------------------
     def insert_triples(self, triples) -> int:
@@ -364,17 +451,19 @@ class ShardedTripleService(MicroBatchService):
             raise ValueError(
                 f"predicate ids must be < {self.plan.n_preds}; "
                 f"got {int(rows[:, 1].max())}")
-        if self._migration is None:
-            applied = self._apply_rows(rows, insert,
-                                       self.plan.route_triples(rows))
-        else:
-            applied = self._mutate_in_flight(rows, insert)
-        if insert:
-            self.stats.inserted += applied
-        else:
-            self.stats.deleted += applied
-        if applied:
-            self._maybe_auto_rebalance()
+        with self._rw.write():  # exclusive: no flush observes a half-applied
+            # mutation, routing state never changes under a reader
+            if self._migration is None:
+                applied = self._apply_rows(rows, insert,
+                                           self.plan.route_triples(rows))
+            else:
+                applied = self._mutate_in_flight(rows, insert)
+            if insert:
+                self.stats.inserted += applied
+            else:
+                self.stats.deleted += applied
+            if applied:
+                self._maybe_auto_rebalance()
         return applied
 
     def _apply_rows(self, rows: np.ndarray, insert: bool,
@@ -462,17 +551,19 @@ class ShardedTripleService(MicroBatchService):
         """
         shards = range(self.n_shards) if shard is None else [int(shard)]
         rebuilt: list[int] = []
-        for k in shards:
-            engine = self.engines[k]
-            if engine.delta.is_empty:
-                continue
-            over = engine.delta_budget is not None \
-                and engine.delta.size > engine.delta_budget
-            if shard is not None or force or over:
-                engine.rebuild(self.config)
-                self.stats.rebuilds += 1
-                self.invalidate(k)
-                rebuilt.append(k)
+        with self._rw.write():  # engine.rebuild swaps engine internals —
+            # it must never overlap a flush reading the same engine
+            for k in shards:
+                engine = self.engines[k]
+                if engine.delta.is_empty:
+                    continue
+                over = engine.delta_budget is not None \
+                    and engine.delta.size > engine.delta_budget
+                if shard is not None or force or over:
+                    engine.rebuild(self.config)
+                    self.stats.rebuilds += 1
+                    self.invalidate(k)
+                    rebuilt.append(k)
         return rebuilt
 
     def delta_sizes(self) -> list[int]:
@@ -505,35 +596,38 @@ class ShardedTripleService(MicroBatchService):
         by THIS call), ``pending`` (rows still to move), ``active``
         (migration still in flight).
         """
-        if self.failed_shards:
-            raise RuntimeError(
-                f"cannot rebalance with failed shards "
-                f"{sorted(self.failed_shards)}; restore them with "
-                "reingest_shard() first")
-        skew = self.skew()
-        if self._migration is None:
-            threshold = self.rebalance_skew
-            if not force and (threshold is None or skew < threshold):
-                return {"skew": skew, "moved": 0, "pending": 0,
-                        "active": False}
-            mig = plan_rebalance(self.plan, self.engines)
-            if mig.total_rows == 0:
-                # same assignment for every live row: adopt the re-cut
-                # (future routing may still improve) and back off
-                self._journal_event("plan_swap", mig.new_plan)
-                self.plan = mig.new_plan
-                self._futile_total = int(live_shard_edges(self.engines).sum())
-                return {"skew": skew, "moved": 0, "pending": 0,
-                        "active": False}
-            self._journal_event("rebalance_begin", mig.new_plan)
-            self._migration = mig
-            self.stats.rebalances += 1
-            self._futile_total = None
-        moved = self._apply_migration(max_moves)
-        return {"skew": skew, "moved": moved,
-                "pending": self._migration.pending_rows
-                if self._migration is not None else 0,
-                "active": self._migration is not None}
+        with self._rw.write():  # plan/migration state swaps exclusively:
+            # a reader sees either the old routing state or the new one
+            if self.failed_shards:
+                raise RuntimeError(
+                    f"cannot rebalance with failed shards "
+                    f"{sorted(self.failed_shards)}; restore them with "
+                    "reingest_shard() first")
+            skew = self.skew()
+            if self._migration is None:
+                threshold = self.rebalance_skew
+                if not force and (threshold is None or skew < threshold):
+                    return {"skew": skew, "moved": 0, "pending": 0,
+                            "active": False}
+                mig = plan_rebalance(self.plan, self.engines)
+                if mig.total_rows == 0:
+                    # same assignment for every live row: adopt the re-cut
+                    # (future routing may still improve) and back off
+                    self._journal_event("plan_swap", mig.new_plan)
+                    self.plan = mig.new_plan
+                    self._futile_total = int(
+                        live_shard_edges(self.engines).sum())
+                    return {"skew": skew, "moved": 0, "pending": 0,
+                            "active": False}
+                self._journal_event("rebalance_begin", mig.new_plan)
+                self._migration = mig
+                self.stats.rebalances += 1
+                self._futile_total = None
+            moved = self._apply_migration(max_moves)
+            return {"skew": skew, "moved": moved,
+                    "pending": self._migration.pending_rows
+                    if self._migration is not None else 0,
+                    "active": self._migration is not None}
 
     def _apply_migration(self, max_moves: int | None = None) -> int:
         """Migrate up to `max_moves` pending rows; finalize when drained.
@@ -647,10 +741,11 @@ class ShardedTripleService(MicroBatchService):
         k = int(shard)
         if not 0 <= k < self.n_shards:
             raise ValueError(f"shard {k} out of range [0, {self.n_shards})")
-        self.failed_shards.add(k)
-        self.engines[k] = self._build_shard_engine(
-            k, np.zeros((0, 3), dtype=np.int64))
-        self.invalidate(k)
+        with self._rw.write():  # the engine swap must not race a flush
+            self.failed_shards.add(k)
+            self.engines[k] = self._build_shard_engine(
+                k, np.zeros((0, 3), dtype=np.int64))
+            self.invalidate(k)
 
     def reingest_shard(self, shard: int, triples) -> int:
         """Restore a failed shard from re-ingested rows (e.g. re-extracted
@@ -661,10 +756,12 @@ class ShardedTripleService(MicroBatchService):
         if k not in self.failed_shards:
             raise ValueError(f"shard {k} is not marked failed")
         rows = as_triple_rows(triples)
-        mine = rows[self.plan.route_triples(rows) == k] if len(rows) else rows
-        self.engines[k] = self._build_shard_engine(k, mine)
-        self.failed_shards.discard(k)
-        self.invalidate(k)
+        with self._rw.write():
+            mine = rows[self.plan.route_triples(rows) == k] \
+                if len(rows) else rows
+            self.engines[k] = self._build_shard_engine(k, mine)
+            self.failed_shards.discard(k)
+            self.invalidate(k)
         return len(mine)
 
     def _build_shard_engine(self, k: int, rows: np.ndarray) -> TripleQueryEngine:

@@ -20,9 +20,21 @@ warm cache.
 
 The service is numpy-only — it runs wherever the engine runs — and keeps
 rolling throughput stats so serving dashboards can track queries/second.
+
+Thread-safety: the pending queue is internally locked, and every
+request-plane entry (``query``/``query_many``/``flush``) takes its
+tickets atomically — two threads calling ``query()`` concurrently can
+never read each other's results. What happens *after* the tickets are
+taken depends on the subclass: :class:`ShardedTripleService
+<repro.serve.sharded.ShardedTripleService>` executes under a reader lock
+and is safe from any number of threads, while
+:class:`TripleQueryService` fronts one engine (one arena, one frontier)
+and must not be flushed from two threads at once — the full contract is
+in ``docs/CONCURRENCY.md``.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -76,28 +88,44 @@ class MicroBatchService:
 
     Provides the pending queue (`submit` -> ticket, None = unbound slot,
     encoded as -1), the view-backed `flush` (shared tuple lists per
-    unique pattern — treat results as read-only) and `query_many`.
-    Subclasses implement :meth:`flush_view` and start it with
-    :meth:`_take_pending`, which swaps the queue out and returns aligned
-    int64 columns (or ``None`` for the empty-flush no-op).
+    unique pattern — treat results as read-only), and the synchronous
+    entries `query` / `query_many`. Subclasses implement
+    :meth:`_flush_columns`, which executes aligned int64 pattern columns
+    and returns the :class:`QueryResultView`.
+
+    The pending queue is guarded by an internal lock, and each
+    synchronous entry takes its tickets *atomically*: `query` grabs its
+    own ticket together with everything already pending (flushing
+    bystanders alongside, as ever), `query_many` takes the whole queue
+    but returns only its own patterns' results, and two threads doing
+    either can never observe each other's tickets. The raw
+    `submit`/`flush` split remains single-caller by nature — a ticket is
+    an index into whichever flush happens next, so handing submit and
+    flush to different threads needs external coordination (see
+    ``docs/CONCURRENCY.md``).
     """
 
     def __init__(self):
         self._pending = _Pending()
+        self._pending_lock = threading.Lock()
 
-    def submit(self, s: int | None, p: int | None, o: int | None) -> int:
-        """Queue one (S,P,O) pattern; returns its ticket in the next flush."""
+    def _submit_locked(self, s: int | None, p: int | None, o: int | None) -> int:
         ticket = len(self._pending.s)
         self._pending.s.append(-1 if s is None else int(s))
         self._pending.p.append(-1 if p is None else int(p))
         self._pending.o.append(-1 if o is None else int(o))
         return ticket
 
+    def submit(self, s: int | None, p: int | None, o: int | None) -> int:
+        """Queue one (S,P,O) pattern; returns its ticket in the next flush."""
+        with self._pending_lock:
+            return self._submit_locked(s, p, o)
+
     @property
     def pending(self) -> int:
         return len(self._pending.s)
 
-    def _take_pending(self):
+    def _take_pending_locked(self):
         batch, self._pending = self._pending, _Pending()
         if not batch.s:
             return None
@@ -105,8 +133,29 @@ class MicroBatchService:
                 np.asarray(batch.p, dtype=np.int64),
                 np.asarray(batch.o, dtype=np.int64))
 
-    def flush_view(self) -> QueryResultView:
+    def _take_pending(self):
+        with self._pending_lock:
+            return self._take_pending_locked()
+
+    def _flush_columns(self, s, p, o) -> QueryResultView:
+        """Execute one taken batch (aligned int64 columns, -1 = unbound).
+
+        Subclass hook: owns timing/stats and the actual execution. Must
+        be safe to call without the pending lock held — the sharded
+        service runs it under its reader lock from many threads at once.
+        """
         raise NotImplementedError
+
+    def flush_view(self) -> QueryResultView:
+        """Execute all pending queries; results as a shared-entry view
+        indexed by ticket (:class:`QueryResultView`) — duplicate tickets
+        share one entry, nothing is replicated. An empty flush is a
+        no-op: no batch is counted, no time accrued.
+        """
+        cols = self._take_pending()
+        if cols is None:
+            return QueryResultView.empty()
+        return self._flush_columns(*cols)
 
     def flush(self) -> list[tuple]:
         """Execute all pending queries; returns results indexed by ticket.
@@ -117,11 +166,29 @@ class MicroBatchService:
         """
         return self.flush_view().tuple_lists()
 
+    def query(self, s: int | None, p: int | None, o: int | None) -> tuple:
+        """One synchronous query: submit + flush, returning THIS pattern's
+        results (anything already pending is flushed alongside, its
+        tickets still owned by whoever submitted them). The ticket take
+        is atomic, so concurrent `query` callers get disjoint batches."""
+        with self._pending_lock:
+            ticket = self._submit_locked(s, p, o)
+            cols = self._take_pending_locked()
+        return self._flush_columns(*cols).tuple_lists()[ticket]
+
     def query_many(self, patterns) -> list[tuple]:
-        """patterns: iterable of (s, p, o) with None = unbound."""
-        for s, p, o in patterns:
-            self.submit(s, p, o)
-        return self.flush()
+        """patterns: iterable of (s, p, o) with None = unbound. Returns
+        one result tuple per pattern, in order — results for tickets
+        other callers already had pending are flushed alongside but not
+        returned here (they belong to those callers' flush)."""
+        with self._pending_lock:
+            base = len(self._pending.s)
+            for s, p, o in patterns:
+                self._submit_locked(s, p, o)
+            cols = self._take_pending_locked()
+        if cols is None:
+            return []
+        return self._flush_columns(*cols).tuple_lists()[base:]
 
 
 class TripleQueryService(MicroBatchService):
@@ -139,16 +206,13 @@ class TripleQueryService(MicroBatchService):
         self.max_batch = int(max_batch)
         self.stats = ServiceStats()
 
-    def flush_view(self) -> QueryResultView:
-        """Execute all pending queries; results as a shared-entry view
-        indexed by ticket (:class:`QueryResultView`) — duplicate tickets
-        share one entry, nothing is replicated. An empty flush is a no-op:
-        no batch is counted, no time accrued.
+    def _flush_columns(self, s, p, o) -> QueryResultView:
+        """Execute one taken batch on the engine, chunked by `max_batch`.
+
+        NOT safe from multiple threads at once: the engine reuses one
+        frontier arena per instance. Use the sharded service (which
+        wraps execution in per-engine locks) for concurrent callers.
         """
-        cols = self._take_pending()
-        if cols is None:
-            return QueryResultView.empty()
-        s, p, o = cols
         n = len(s)
         cache = self.engine.cache
         before = cache.stats.snapshot() if cache is not None else None

@@ -1,0 +1,519 @@
+"""Concurrent serving: RWLock semantics, thread-safe shared state, threaded
+scatter-gather parity, and a multi-threaded mutate/query/rebalance stress
+oracle cross-checked against a plain-Python set reference.
+
+The stress machines split the subject space: *stable* rows (never mutated)
+answer exactly under any interleaving, while *churn* rows (the only ones
+background mutators touch) bound what an unselective pattern may
+additionally return mid-flight. After the threads join, all 8 patterns
+must match the final set oracle exactly — on both partition strategies.
+
+The tier-1 run keeps the stress short; the nightly lane (``pytest -m
+slow``) re-runs it longer via ``ITR_STRESS_SECONDS``/``ITR_STRESS_THREADS``.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.result_cache import QueryResultCache
+from repro.persist.service import DurableShardedService
+from repro.serve.concurrency import RWLock, resolve_serve_threads
+from repro.serve.sharded import ShardedTripleService
+
+PATTERN_NAMES = ["s??", "?p?", "??o", "sp?", "s?o", "?po", "spo", "???"]
+
+# nightly lane budget (tier-1 uses the short defaults)
+SLOW_SECONDS = float(os.environ.get("ITR_STRESS_SECONDS", "6"))
+SLOW_THREADS = int(os.environ.get("ITR_STRESS_THREADS", "8"))
+
+
+def _bind(pattern, s, p, o):
+    return (s if pattern[0] == "s" else None,
+            p if pattern[1] == "p" else None,
+            o if pattern[2] == "o" else None)
+
+
+def _oracle_query(triples: set, s, p, o) -> list[tuple]:
+    """Reference answer in the service's result shape: (p, (s, o))."""
+    return sorted(
+        (tp, (ts, to)) for ts, tp, to in triples
+        if (s is None or ts == s) and (p is None or tp == p)
+        and (o is None or to == o))
+
+
+def _rows(rng, k, n_nodes, n_preds, lo_node=0) -> np.ndarray:
+    return np.stack([rng.integers(lo_node, n_nodes, k),
+                     rng.integers(0, n_preds, k),
+                     rng.integers(0, n_nodes, k)], axis=1)
+
+
+def _join_all(threads, timeout=60.0):
+    deadline = time.monotonic() + timeout
+    for t in threads:
+        t.join(max(0.1, deadline - time.monotonic()))
+        assert not t.is_alive(), f"thread {t.name} did not finish"
+
+
+# ------------------------------------------------------------------ RWLock
+def test_rwlock_readers_share():
+    lock = RWLock()
+    inside = threading.Barrier(3, timeout=10)
+
+    def reader():
+        with lock.read():
+            inside.wait()  # all 3 readers inside simultaneously
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    _join_all(threads)
+    assert lock.active_readers == 0 and not lock.write_held
+
+
+def test_rwlock_writer_excludes_readers_and_writers():
+    lock = RWLock()
+    log: list[str] = []
+    entered = threading.Event()
+    release = threading.Event()
+
+    def writer():
+        with lock.write():
+            log.append("w-in")
+            entered.set()
+            release.wait(10)
+            log.append("w-out")
+
+    def reader():
+        with lock.read():
+            log.append("r-in")
+
+    w = threading.Thread(target=writer)
+    w.start()
+    assert entered.wait(10)
+    r = threading.Thread(target=reader)
+    r.start()
+    time.sleep(0.05)
+    assert log == ["w-in"]  # reader is parked behind the writer
+    release.set()
+    _join_all([w, r])
+    assert log == ["w-in", "w-out", "r-in"]
+
+
+def test_rwlock_write_preferring():
+    """A waiting writer bars NEW readers, so it runs as soon as the
+    current readers drain — a steady reader stream cannot starve it."""
+    lock = RWLock()
+    order: list[str] = []
+    r1_in = threading.Event()
+    w_started = threading.Event()
+    r1_release = threading.Event()
+
+    def first_reader():
+        with lock.read():
+            r1_in.set()
+            r1_release.wait(10)
+        order.append("r1-out")
+
+    def writer():
+        w_started.set()
+        with lock.write():
+            order.append("w")
+
+    def late_reader():
+        w_started.wait(10)
+        time.sleep(0.05)  # let the writer reach its wait loop
+        with lock.read():
+            order.append("r2")
+
+    threads = [threading.Thread(target=f)
+               for f in (first_reader, writer, late_reader)]
+    for t in threads:
+        t.start()
+    assert r1_in.wait(10)
+    time.sleep(0.15)  # writer waiting on r1; r2 parked behind the writer
+    assert order == []
+    r1_release.set()
+    _join_all(threads)
+    assert order[0] == "r1-out" and order[1] == "w" and order[2] == "r2"
+
+
+def test_rwlock_writer_reentrant_and_read_under_write():
+    lock = RWLock()
+    with lock.write():
+        with lock.write():  # reentrant write
+            with lock.read():  # read granted to the write owner
+                assert lock.write_held
+        assert lock.write_held
+    assert not lock.write_held and lock.active_readers == 0
+
+
+def test_rwlock_read_reentrant():
+    lock = RWLock()
+    with lock.read():
+        with lock.read():
+            assert lock.active_readers == 1  # depth, not a second reader
+    assert lock.active_readers == 0
+
+
+def test_rwlock_upgrade_refused():
+    lock = RWLock()
+    with lock.read():
+        with pytest.raises(RuntimeError, match="upgrade"):
+            lock.acquire_write()
+    assert not lock.write_held and lock.active_readers == 0
+
+
+def test_rwlock_release_errors():
+    lock = RWLock()
+    with pytest.raises(RuntimeError):
+        lock.release_read()
+    with pytest.raises(RuntimeError):
+        lock.release_write()
+
+
+# ------------------------------------------------- ITR_SERVE_THREADS knob
+def test_resolve_serve_threads_spellings(monkeypatch):
+    ncpu = os.cpu_count() or 1
+    assert resolve_serve_threads(4) == 4
+    assert resolve_serve_threads(1) == 1
+    assert resolve_serve_threads(0) == 1
+    assert resolve_serve_threads(-3) == 1
+    for word in ("off", "OFF", "none", "never"):
+        assert resolve_serve_threads(word) == 1
+    monkeypatch.delenv("ITR_SERVE_THREADS", raising=False)
+    assert resolve_serve_threads() == ncpu
+    monkeypatch.setenv("ITR_SERVE_THREADS", "3")
+    assert resolve_serve_threads() == 3
+    assert resolve_serve_threads(2) == 2  # explicit beats env
+    monkeypatch.setenv("ITR_SERVE_THREADS", "nonsense")
+    assert resolve_serve_threads() == ncpu
+    monkeypatch.setenv("ITR_SERVE_THREADS", "off")
+    assert resolve_serve_threads() == 1
+
+
+# ------------------------------------------------------ shared-tier cache
+def test_cache_concurrent_hammer():
+    """lookup/insert/bump/clear from many threads: no exception, and the
+    budget accounting stays consistent afterwards."""
+    cache = QueryResultCache(max_entries=64, max_edges=1 << 12)
+    errors: list = []
+    stop = threading.Event()
+
+    def entry(n):
+        arr = np.arange(n, dtype=np.int64)
+        return (arr, arr.copy(), np.arange(n + 1, dtype=np.int64))
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            while not stop.is_set():
+                op = int(rng.integers(0, 100))
+                s, p, o = (int(v) for v in rng.integers(0, 8, 3))
+                shard = int(rng.integers(0, 4))
+                if op < 45:
+                    cache.lookup(s, p, o, shard=shard)
+                elif op < 85:
+                    cache.insert(s, p, o, entry(int(rng.integers(0, 16))),
+                                 shard=shard)
+                elif op < 95:
+                    cache.bump_generation(shard)
+                elif op < 98:
+                    len(cache), cache.cached_edges
+                else:
+                    cache.clear()
+        except Exception as exc:  # pragma: no cover - only on regression
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.4)
+    stop.set()
+    _join_all(threads)
+    assert not errors
+    assert len(cache) <= 64 * 2  # per-segment caps hold
+    assert cache.cached_edges >= 0
+    assert cache.stats.lookups == cache.stats.hits + cache.stats.misses
+
+
+# ------------------------------------------- threaded fan-out parity
+def _build_pair(seed, strategy, serve_threads, n_shards=4):
+    rng = np.random.default_rng(seed)
+    triples = np.unique(_rows(rng, 300, 40, 6), axis=0)
+    svc = ShardedTripleService.build(
+        triples, 40, 6, n_shards=n_shards, strategy=strategy,
+        rebalance_skew=None, serve_threads=serve_threads)
+    return triples, svc
+
+
+@pytest.mark.parametrize("strategy", ["predicate_hash", "node_range"])
+def test_threaded_scatter_matches_sequential(strategy):
+    """serve_threads>1 and serve_threads=1 produce identical results and
+    identical per-shard batch accounting for the same flush."""
+    triples, seq = _build_pair(7, strategy, serve_threads=1)
+    _, par = _build_pair(7, strategy, serve_threads=4)
+    oracle = {tuple(map(int, r)) for r in triples}
+    patterns = [(None, 2, None), (None, None, None), (5, None, None),
+                (None, None, 3), (None, 1, 7), (2, 0, None)]
+    got_seq = seq.query_many(patterns)
+    got_par = par.query_many(patterns)
+    for (s, p, o), a, b in zip(patterns, got_seq, got_par):
+        assert sorted(a) == sorted(b) == _oracle_query(oracle, s, p, o)
+    assert par.stats.shard_batches == seq.stats.shard_batches
+    par.close()
+    seq.close()
+
+
+def test_set_serve_threads_swaps_pool():
+    _, svc = _build_pair(8, "predicate_hash", serve_threads=1)
+    assert svc.set_serve_threads(3) == 3
+    before = svc.query(None, 1, None)
+    assert svc.set_serve_threads("off") == 1
+    assert svc.query(None, 1, None) == before
+    svc.close()
+    svc.close()  # idempotent
+
+
+# --------------------------------------------- concurrent request plane
+def test_concurrent_query_threads_get_their_own_results():
+    triples, svc = _build_pair(9, "node_range", serve_threads=2)
+    oracle = {tuple(map(int, r)) for r in triples}
+    errors: list = []
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(40):
+                s, p, o = (int(v) for v in rng.integers(0, 12, 3))
+                qs, qp, qo = _bind(
+                    PATTERN_NAMES[int(rng.integers(0, 8))], s, p, o)
+                got = sorted(svc.query(qs, qp, qo))
+                want = _oracle_query(oracle, qs, qp, qo)
+                assert got == want, (qs, qp, qo)
+        except Exception as exc:
+            errors.append(exc)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    _join_all(threads)
+    assert not errors, errors[0]
+    svc.close()
+
+
+def test_query_many_skips_foreign_pending_tickets():
+    """query_many returns exactly its own patterns' results (in order)
+    even when another caller's submission is already pending — the
+    foreign ticket is flushed alongside but never leaks into the
+    returned list."""
+    triples, svc = _build_pair(10, "predicate_hash", serve_threads=1)
+    oracle = {tuple(map(int, r)) for r in triples}
+    svc.submit(None, None, None)  # someone else's pending ticket
+    patterns = [(None, 1, None), (3, None, None)]
+    got = svc.query_many(patterns)
+    assert len(got) == len(patterns)
+    for (s, p, o), res in zip(patterns, got):
+        assert sorted(res) == _oracle_query(oracle, s, p, o)
+    assert svc.pending == 0  # the foreign ticket was flushed alongside
+    assert svc.query_many([]) == []
+    svc.close()
+
+
+# --------------------------------------------------- stress oracle
+class _Churn(threading.Thread):
+    """Background mutator: inserts/deletes only churn-pool rows, tracking
+    its own applied set (it is the only writer of those rows)."""
+
+    def __init__(self, svc, pool, stop, errors, seed):
+        super().__init__(name="churn")
+        self.svc, self.stop, self.errors = svc, stop, errors
+        self.pool = pool  # np.ndarray of candidate rows
+        self.live: set = set()
+        self.rng = np.random.default_rng(seed)
+
+    def run(self):
+        try:
+            while not self.stop.is_set():
+                k = int(self.rng.integers(1, 6))
+                picks = self.pool[self.rng.integers(0, len(self.pool), k)]
+                want = {tuple(map(int, r)) for r in picks}
+                if self.rng.integers(0, 2):
+                    assert self.svc.insert_triples(picks) == \
+                        len(want - self.live)
+                    self.live |= want
+                else:
+                    assert self.svc.delete_triples(picks) == \
+                        len(want & self.live)
+                    self.live -= want
+        except Exception as exc:
+            self.errors.append(exc)
+
+
+class _Rebalancer(threading.Thread):
+    def __init__(self, svc, stop, errors, seed):
+        super().__init__(name="rebalance")
+        self.svc, self.stop, self.errors = svc, stop, errors
+        self.rng = np.random.default_rng(seed)
+
+    def run(self):
+        try:
+            while not self.stop.is_set():
+                self.svc.rebalance(
+                    force=True, max_moves=int(self.rng.integers(1, 64)))
+                time.sleep(0.005)
+        except Exception as exc:
+            self.errors.append(exc)
+
+
+def _stress_machine(strategy: str, *, seconds: float, n_query_threads: int,
+                    seed: int = 0, serve_threads: int = 2) -> None:
+    rng = np.random.default_rng(seed)
+    n_preds, stable_nodes, n_nodes = 4, 12, 24
+    stable = np.unique(_rows(rng, 60, stable_nodes, n_preds), axis=0)
+    stable_set = {tuple(map(int, r)) for r in stable}
+    # churn subjects live in [stable_nodes, n_nodes): disjoint from every
+    # stable subject, so stable-subject queries answer exactly mid-churn
+    churn_pool = np.unique(
+        np.stack([rng.integers(stable_nodes, n_nodes, 80),
+                  rng.integers(0, n_preds, 80),
+                  rng.integers(0, n_nodes, 80)], axis=1), axis=0)
+    churn_universe = {tuple(map(int, r)) for r in churn_pool}
+    svc = ShardedTripleService.build(
+        stable, n_nodes, n_preds, n_shards=3, strategy=strategy,
+        rebalance_skew=None, serve_threads=serve_threads,
+        delta_budget=32)
+
+    stop = threading.Event()
+    errors: list = []
+    churn = _Churn(svc, churn_pool, stop, errors, seed + 1)
+    reb = _Rebalancer(svc, stop, errors, seed + 2)
+
+    def reader(rseed):
+        rrng = np.random.default_rng(rseed)
+        try:
+            while not stop.is_set():
+                s = int(rrng.integers(0, stable_nodes))
+                p = int(rrng.integers(0, n_preds))
+                o = int(rrng.integers(0, n_nodes))
+                for pattern in PATTERN_NAMES:
+                    qs, qp, qo = _bind(pattern, s, p, o)
+                    got = sorted(svc.query(qs, qp, qo))
+                    want = _oracle_query(stable_set, qs, qp, qo)
+                    if qs is not None:
+                        # stable subject: churn can never contribute rows
+                        assert got == want, (pattern, qs, qp, qo)
+                    else:
+                        # unselective: exactly the stable answer plus some
+                        # matching subset of the churn universe
+                        extra = [r for r in got if r not in want]
+                        assert [r for r in got if r in want] == want, \
+                            (pattern, qs, qp, qo)
+                        for tp, (ts, to) in extra:
+                            assert (ts, tp, to) in churn_universe
+                            assert ts >= stable_nodes
+                            assert qp is None or tp == qp
+                            assert qo is None or to == qo
+        except Exception as exc:
+            errors.append(exc)
+
+    readers = [threading.Thread(target=reader, args=(seed + 10 + i,),
+                                name=f"reader-{i}")
+               for i in range(n_query_threads)]
+    for t in [churn, reb, *readers]:
+        t.start()
+    time.sleep(seconds)
+    stop.set()
+    _join_all([churn, reb, *readers])
+    assert not errors, errors[0]
+
+    # quiesced: drain any in-flight migration, then exact 8-pattern parity
+    svc.rebalance(force=True)
+    assert not svc.migration_active
+    final = stable_set | churn.live
+    for probe in list(sorted(final))[:5] or [(0, 0, 0)]:
+        s, p, o = probe
+        for pattern in PATTERN_NAMES:
+            qs, qp, qo = _bind(pattern, s, p, o)
+            assert sorted(svc.query(qs, qp, qo)) == \
+                _oracle_query(final, qs, qp, qo), (pattern, probe)
+    svc.close()
+
+
+@pytest.mark.parametrize("strategy", ["predicate_hash", "node_range"])
+def test_stress_queries_vs_mutation_and_rebalance(strategy):
+    _stress_machine(strategy, seconds=1.2, n_query_threads=3,
+                    seed=hash(strategy) % 1000)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ["predicate_hash", "node_range"])
+def test_stress_queries_vs_mutation_and_rebalance_slow(strategy):
+    _stress_machine(strategy, seconds=SLOW_SECONDS,
+                    n_query_threads=SLOW_THREADS,
+                    seed=hash(strategy) % 1000, serve_threads=4)
+
+
+# --------------------------------------------------- durable interleave
+def test_durable_concurrent_mutations_snapshot_reopen(tmp_path):
+    """Two mutator threads + query threads + a mid-run snapshot: WAL order
+    equals apply order, so reopening replays to exactly the final state."""
+    rng = np.random.default_rng(3)
+    n_preds, n_nodes = 3, 20
+    base = np.unique(_rows(rng, 40, 10, n_preds), axis=0)
+    base_set = {tuple(map(int, r)) for r in base}
+    dur = DurableShardedService.build(
+        base, n_nodes, n_preds, root=tmp_path, n_shards=2,
+        strategy="predicate_hash", rebalance_skew=None, serve_threads=2)
+
+    # disjoint churn pools per mutator (subjects 10..14 vs 15..19), so the
+    # final oracle is just the union of what each thread last held
+    pools = [np.unique(np.stack([rng.integers(10, 15, 40),
+                                 rng.integers(0, n_preds, 40),
+                                 rng.integers(0, n_nodes, 40)], axis=1),
+                       axis=0),
+             np.unique(np.stack([rng.integers(15, 20, 40),
+                                 rng.integers(0, n_preds, 40),
+                                 rng.integers(0, n_nodes, 40)], axis=1),
+                       axis=0)]
+    stop = threading.Event()
+    errors: list = []
+    churns = [_Churn(dur, pool, stop, errors, 50 + i)
+              for i, pool in enumerate(pools)]
+
+    def reader(rseed):
+        rrng = np.random.default_rng(rseed)
+        try:
+            while not stop.is_set():
+                s = int(rrng.integers(0, 10))
+                got = sorted(dur.query(s, None, None))
+                assert got == _oracle_query(base_set, s, None, None)
+        except Exception as exc:
+            errors.append(exc)
+
+    readers = [threading.Thread(target=reader, args=(70 + i,))
+               for i in range(2)]
+    for t in [*churns, *readers]:
+        t.start()
+    time.sleep(0.3)
+    dur.snapshot()  # exclusive: captures one instant, compacts the WAL
+    time.sleep(0.3)
+    stop.set()
+    _join_all([*churns, *readers])
+    assert not errors, errors[0]
+
+    final = base_set | churns[0].live | churns[1].live
+    assert sorted(dur.query(None, None, None)) == \
+        _oracle_query(final, None, None, None)
+    dur.close()
+
+    reopened = DurableShardedService.open(root=tmp_path)
+    assert sorted(reopened.query(None, None, None)) == \
+        _oracle_query(final, None, None, None)
+    for pattern in PATTERN_NAMES:
+        qs, qp, qo = _bind(pattern, 5, 1, 7)
+        assert sorted(reopened.query(qs, qp, qo)) == \
+            _oracle_query(final, qs, qp, qo), pattern
+    reopened.close()

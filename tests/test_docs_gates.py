@@ -1,0 +1,82 @@
+"""The docs gates themselves: the real repo must pass them, and the
+link checker must actually catch dead references (a gate that can't
+fail guards nothing)."""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _load(script):
+    spec = importlib.util.spec_from_file_location(
+        script.stem, script)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[script.stem] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+links = _load(ROOT / "scripts" / "check_docs_links.py")
+config = _load(ROOT / "scripts" / "check_docs_config.py")
+
+
+def test_repo_has_no_dead_doc_links():
+    assert links.dead_links(ROOT) == []
+
+
+def test_repo_config_docs_cover_all_referenced_knobs():
+    refs = config.referenced_vars(*(ROOT / d for d in config.SCAN_DIRS))
+    documented = config.documented_vars(ROOT / "docs" / "CONFIG.md")
+    assert set(refs) - documented == set()
+
+
+def _fake_repo(tmp_path, readme):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "real.py").write_text("x = 1\n")
+    (tmp_path / "README.md").write_text(readme)
+    return tmp_path
+
+
+def test_link_gate_catches_dead_markdown_link(tmp_path):
+    root = _fake_repo(tmp_path, "see [docs](docs/MISSING.md) please\n")
+    errs = links.dead_links(root)
+    assert len(errs) == 1 and "docs/MISSING.md" in errs[0]
+
+
+def test_link_gate_catches_missing_backtick_path(tmp_path):
+    root = _fake_repo(
+        tmp_path, "run `src/real.py` then `src/gone.py` and `state/out`\n")
+    errs = links.dead_links(root)
+    # `src/real.py` exists, `state/out` is not a scanned root, only
+    # `src/gone.py` is a dead reference
+    assert len(errs) == 1 and "src/gone.py" in errs[0]
+
+
+def test_link_gate_accepts_anchors_urls_and_dirs(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "A.md").write_text(
+        "[b](B.md#section) [self](#here) [web](https://x.invalid/y) `docs/`\n")
+    (tmp_path / "docs" / "B.md").write_text("# b\n")
+    (tmp_path / "README.md").write_text("[a](docs/A.md)\n")
+    assert links.dead_links(tmp_path) == []
+
+
+def test_link_gate_resolves_relative_to_containing_file(tmp_path):
+    # docs/A.md linking CONFIG.md must resolve inside docs/, not the root
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "A.md").write_text("[c](CONFIG.md)\n")
+    (tmp_path / "README.md").write_text("ok\n")
+    errs = links.dead_links(tmp_path)
+    assert len(errs) == 1 and "CONFIG.md" in errs[0]
+    (tmp_path / "docs" / "CONFIG.md").write_text("# c\n")
+    assert links.dead_links(tmp_path) == []
+
+
+def test_link_gate_ignores_pytest_node_ids(tmp_path):
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "tests" / "test_x.py").write_text("def test_a(): pass\n")
+    _fake_repo(tmp_path, "pinned by `tests/test_x.py::test_a`\n")
+    assert links.dead_links(tmp_path) == []
