@@ -89,6 +89,11 @@ def gate_metrics(bench: dict) -> dict[str, float]:
         # threaded vs sequential scatter fan-out (~1.0 on 1-core runners)
         out["serving_load.scatter_fanout_speedup"] = \
             load["scatter_fanout_speedup"]
+    if "replica_scaling_speedup" in load:
+        # read QPS at max replica groups vs one (~1.0 on 1-core runners):
+        # collapses when replica dispatch breaks or stops spreading load
+        out["serving_load.replica_scaling_speedup"] = \
+            load["replica_scaling_speedup"]
     return {k: float(v) for k, v in out.items()}
 
 
@@ -352,6 +357,8 @@ def main(smoke: bool = False, check: bool = False,
               f"{load_bench['saturation']['saturation_qps']:.0f},qps")
         print(f"serving_load/scatter_fanout_speedup,"
               f"{load_bench['scatter_fanout']['speedup']:.2f},x")
+        print(f"serving_load/replica_scaling_speedup,"
+              f"{load_bench['replica_scaling']['speedup']:.2f},x")
     p = plus[0]
     print(f"itr_plus/ttt-win/gain,{p['plus_gain']:.4f},fraction")
     for row in abl["loop_rules"]:

@@ -20,7 +20,14 @@ being silently absorbed by the generator. Three sections land in
 * ``scatter_fanout`` — the same unselective scatter workload executed
   sequentially (``serve_threads=1``) and threaded (one thread per core),
   whose ``speedup`` is the dimensionless signal the CI smoke gate tracks
-  (on a single-core runner it sits at ~1.0 by construction).
+  (on a single-core runner it sits at ~1.0 by construction);
+* ``replica_scaling`` — closed-loop read QPS over a durable tier as the
+  replica-group count grows 0 -> N (``enable_replication``, see
+  docs/ARCHITECTURE.md §11): owned point lookups under concurrent
+  clients, where extra replica groups dilute per-engine lock contention.
+  ``replica_scaling_speedup`` (QPS at max replicas over QPS at one) is
+  the smoke-gated signal; like the fan-out section it sits at ~1.0 on a
+  single-core runner (``cpu_count`` is recorded alongside).
 
 Knobs (flags override env, env overrides defaults): ``ITR_LOAD_DURATION``
 (seconds per measured window), ``ITR_LOAD_RATES`` (comma-separated offered
@@ -217,13 +224,88 @@ def _scatter_fanout(triples, n_nodes, n_preds, *, n_shards, reps,
     return out
 
 
+# -------------------------------------------------- replica scaling section
+def _closed_loop_qps(svc, patterns: list, clients: int, reps: int) -> float:
+    """Best-of-`reps` closed-loop QPS: `clients` threads each drain their
+    slice of `patterns` flat out; QPS = total requests / wall."""
+    chunks = [patterns[i::clients] for i in range(clients)]
+    best = 0.0
+    for _ in range(reps):
+        start = threading.Barrier(clients + 1)
+
+        def worker(chunk):
+            start.wait()
+            for s, p, o in chunk:
+                svc.query(s, p, o)
+
+        threads = [threading.Thread(target=worker, args=(c,)) for c in chunks]
+        for t in threads:
+            t.start()
+        start.wait()
+        t0 = time.perf_counter()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        if wall > 0:
+            best = max(best, len(patterns) / wall)
+    return best
+
+
+def _replica_scaling(triples, n_nodes, n_preds, *, n_shards, clients,
+                     n_queries, reps, counts, quiet: bool) -> dict:
+    """Read QPS vs replica-group count over one durable tier.
+
+    Cache disabled (a warm entry would answer without touching any
+    engine) and the workload is subject-bound ``sp?`` lookups — each
+    flush routes to exactly one shard's engine, so with replicas off the
+    clients contend on the primary's per-engine locks and each added
+    group dilutes that contention. The tier is quiesced (lag 0, no
+    mutations), isolating dispatch width as the only variable.
+    """
+    import tempfile
+
+    from repro.persist.service import DurableShardedService
+
+    rng = np.random.default_rng(7)
+    rows = triples[rng.integers(0, len(triples), n_queries)]
+    patterns = [(int(s), int(p), None) for s, p, _ in rows]
+    qps: list[dict] = []
+    with tempfile.TemporaryDirectory() as root:
+        svc = DurableShardedService.build(
+            triples, n_nodes, n_preds, root=os.path.join(root, "tier"),
+            n_shards=n_shards, strategy="node_range", cache=None,
+            rebalance_skew=None, serve_threads=1, fsync=False, replicas=0)
+        try:
+            for n in counts:
+                svc.enable_replication(n)
+                measured = _closed_loop_qps(svc, patterns, clients, reps)
+                qps.append({"replicas": int(n), "qps": measured})
+                if not quiet:
+                    print(f"replica scaling x{n}: {measured:.0f} qps "
+                          f"({clients} clients)")
+        finally:
+            svc.close()
+    by_count = {w["replicas"]: w["qps"] for w in qps}
+    base = by_count.get(1) or by_count[min(by_count)]
+    top = by_count[max(by_count)]
+    return {
+        "cpu_count": os.cpu_count(),
+        "clients": int(clients),
+        "n_queries": len(patterns),
+        "counts": [w["replicas"] for w in qps],
+        "read_qps": [w["qps"] for w in qps],
+        "speedup": top / base if base > 0 else 0.0,
+    }
+
+
 # ----------------------------------------------------------------- driver
 def run(dataset: str = "geo-coordinates-en", *, scale=None,
         duration: float | None = None, rates: tuple | None = None,
         clients: int | None = None, hot_frac: float | None = None,
         mutation_rate: float | None = None, seed: int | None = None,
-        n_shards: int = 4, fanout_reps: int = 3, quiet: bool = False,
-        json_path: str | None = BENCH_JSON) -> dict:
+        n_shards: int = 4, fanout_reps: int = 3,
+        replica_counts: tuple = (0, 1, 2, 4), replica_queries: int = 1500,
+        quiet: bool = False, json_path: str | None = BENCH_JSON) -> dict:
     """Run the load harness; returns (and optionally writes) the bench dict.
 
     Defaults resolve through the ``ITR_LOAD_*`` environment; pass
@@ -292,14 +374,20 @@ def run(dataset: str = "geo-coordinates-en", *, scale=None,
     bench["scatter_fanout"] = _scatter_fanout(
         ds.triples, ds.n_nodes, ds.n_preds, n_shards=n_shards,
         reps=fanout_reps, threads=resolve_serve_threads(None), quiet=quiet)
+    bench["replica_scaling"] = _replica_scaling(
+        ds.triples, ds.n_nodes, ds.n_preds, n_shards=n_shards,
+        clients=clients, n_queries=replica_queries, reps=fanout_reps,
+        counts=replica_counts, quiet=quiet)
 
     # dimensionless signals for the CI smoke gate (benchmarks.run --check):
     # achieved/offered collapses when the request plane stops keeping up,
-    # fan-out speedup collapses when threading stops helping (or breaks)
+    # fan-out and replica speedups collapse when parallel serving stops
+    # helping (or breaks)
     lat = bench["latency"]
     bench["smoke_signals"] = {
         "achieved_vs_offered": lat["achieved_qps"] / lat["offered_qps"],
         "scatter_fanout_speedup": bench["scatter_fanout"]["speedup"],
+        "replica_scaling_speedup": bench["replica_scaling"]["speedup"],
     }
     if not quiet:
         print(f"saturation: {bench['saturation']['saturation_qps']:.0f} qps "
@@ -316,7 +404,8 @@ def run_smoke(quiet: bool = True) -> dict:
     tracked JSON. The dict lands in the smoke artifact via benchmarks.run."""
     return run(scale=0.02, duration=0.4, rates=(60.0, 150.0), clients=2,
                hot_frac=0.5, mutation_rate=25.0, seed=0, n_shards=4,
-               fanout_reps=2, quiet=quiet, json_path=None)
+               fanout_reps=2, replica_counts=(0, 1, 2), replica_queries=300,
+               quiet=quiet, json_path=None)
 
 
 if __name__ == "__main__":

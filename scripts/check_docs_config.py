@@ -1,11 +1,14 @@
 #!/usr/bin/env python
 """Docs-consistency gate: every ITR_* env var referenced in src/,
-benchmarks/, or scripts/ must be documented in docs/CONFIG.md.
+benchmarks/, or scripts/ — or set by a workflow under
+.github/workflows/ — must be documented in docs/CONFIG.md.
 
 Run from the repo root (CI does): exits 1 listing any undocumented
 variable. Documented-but-unreferenced variables are reported as warnings
 only — a knob can legitimately be documented ahead of a staged rollout,
 but an undocumented live knob is exactly the rot this gate exists for.
+The workflow scan closes the test-lane gap: a budget knob only a CI lane
+sets (and only tests read) is still part of the operational surface.
 """
 from __future__ import annotations
 
@@ -30,6 +33,22 @@ def referenced_vars(*roots: Path) -> dict[str, list[str]]:
     return refs
 
 
+def workflow_vars(root: Path) -> dict[str, list[str]]:
+    """ITR_* names -> workflow files referencing them. A knob a CI lane
+    sets is live even when no python source under SCAN_DIRS reads it
+    (test-lane budgets like the nightly oracle knobs) — leaving it out of
+    CONFIG.md would hide a variable operators actually tune."""
+    refs: dict[str, list[str]] = {}
+    workflows = root / ".github" / "workflows"
+    if not workflows.is_dir():
+        return refs
+    for pattern in ("*.yml", "*.yaml"):
+        for path in sorted(workflows.glob(pattern)):
+            for name in set(ENV_RE.findall(path.read_text())):
+                refs.setdefault(name, []).append(str(path))
+    return refs
+
+
 def documented_vars(config_md: Path) -> set[str]:
     return set(ENV_RE.findall(config_md.read_text()))
 
@@ -41,6 +60,8 @@ def main() -> int:
         print(f"docs gate: {config_md} missing", file=sys.stderr)
         return 1
     refs = referenced_vars(*(root / d for d in SCAN_DIRS))
+    for name, files in workflow_vars(root).items():
+        refs.setdefault(name, []).extend(files)
     documented = documented_vars(config_md)
     missing = sorted(set(refs) - documented)
     for name in missing:
@@ -48,7 +69,8 @@ def main() -> int:
               f"but absent from docs/CONFIG.md", file=sys.stderr)
     for name in sorted(documented - set(refs)):
         print(f"docs gate: warning: {name} documented but no longer "
-              f"referenced under {'/'.join(SCAN_DIRS)}")
+              f"referenced under {'/'.join(SCAN_DIRS)} or "
+              f".github/workflows")
     print(f"docs gate: {len(refs)} env var(s) referenced, "
           f"{len(missing)} undocumented")
     return 1 if missing else 0

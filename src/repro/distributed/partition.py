@@ -191,6 +191,15 @@ def plan_from_dict(d: dict) -> PartitionPlan:
         else np.asarray(pred_assign, dtype=np.int64))
 
 
+def plans_equal(a: PartitionPlan, b: PartitionPlan) -> bool:
+    """Semantic plan equality (same routing for every row and pattern).
+
+    Plans that round-trip through the WAL (`plan_from_dict`) are new
+    objects, so identity alone cannot compare a primary's plan with a
+    replica's replayed copy; the serialized form is the routing state."""
+    return a is b or plan_to_dict(a) == plan_to_dict(b)
+
+
 def make_plan(strategy: str, n_shards: int, n_nodes: int, n_preds: int,
               triples: np.ndarray | None = None) -> PartitionPlan:
     """Build a partition plan.

@@ -148,10 +148,15 @@ class DurableShardedService:
     # -- construction ------------------------------------------------------
     @classmethod
     def build(cls, triples, n_nodes: int, n_preds: int, root=None,
-              fsync: bool | None = None, **kwargs) -> "DurableShardedService":
+              fsync: bool | None = None, replicas=None,
+              replica_dispatch=None, replica_max_lag=None,
+              **kwargs) -> "DurableShardedService":
         """Compress + shard `triples` (all :meth:`ShardedTripleService
         .build` kwargs pass through), then make the result durable: write
-        the initial snapshot under `root` and open the WAL."""
+        the initial snapshot under `root` and open the WAL. `replicas`
+        (default: ``ITR_REPLICAS``) > 0 additionally seeds that many read
+        replica groups from the fresh snapshot —
+        :meth:`enable_replication`."""
         root = resolve_snapshot_dir(root)
         service = ShardedTripleService.build(
             np.asarray(triples, dtype=np.int64), n_nodes, n_preds, **kwargs)
@@ -160,13 +165,16 @@ class DurableShardedService:
         self = cls(service, root, wal)
         self.snapshot()
         self._attach()
+        self.enable_replication(replicas, replica_dispatch, replica_max_lag)
         return self
 
     @classmethod
     def open(cls, root=None, *, fsync: bool | None = None, mmap: bool = True,
              verify: bool = True, max_batch: int = 1024, config=None,
              rebalance_skew=_DEFAULT_SKEW, cache=_DEFAULT_CACHE,
-             serve_threads: int | None = None) -> "DurableShardedService":
+             serve_threads: int | None = None, replicas=None,
+             replica_dispatch=None,
+             replica_max_lag=None) -> "DurableShardedService":
         """Recover a service from disk: newest complete snapshot + replay.
 
         Shards whose snapshot fails to load degrade (served as holes)
@@ -216,10 +224,63 @@ class DurableShardedService:
         self = cls(svc, root, wal, recovery=report)
         self._replay(report)
         self._attach()
+        if not failed:  # degraded tiers serve primary-only until restored
+            self.enable_replication(replicas, replica_dispatch,
+                                    replica_max_lag, mmap=mmap, verify=verify)
         return self
 
     def _attach(self) -> None:
         self.service._journal = self._on_journal
+
+    # -- read replication --------------------------------------------------
+    def enable_replication(self, n_replicas=None, dispatch=None,
+                           max_lag=None, *, mmap: bool = True,
+                           verify: bool = True, auto_sync: bool = True):
+        """Seed `n_replicas` read replica groups (default: resolve
+        ``ITR_REPLICAS``; 0 = disable) from the newest snapshot, attach
+        them to the router's dispatch, and catch them up to the live WAL.
+        Replaces (and closes) any existing replica tier; returns the
+        :class:`~repro.serve.replication.ReplicationManager`, or None when
+        resolving to zero replicas."""
+        from repro.serve.replication import (
+            ReplicationManager,
+            resolve_replicas,
+        )
+        svc = self.service
+        n = resolve_replicas(n_replicas)
+        old, svc._replicas = svc._replicas, None
+        if old is not None:
+            old.close()
+        if n <= 0:
+            return None
+        if svc.failed_shards:
+            raise RuntimeError(
+                f"cannot seed replicas with failed shards "
+                f"{sorted(svc.failed_shards)}: the snapshot they seed from "
+                "must cover every shard; restore with reingest_shard() and "
+                "snapshot() first")
+        manager = ReplicationManager(
+            svc, self.wal, self.root, n, dispatch, max_lag,
+            mmap=mmap, verify=verify, auto_sync=auto_sync)
+        manager.sync()  # groups start at the primary's state, lag 0
+        svc._replicas = manager
+        return manager
+
+    @property
+    def replicas(self):
+        """The live ReplicationManager (None when replication is off)."""
+        return self.service._replicas
+
+    def sync_replicas(self) -> list[int]:
+        """Drain the WAL tail into every replica group (quiesce); returns
+        records applied per group ([] when replication is off)."""
+        manager = self.service._replicas
+        return manager.sync() if manager is not None else []
+
+    def replica_stats(self) -> dict | None:
+        """Replica lag accounting + dispatch counters (None when off)."""
+        manager = self.service._replicas
+        return manager.stats() if manager is not None else None
 
     # -- mutation (write-ahead) --------------------------------------------
     def insert_triples(self, triples) -> int:
@@ -347,62 +408,18 @@ class DurableShardedService:
         svc.rebalance_skew = None  # no auto-rebalance mid-replay
         try:
             for payload in records:
-                self._apply_record(svc, payload, report)
+                apply_wal_record(svc, payload, report)
                 report.replayed_records += 1
         finally:
             svc.rebalance_skew = saved_skew
 
-    def _apply_record(self, svc: ShardedTripleService, payload: bytes,
-                      report: RecoveryReport) -> None:
-        op = payload[0]
-        if op in (OP_INSERT, OP_DELETE):
-            rows = _unpack_rows(payload[1:])
-            rows = self._drop_failed(svc, rows, report)
-            if len(rows) == 0:
-                return
-            if op == OP_INSERT:
-                svc.insert_triples(rows)
-            else:
-                svc.delete_triples(rows)
-        elif op == OP_MIGRATE:
-            src, dst = _MIGRATE_HDR.unpack_from(payload, 1)
-            batch = _unpack_rows(payload[1 + _MIGRATE_HDR.size:])
-            if src in svc.failed_shards or dst in svc.failed_shards:
-                report.skipped_batches += 1
-                return
-            if svc._migration is not None:
-                svc._migration.discard(batch)
-            moved = svc._apply_migration_batch(src, dst, batch)
-            svc.stats.migrated_rows += moved
-        elif op == OP_REBALANCE_BEGIN:
-            new_plan = plan_from_dict(json.loads(payload[1:].decode()))
-            svc._migration = RebalancePlan(
-                svc.plan, new_plan, migration_moves(new_plan, svc.engines))
-            report.migration_resumed = not svc._migration.done
-        elif op == OP_PLAN_SWAP:
-            svc.plan = plan_from_dict(json.loads(payload[1:].decode()))
-            svc._migration = None
-            report.migration_resumed = False
-        else:
-            raise SnapshotError(f"unknown WAL op code {op}")
-
-    @staticmethod
-    def _drop_failed(svc: ShardedTripleService, rows: np.ndarray,
-                     report: RecoveryReport) -> np.ndarray:
-        if not svc.failed_shards or len(rows) == 0:
-            return rows
-        bad = sorted(svc.failed_shards)
-        keep = ~np.isin(svc.plan.route_triples(rows), bad)
-        if svc._migration is not None:
-            keep &= ~np.isin(
-                svc._migration.new_plan.route_triples(rows), bad)
-        report.skipped_rows += int((~keep).sum())
-        return rows[keep]
-
     # -- lifecycle / delegation --------------------------------------------
     def close(self) -> None:
+        """Shut down the whole hierarchy: journal detached, replica tier
+        (if any) and scatter pools drained, WAL closed. Idempotent — every
+        layer's close is a no-op the second time."""
         self.service._journal = None
-        self.service.close()  # drain the scatter fan-out pool
+        self.service.close()  # drains the replica tier + fan-out pool
         self.wal.close()
 
     def __enter__(self) -> "DurableShardedService":
@@ -416,6 +433,69 @@ class DurableShardedService:
         # (submit/flush/query/rebalance/rebuild/stats/...); mutations are
         # intercepted above so they hit the log first
         return getattr(self.service, name)
+
+
+# -- record application ------------------------------------------------------
+
+def apply_wal_record(svc: ShardedTripleService, payload: bytes,
+                     report: RecoveryReport | None = None) -> None:
+    """Apply one WAL payload to `svc` — the shared replay primitive.
+
+    Both consumers of the log go through this switch: recovery replay
+    (`DurableShardedService.open`, which passes its `report` so rows and
+    migration batches touching failed shards are dropped and counted) and
+    replica catch-up (`repro.serve.replication`, no report — replica
+    groups are seeded whole, so nothing is droppable and any failure
+    raises into the group's reseed path). One switch means a replica that
+    tailed the log and a service that replayed it after a crash land on
+    byte-identical state.
+    """
+    if report is None:
+        report = RecoveryReport()
+    op = payload[0]
+    if op in (OP_INSERT, OP_DELETE):
+        rows = _unpack_rows(payload[1:])
+        rows = _drop_failed(svc, rows, report)
+        if len(rows) == 0:
+            return
+        if op == OP_INSERT:
+            svc.insert_triples(rows)
+        else:
+            svc.delete_triples(rows)
+    elif op == OP_MIGRATE:
+        src, dst = _MIGRATE_HDR.unpack_from(payload, 1)
+        batch = _unpack_rows(payload[1 + _MIGRATE_HDR.size:])
+        if src in svc.failed_shards or dst in svc.failed_shards:
+            report.skipped_batches += 1
+            return
+        if svc._migration is not None:
+            svc._migration.discard(batch)
+        moved = svc._apply_migration_batch(src, dst, batch)
+        svc.stats.migrated_rows += moved
+    elif op == OP_REBALANCE_BEGIN:
+        new_plan = plan_from_dict(json.loads(payload[1:].decode()))
+        svc._migration = RebalancePlan(
+            svc.plan, new_plan, migration_moves(new_plan, svc.engines))
+        report.migration_resumed = not svc._migration.done
+    elif op == OP_PLAN_SWAP:
+        svc.plan = plan_from_dict(json.loads(payload[1:].decode()))
+        svc._migration = None
+        report.migration_resumed = False
+    else:
+        raise SnapshotError(f"unknown WAL op code {op}")
+
+
+def _drop_failed(svc: ShardedTripleService, rows: np.ndarray,
+                 report: RecoveryReport) -> np.ndarray:
+    if not svc.failed_shards or len(rows) == 0:
+        return rows
+    bad = sorted(svc.failed_shards)
+    keep = ~np.isin(svc.plan.route_triples(rows), bad)
+    if svc._migration is not None:
+        keep &= ~np.isin(
+            svc._migration.new_plan.route_triples(rows), bad)
+    report.skipped_rows += int((~keep).sum())
+    return rows[keep]
 
 
 # -- snapshot directory scanning -------------------------------------------

@@ -22,6 +22,13 @@ only place a crashed-but-fsynced log can be damaged) and reported, not
 raised. Payloads are opaque here; `repro.persist.service` packs them
 (numpy row blocks, JSON plan blobs) and owns the op-code registry below.
 
+The same tolerant scan also serves *incremental* consumers:
+:func:`tail_wal_records` / :class:`WalCursor` read only the records
+appended since a byte offset — the feed that keeps read replicas
+(`repro.serve.replication`) fresh — and flag a log compacted underneath
+the cursor (``truncated``) so the consumer reseeds from a snapshot
+instead of silently replaying from offset 0.
+
 Durability knob: ``ITR_WAL_FSYNC`` (default on) controls fsync-per-append.
 Off trades the crash-durability of the last few records for append
 throughput — replay correctness is unaffected, only the loss window.
@@ -67,6 +74,10 @@ class WalReadReport:
     valid_bytes: int = 0    # offset of the first byte NOT covered by a record
     torn_tail: bool = False  # file continued past valid_bytes with garbage
     torn_reason: str = ""
+    #: tail-only signal: the log is now SHORTER than the requested start
+    #: offset — it was compacted (``reset()``) underneath the cursor, and
+    #: nothing read from the current file can continue the old position
+    truncated: bool = False
     errors: list = field(default_factory=list)
 
 
@@ -96,9 +107,15 @@ class WriteAheadLog:
         # abandoned handle (simulated kill) can never flush half-written
         # frames AFTER recovery has already read the file
         self._f = open(self.path, "ab" if not fresh else "wb", buffering=0)
+        #: compactions (`reset()`) since this handle opened — a tail cursor
+        #: seeded against one incarnation of the log is invalid as soon as
+        #: this counter moves, even if the file has regrown past its offset
+        self.resets = 0
         if fresh:
             self._f.write(MAGIC)
             self._flush()
+            self._offset = len(MAGIC)
+            self.n_records = 0
         else:
             _, self.recovery = read_wal_records(self.path)
             if self.recovery.torn_tail:
@@ -106,6 +123,8 @@ class WriteAheadLog:
                 # make every later record unreadable to the next recovery
                 self._f.truncate(self.recovery.valid_bytes)
                 self._flush()
+            self._offset = self.recovery.valid_bytes
+            self.n_records = self.recovery.n_records
 
     # -- writing -----------------------------------------------------------
     def append(self, payload: bytes) -> None:
@@ -122,6 +141,8 @@ class WriteAheadLog:
             crash_point("wal.torn")
             self._f.write(frame[half:])
             self._flush()
+            self._offset += len(frame)
+            self.n_records += 1
         crash_point("wal.post_append")
 
     def _flush(self) -> None:
@@ -131,10 +152,21 @@ class WriteAheadLog:
 
     def reset(self) -> None:
         """Truncate to an empty log (after a snapshot makes the records
-        redundant — log compaction)."""
-        self._f.truncate(len(MAGIC))
-        self._f.seek(len(MAGIC))
-        self._flush()
+        redundant — log compaction). Bumps ``resets`` so tail cursors know
+        their offsets died with the old incarnation."""
+        with self._lock:
+            self._f.truncate(len(MAGIC))
+            self._f.seek(len(MAGIC))
+            self._flush()
+            self._offset = len(MAGIC)
+            self.n_records = 0
+            self.resets += 1
+
+    @property
+    def offset(self) -> int:
+        """Byte offset one past the last acknowledged record (the position
+        a fully caught-up tail cursor sits at)."""
+        return self._offset
 
     def close(self) -> None:
         if not self._f.closed:
@@ -171,7 +203,14 @@ def read_wal_records(path) -> tuple[list[bytes], WalReadReport]:
     if data[:len(MAGIC)] != MAGIC:
         raise ValueError(
             f"{path}: bad WAL magic {data[:len(MAGIC)]!r} (expected {MAGIC!r})")
-    pos = len(MAGIC)
+    _scan_frames(data, len(MAGIC), records, report)
+    return records, report
+
+
+def _scan_frames(data: bytes, pos: int, records: list, report: WalReadReport
+                 ) -> None:
+    """Walk frames from byte `pos`, filling `records`/`report` — the one
+    tolerant scan both full replay and incremental tailing go through."""
     report.valid_bytes = pos
     while pos < len(data):
         if pos + _FRAME.size > len(data):
@@ -197,4 +236,68 @@ def read_wal_records(path) -> tuple[list[bytes], WalReadReport]:
         report.valid_bytes = pos
     if report.torn_tail:
         report.errors.append(report.torn_reason)
+
+
+def tail_wal_records(path, from_offset: int) -> tuple[list[bytes], WalReadReport]:
+    """Incremental tolerant read: intact records from byte `from_offset` on.
+
+    The torn-tail rules are exactly :func:`read_wal_records`' — a frame
+    running past EOF or failing its CRC stops the scan and is reported,
+    not raised, and ``report.valid_bytes`` is where the NEXT tail should
+    start (so a cursor parked on a torn final record resumes cleanly once
+    the append completes). Two extra contracts for cursors:
+
+    * ``report.truncated`` is set when the file is now shorter than
+      `from_offset` (or gone entirely while the cursor was mid-log): the
+      log was compacted underneath the cursor, and the caller must reseed
+      from a snapshot — silently rescanning from offset 0 would replay
+      history the cursor already consumed onto state that already has it.
+    * `from_offset` must be a frame boundary of the SAME log incarnation
+      (a compaction followed by regrowth past the old offset is undetectable
+      here — track :attr:`WriteAheadLog.resets` for that case).
+    """
+    report = WalReadReport()
+    records: list[bytes] = []
+    from_offset = max(int(from_offset), len(MAGIC))
+    if not os.path.exists(path):
+        report.truncated = from_offset > len(MAGIC)
+        return records, report
+    with open(path, "rb") as f:
+        data = f.read()
+    if len(data) < len(MAGIC):
+        report.truncated = from_offset > len(MAGIC)
+        report.torn_tail = len(data) > 0
+        report.torn_reason = "short header" if data else ""
+        return records, report
+    if data[:len(MAGIC)] != MAGIC:
+        raise ValueError(
+            f"{path}: bad WAL magic {data[:len(MAGIC)]!r} (expected {MAGIC!r})")
+    if from_offset > len(data):
+        report.truncated = True
+        report.valid_bytes = from_offset  # nothing here continues the cursor
+        return records, report
+    _scan_frames(data, from_offset, records, report)
     return records, report
+
+
+@dataclass
+class WalCursor:
+    """A resumable tail position over one WAL file.
+
+    ``tail()`` drains every record appended since the last call and
+    advances; on a torn tail it stops at the damage and resumes past it on
+    a later call (once the append completes). On truncation the cursor
+    does NOT advance — the report's ``truncated`` flag tells the owner to
+    reseed from a snapshot and start a fresh cursor.
+    """
+
+    path: str
+    offset: int = len(MAGIC)
+    records: int = 0   # records consumed since the cursor was seeded
+
+    def tail(self) -> tuple[list[bytes], WalReadReport]:
+        recs, report = tail_wal_records(self.path, self.offset)
+        if not report.truncated:
+            self.offset = report.valid_bytes
+            self.records += len(recs)
+        return recs, report

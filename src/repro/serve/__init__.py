@@ -1,5 +1,14 @@
 from repro.serve.concurrency import RWLock, resolve_serve_threads
 from repro.serve.engine import GenerationResult, ServeEngine
+from repro.serve.replication import (
+    ReplicaGroup,
+    ReplicaSet,
+    ReplicationManager,
+    ShardReplica,
+    resolve_replica_dispatch,
+    resolve_replica_max_lag,
+    resolve_replicas,
+)
 from repro.serve.sharded import ShardedServiceStats, ShardedTripleService
 from repro.serve.triple_service import (
     MicroBatchService,
@@ -15,6 +24,13 @@ __all__ = [
     "ServiceStats",
     "ShardedTripleService",
     "ShardedServiceStats",
+    "ReplicationManager",
+    "ReplicaGroup",
+    "ReplicaSet",
+    "ShardReplica",
     "RWLock",
     "resolve_serve_threads",
+    "resolve_replicas",
+    "resolve_replica_dispatch",
+    "resolve_replica_max_lag",
 ]

@@ -149,6 +149,7 @@ class ShardedServiceStats:
     rebalances: int = 0   # migrations started (auto-trigger + explicit)
     migrated_rows: int = 0  # rows moved between shards by rebalancing
     degraded_patterns: int = 0  # patterns answered with a failed shard's hole
+    replica_flushes: int = 0  # flushes served by a read replica group
     total_s: float = 0.0
     last_flush_qps: float = 0.0
 
@@ -204,6 +205,17 @@ class ShardedTripleService(MicroBatchService):
         # durability hook (repro.persist.service installs it): called as
         # _journal(kind, payload) BEFORE a rebalance state change applies
         self._journal = None
+        # cache-namespace indirection: shard k's entries live under
+        # namespace _cache_ns[k] of the shared tier, merged scatter results
+        # under _merged_ns. The primary uses the identity mapping; replica
+        # group services (repro.serve.replication) get disjoint negative
+        # namespaces, so a lagging replica serves from its own generation's
+        # entries and never mixes them with the primary's fresher ones.
+        self._cache_ns: list[int] = list(range(plan.n_shards))
+        self._merged_ns: int = _MERGED_SHARD
+        # read-replica dispatch (a ReplicationManager once the durable
+        # service enables replication; flushes then prefer a replica group)
+        self._replicas = None
 
     # -- construction ----------------------------------------------------
     @classmethod
@@ -261,7 +273,24 @@ class ShardedTripleService(MicroBatchService):
         n = len(s)
         t0 = time.perf_counter()
         with self._rw.read():
-            view = self._run(s, p, o)
+            group = None
+            if self._replicas is not None and not self._rw.write_held:
+                # write_held while we hold read means WE are the writer (a
+                # write-locked probe, e.g. contains_triples mid-mutation):
+                # it must observe the primary's half-applied state, not a
+                # replica's. Plain readers can never see write_held here.
+                group = self._replicas.acquire()
+            if group is not None:
+                try:
+                    # the whole flush runs on ONE consistent replica group,
+                    # so merged scatter results never mix freshness levels;
+                    # the group's own read lock excludes its WAL-tail applies
+                    with group.service._rw.read():
+                        view = group.service._run(s, p, o)
+                finally:
+                    self._replicas.release(group)
+            else:
+                view = self._run(s, p, o)
         dt = time.perf_counter() - t0
         with self._stats_lock:
             st = self.stats
@@ -270,6 +299,8 @@ class ShardedTripleService(MicroBatchService):
             st.results += view.total_results()
             st.total_s += dt
             st.last_flush_qps = n / dt if dt > 0 else 0.0
+            if group is not None:
+                st.replica_flushes += 1
         return view
 
     # -- fan-out pool ------------------------------------------------------
@@ -285,8 +316,14 @@ class ShardedTripleService(MicroBatchService):
         return self.serve_threads
 
     def close(self) -> None:
-        """Drain the fan-out pool (idempotent; the service stays usable —
-        a later threaded flush just re-creates it)."""
+        """Drain the fan-out pool and shut down any attached replica tier
+        (idempotent across the whole hierarchy — every close here and in
+        the replica groups' own services is a no-op the second time; the
+        primary service itself stays usable, a later threaded flush just
+        re-creates its pool)."""
+        replicas, self._replicas = self._replicas, None
+        if replicas is not None:
+            replicas.close()  # closes each group service's pool too
         with self._pool_lock:
             pool, self._pool = self._pool, None
         if pool is not None:
@@ -318,7 +355,7 @@ class ShardedTripleService(MicroBatchService):
         merged_hits = 0
         for u in np.flatnonzero(routes < 0):
             u = int(u)
-            hit = cache.lookup(u_s[u], u_p[u], u_o[u], shard=_MERGED_SHARD) \
+            hit = cache.lookup(u_s[u], u_p[u], u_o[u], shard=self._merged_ns) \
                 if cache is not None else None
             if hit is None:
                 scatter.append(u)
@@ -383,7 +420,8 @@ class ShardedTripleService(MicroBatchService):
             entry = _freeze_entry(concat_ragged(chunks))
             entries[u] = entry
             if cache is not None:
-                cache.insert(u_s[u], u_p[u], u_o[u], entry, shard=_MERGED_SHARD)
+                cache.insert(u_s[u], u_p[u], u_o[u], entry,
+                             shard=self._merged_ns)
         for u in range(nu):  # shards==0 or routing gaps: empty result
             if entries[u] is None:
                 entries[u] = _freeze_entry(concat_ragged([]))
@@ -772,7 +810,8 @@ class ShardedTripleService(MicroBatchService):
         grammar, _ = compress(graph, table, self.config)
         engine = TripleQueryEngine(
             grammar,
-            cache=self.cache.shard_view(k) if self.cache is not None else None,
+            cache=self.cache.shard_view(self._cache_ns[k])
+            if self.cache is not None else None,
             config=self.config)
         engine._base_edges = len(rows)
         return engine
@@ -788,8 +827,8 @@ class ShardedTripleService(MicroBatchService):
             return
         shards = range(self.n_shards) if shard is None else [shard]
         for k in shards:
-            self.cache.bump_generation(k)
-        self.cache.bump_generation(_MERGED_SHARD)
+            self.cache.bump_generation(self._cache_ns[k])
+        self.cache.bump_generation(self._merged_ns)
 
     def cache_stats(self):
         """Shared-tier cache counters (None when caching is disabled)."""

@@ -32,6 +32,35 @@ def test_repo_config_docs_cover_all_referenced_knobs():
     assert set(refs) - documented == set()
 
 
+def test_repo_config_docs_cover_all_workflow_knobs():
+    # knobs only CI lanes set (nightly oracle budgets) are operational
+    # surface too: every ITR_* in .github/workflows must be in CONFIG.md
+    refs = config.workflow_vars(ROOT)
+    assert refs  # the workflows do set ITR_* knobs — the scan sees them
+    documented = config.documented_vars(ROOT / "docs" / "CONFIG.md")
+    assert set(refs) - documented == set()
+
+
+def test_config_gate_catches_workflow_only_undocumented_knob(tmp_path):
+    root = _fake_repo(tmp_path, "readme\n")
+    (root / "docs" / "CONFIG.md").write_text(
+        "| `ITR_DOCUMENTED` | `1` | on |\n")
+    wf = root / ".github" / "workflows"
+    wf.mkdir(parents=True)
+    (wf / "nightly.yml").write_text(
+        "env:\n  ITR_DOCUMENTED: '1'\n  ITR_WORKFLOW_ONLY: '9'\n")
+    refs = config.workflow_vars(root)
+    assert sorted(refs) == ["ITR_DOCUMENTED", "ITR_WORKFLOW_ONLY"]
+    assert refs["ITR_WORKFLOW_ONLY"] == [str(wf / "nightly.yml")]
+    documented = config.documented_vars(root / "docs" / "CONFIG.md")
+    assert set(refs) - documented == {"ITR_WORKFLOW_ONLY"}
+
+
+def test_workflow_scan_tolerates_missing_workflows_dir(tmp_path):
+    root = _fake_repo(tmp_path, "readme\n")
+    assert config.workflow_vars(root) == {}
+
+
 def _fake_repo(tmp_path, readme):
     (tmp_path / "docs").mkdir()
     (tmp_path / "src").mkdir()

@@ -1,0 +1,576 @@
+"""Read-replica tier: WAL tail cursors, snapshot seeding, dispatch, and
+the replica-consistency oracle.
+
+Three layers of coverage:
+
+* `repro.persist.wal` incremental tailing — torn final record mid-tail
+  (the cursor stops cleanly at the damage and resumes once the append
+  completes) and tailing across a ``reset()`` compaction (the cursor
+  must see ``truncated`` and NEVER silently rescan from offset 0).
+* `repro.serve.replication` mechanics — knob resolution, dispatch
+  policies and the lag bound, group-private cache generations, reseed
+  failover after a snapshot compacts the log under a lagging group,
+  rebalance state propagating through the WAL feed, and idempotent
+  close across the whole service hierarchy.
+* the replica-consistency oracle (the CI acceptance bar): after a
+  quiesce (``sync_replicas`` with no concurrent mutations) every
+  replica group answers all 8 (S,P,O) pattern shapes identically to
+  the primary, for both partition strategies, including after a forced
+  lag-induced reseed. The nightly lane adds a churn variant
+  (``@slow``): concurrent mutations + dispatched reads + periodic
+  syncs and snapshots, budget via ``ITR_CHURN_SECONDS``.
+"""
+import os
+import threading
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.distributed.partition import STRATEGIES
+from repro.persist.service import DurableShardedService
+from repro.persist.wal import (
+    _FRAME,
+    MAGIC,
+    WalCursor,
+    WriteAheadLog,
+    tail_wal_records,
+)
+from repro.serve.replication import (
+    DEFAULT_MAX_LAG,
+    resolve_replica_dispatch,
+    resolve_replica_max_lag,
+    resolve_replicas,
+)
+
+PATTERN_NAMES = ["s??", "?p?", "??o", "sp?", "s?o", "?po", "spo", "???"]
+
+N_NODES, N_PREDS = 24, 4
+
+
+def _bind(pattern, s, p, o):
+    return (s if pattern[0] == "s" else None,
+            p if pattern[1] == "p" else None,
+            o if pattern[2] == "o" else None)
+
+
+def _oracle_query(triples: set, s, p, o) -> list[tuple]:
+    """Reference answer in the service's result shape: (p, (s, o))."""
+    return sorted(
+        (tp, (ts, to)) for ts, tp, to in triples
+        if (s is None or ts == s) and (p is None or tp == p)
+        and (o is None or to == o))
+
+
+def _check_all_patterns(svc, oracle: set, probe, ctx="") -> None:
+    s, p, o = (int(v) for v in probe)
+    for pattern in PATTERN_NAMES:
+        qs, qp, qo = _bind(pattern, s, p, o)
+        got = sorted(svc.query(qs, qp, qo))
+        want = _oracle_query(oracle, qs, qp, qo)
+        assert got == want, (ctx, pattern, (s, p, o))
+
+
+def _rand_rows(rng, k, n_nodes=N_NODES, n_preds=N_PREDS) -> np.ndarray:
+    return np.stack([rng.integers(0, n_nodes, k),
+                     rng.integers(0, n_preds, k),
+                     rng.integers(0, n_nodes, k)], axis=1)
+
+
+def _probes(rng, oracle: set, k=3):
+    live = sorted(oracle)
+    out = [live[int(rng.integers(0, len(live)))] for _ in range(k) if live]
+    out.append(tuple(int(v) for v in _rand_rows(rng, 1)[0]))
+    return out
+
+
+def _build(tmp_path, *, strategy="predicate_hash", n_shards=3, seed=0,
+           n_edges=60, **kwargs):
+    rng = np.random.default_rng(seed)
+    base = np.unique(_rand_rows(rng, n_edges), axis=0)
+    oracle = {tuple(map(int, r)) for r in base}
+    svc = DurableShardedService.build(
+        base, N_NODES, N_PREDS, root=str(tmp_path / "store"),
+        n_shards=n_shards, strategy=strategy, fsync=False,
+        rebalance_skew=None, serve_threads=1, **kwargs)
+    return svc, oracle, rng
+
+
+def _mutate(svc, oracle, rng, n_ins=12, n_del=5):
+    ins = _rand_rows(rng, n_ins)
+    svc.insert_triples(ins)
+    oracle.update(tuple(map(int, r)) for r in ins)
+    if oracle and n_del:
+        live = sorted(oracle)
+        idx = rng.integers(0, len(live), min(n_del, len(live)))
+        dele = np.array([live[int(i)] for i in idx], dtype=np.int64)
+        svc.delete_triples(dele)
+        oracle.difference_update(tuple(map(int, r)) for r in dele)
+
+
+# -- WAL tailing edge cases ---------------------------------------------
+
+
+def test_tail_wal_records_incremental(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path, fsync=False)
+    wal.append(b"alpha")
+    mid = wal.offset
+    wal.append(b"beta")
+    wal.append(b"gamma")
+
+    recs, report = tail_wal_records(path, len(MAGIC))
+    assert recs == [b"alpha", b"beta", b"gamma"]
+    assert report.valid_bytes == wal.offset and not report.truncated
+
+    recs, report = tail_wal_records(path, mid)
+    assert recs == [b"beta", b"gamma"] and not report.truncated
+    # fully caught up: nothing new, offset parked at the end
+    recs, report = tail_wal_records(path, wal.offset)
+    assert recs == [] and report.valid_bytes == wal.offset
+    wal.close()
+
+
+def test_wal_cursor_resumes_across_appends(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path, fsync=False)
+    cur = WalCursor(path)
+    wal.append(b"one")
+    recs, _ = cur.tail()
+    assert recs == [b"one"] and cur.records == 1
+    wal.append(b"two")
+    wal.append(b"three")
+    recs, _ = cur.tail()
+    assert recs == [b"two", b"three"] and cur.records == 3
+    assert cur.offset == wal.offset
+    recs, _ = cur.tail()
+    assert recs == []
+    wal.close()
+
+
+def test_tail_stops_cleanly_at_torn_final_record(tmp_path):
+    """A torn final record mid-tail stops the cursor at the damage; once
+    the append completes the same cursor resumes and reads it."""
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path, fsync=False)
+    wal.append(b"committed")
+    cur = WalCursor(path)
+    recs, _ = cur.tail()
+    assert recs == [b"committed"]
+    parked = cur.offset
+
+    payload = b"torn-in-half"
+    frame = _FRAME.pack(len(payload), zlib.crc32(payload)) + payload
+    half = len(frame) // 2
+    with open(path, "ab") as f:
+        f.write(frame[:half])  # the kill-mid-append simulation
+
+    recs, report = cur.tail()
+    assert recs == [] and report.torn_tail and not report.truncated
+    assert cur.offset == parked  # parked exactly at the damage
+
+    with open(path, "ab") as f:
+        f.write(frame[half:])  # append completes
+    recs, report = cur.tail()
+    assert recs == [payload] and not report.torn_tail
+    assert cur.records == 2
+    wal.close()
+
+
+def test_tail_across_reset_detects_truncation(tmp_path):
+    """Compaction under a live cursor must surface ``truncated`` — never
+    a silent replay from offset 0 (which would double-apply history)."""
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path, fsync=False)
+    for i in range(3):
+        wal.append(b"rec%d" % i)
+    cur = WalCursor(path)
+    cur.tail()
+    assert cur.records == 3
+    parked = cur.offset
+
+    assert wal.resets == 0
+    wal.reset()  # snapshot() compacts the log exactly like this
+    assert wal.resets == 1 and wal.n_records == 0
+    assert wal.offset == len(MAGIC)
+
+    recs, report = cur.tail()
+    assert report.truncated
+    assert recs == []              # NOT the pre-reset records again
+    assert cur.offset == parked    # cursor did not move
+    assert cur.records == 3
+
+    # even after the log regrows, a shorter-than-cursor file still reads
+    # truncated; regrowth PAST the old offset is the resets-counter case
+    wal.append(b"fresh")
+    assert wal.offset < parked
+    recs, report = cur.tail()
+    assert report.truncated and recs == []
+    wal.close()
+
+
+def test_wal_bookkeeping_survives_reopen(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path, fsync=False)
+    wal.append(b"a")
+    wal.append(b"bb")
+    end = wal.offset
+    wal.close()
+    wal2 = WriteAheadLog(path, fsync=False)
+    assert wal2.offset == end and wal2.n_records == 2
+    assert wal2.resets == 0  # incarnation counter is per-handle
+    wal2.close()
+
+
+# -- knob resolution ------------------------------------------------------
+
+
+def test_resolve_replicas(monkeypatch):
+    assert resolve_replicas(3) == 3
+    assert resolve_replicas(0) == 0
+    assert resolve_replicas(-2) == 0
+    assert resolve_replicas("off") == 0
+    monkeypatch.delenv("ITR_REPLICAS", raising=False)
+    assert resolve_replicas() == 0
+    monkeypatch.setenv("ITR_REPLICAS", "2")
+    assert resolve_replicas() == 2
+    monkeypatch.setenv("ITR_REPLICAS", "banana")
+    assert resolve_replicas() == 0
+
+
+def test_resolve_replica_dispatch(monkeypatch):
+    assert resolve_replica_dispatch("least_loaded") == "least_loaded"
+    assert resolve_replica_dispatch("sideways") == "round_robin"
+    monkeypatch.setenv("ITR_REPLICA_DISPATCH", "least_loaded")
+    assert resolve_replica_dispatch() == "least_loaded"
+    monkeypatch.delenv("ITR_REPLICA_DISPATCH")
+    assert resolve_replica_dispatch() == "round_robin"
+
+
+def test_resolve_replica_max_lag(monkeypatch):
+    assert resolve_replica_max_lag(0) == 0
+    assert resolve_replica_max_lag(7) == 7
+    assert resolve_replica_max_lag(-1) is None
+    assert resolve_replica_max_lag("off") is None
+    assert resolve_replica_max_lag("unbounded") is None
+    monkeypatch.delenv("ITR_REPLICA_MAX_LAG", raising=False)
+    assert resolve_replica_max_lag() == DEFAULT_MAX_LAG
+    monkeypatch.setenv("ITR_REPLICA_MAX_LAG", "64")
+    assert resolve_replica_max_lag() == 64
+
+
+# -- replica-consistency oracle -------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_replica_parity_after_quiesce(tmp_path, strategy):
+    """The acceptance bar: after quiesce every replica group answers all
+    8 pattern shapes identically to the primary, on both strategies."""
+    svc, oracle, rng = _build(tmp_path, strategy=strategy, replicas=2)
+    try:
+        mgr = svc.replicas
+        assert mgr is not None and len(mgr.groups) == 2
+        for _ in range(3):
+            _mutate(svc, oracle, rng)
+        svc.sync_replicas()
+        stats = svc.replica_stats()
+        assert stats["max_lag_records"] == 0
+        assert stats["stale_groups"] == 0
+        for probe in _probes(rng, oracle):
+            # through the router's dispatch path (replicas serve)...
+            _check_all_patterns(svc, oracle, probe, ctx=f"dispatch/{strategy}")
+            # ...and pinned to each group directly
+            for g in mgr.groups:
+                _check_all_patterns(g.service, oracle, probe,
+                                    ctx=f"group{g.index}/{strategy}")
+        assert svc.service.stats.replica_flushes > 0
+    finally:
+        svc.close()
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_forced_lag_reseed_parity(tmp_path, strategy):
+    """snapshot() while groups lag compacts the log underneath their
+    cursors: sync must reseed (never silently replay) and land at exact
+    parity, including records appended after the compaction."""
+    svc, oracle, rng = _build(tmp_path, strategy=strategy, replicas=2)
+    try:
+        mgr = svc.replicas
+        _mutate(svc, oracle, rng)         # groups now lag
+        svc.snapshot()                     # WAL reset under their cursors
+        _mutate(svc, oracle, rng)          # post-compaction history
+        post = svc.wal.n_records
+        svc.sync_replicas()
+        for g in mgr.groups:
+            assert g.reseeds == 1
+            assert g.records == post       # only post-snapshot records
+        stats = svc.replica_stats()
+        assert stats["max_lag_records"] == 0 and stats["stale_groups"] == 0
+        for probe in _probes(rng, oracle):
+            _check_all_patterns(svc, oracle, probe, ctx="post-reseed")
+            for g in mgr.groups:
+                _check_all_patterns(g.service, oracle, probe,
+                                    ctx=f"post-reseed group{g.index}")
+    finally:
+        svc.close()
+
+
+def test_open_seeds_replicas_from_disk(tmp_path):
+    svc, oracle, rng = _build(tmp_path)
+    _mutate(svc, oracle, rng)
+    root = svc.root
+    svc.close()
+    svc2 = DurableShardedService.open(root, fsync=False, replicas=1,
+                                      serve_threads=1)
+    try:
+        assert svc2.replicas is not None
+        assert svc2.replica_stats()["max_lag_records"] == 0
+        for probe in _probes(rng, oracle):
+            _check_all_patterns(svc2, oracle, probe, ctx="open")
+            _check_all_patterns(svc2.replicas.groups[0].service, oracle,
+                                probe, ctx="open group0")
+    finally:
+        svc2.close()
+
+
+# -- dispatch -------------------------------------------------------------
+
+
+def test_lag_bound_gates_dispatch(tmp_path):
+    """max_lag=0: a group one record behind stops serving flushes until
+    an explicit sync catches it up."""
+    svc, oracle, rng = _build(tmp_path)
+    try:
+        mgr = svc.enable_replication(1, max_lag=0, auto_sync=False)
+        assert svc.query(None, 0, None) is not None
+        served = svc.service.stats.replica_flushes
+        assert served > 0 and mgr.groups[0].flushes == served
+
+        _mutate(svc, oracle, rng, n_ins=4, n_del=0)  # lag > 0 now
+        assert mgr.stats()["groups"][0]["dispatchable"] is False
+        svc.query(None, 1, None)
+        assert svc.service.stats.replica_flushes == served  # primary served
+
+        svc.sync_replicas()
+        svc.query(None, 1, None)
+        assert svc.service.stats.replica_flushes == served + 1
+    finally:
+        svc.close()
+
+
+def test_round_robin_rotates_groups(tmp_path):
+    svc, _, _ = _build(tmp_path, replicas=2, replica_max_lag="off",
+                       replica_dispatch="round_robin")
+    try:
+        mgr = svc.replicas
+        for p in range(4):
+            svc.query(None, p % N_PREDS, None)
+        assert [g.flushes for g in mgr.groups] == [2, 2]
+    finally:
+        svc.close()
+
+
+def test_least_loaded_avoids_busy_group(tmp_path):
+    svc, _, _ = _build(tmp_path, replicas=2, replica_max_lag="off",
+                       replica_dispatch="least_loaded")
+    try:
+        mgr = svc.replicas
+        mgr.groups[0].in_flight = 5  # pretend group 0 is saturated
+        for p in range(3):
+            svc.query(None, p % N_PREDS, None)
+        assert mgr.groups[1].flushes == 3 and mgr.groups[0].flushes == 0
+        mgr.groups[0].in_flight = 0
+    finally:
+        svc.close()
+
+
+def test_replica_serves_its_own_generation(tmp_path):
+    """Cache generations: a lagging group keeps answering from its own
+    (older) consistent state — primary mutations neither bleed into its
+    results nor purge its warm entries — until it syncs."""
+    svc, oracle, rng = _build(tmp_path)
+    try:
+        mgr = svc.enable_replication(1, max_lag="off", auto_sync=False)
+        before = svc.query(None, 0, None)
+        assert sorted(before) == _oracle_query(oracle, None, 0, None)
+
+        old_oracle = set(oracle)
+        _mutate(svc, oracle, rng, n_ins=10, n_del=3)
+        assert _oracle_query(oracle, None, 0, None) != \
+            _oracle_query(old_oracle, None, 0, None)
+
+        # unbounded lag: the stale group still serves — at ITS generation
+        stale = svc.query(None, 0, None)
+        assert sorted(stale) == _oracle_query(old_oracle, None, 0, None)
+
+        # the primary itself sees the new state (bypass dispatch)
+        mgr_ref, svc.service._replicas = svc.service._replicas, None
+        try:
+            fresh = svc.query(None, 0, None)
+        finally:
+            svc.service._replicas = mgr_ref
+        assert sorted(fresh) == _oracle_query(oracle, None, 0, None)
+
+        svc.sync_replicas()
+        assert sorted(svc.query(None, 0, None)) == \
+            _oracle_query(oracle, None, 0, None)
+    finally:
+        svc.close()
+
+
+def test_rebalance_propagates_through_wal_feed(tmp_path):
+    """A forced rebalance journals plan/migration records; groups replay
+    them on sync and become dispatchable again with the new routing."""
+    from repro.distributed.partition import plan_to_dict
+
+    svc, oracle, rng = _build(tmp_path, strategy="node_range", n_shards=3,
+                              seed=7, replicas=1, replica_max_lag="off")
+    try:
+        mgr = svc.replicas
+        # pile rows onto a few high subjects AFTER the build-time quantile
+        # cut, so a forced re-cut actually changes the boundaries
+        skewed = np.stack([
+            rng.integers(N_NODES - 3, N_NODES, 120),
+            rng.integers(0, N_PREDS, 120),
+            rng.integers(0, N_NODES, 120)], axis=1)
+        svc.insert_triples(skewed)
+        oracle.update(tuple(map(int, r)) for r in skewed)
+        svc.rebalance(force=True)
+        assert plan_to_dict(svc.plan) != \
+            plan_to_dict(mgr.groups[0].service.plan)
+        # plan disagreement: the lagging group must stop serving flushes
+        assert mgr.stats()["groups"][0]["dispatchable"] is False
+        svc.sync_replicas()
+        g = mgr.groups[0]
+        assert mgr.stats()["groups"][0]["dispatchable"] is True
+        assert plan_to_dict(g.service.plan) == plan_to_dict(svc.plan)
+        for probe in _probes(rng, oracle):
+            _check_all_patterns(svc, oracle, probe, ctx="post-rebalance")
+            _check_all_patterns(g.service, oracle, probe,
+                                ctx="post-rebalance group0")
+    finally:
+        svc.close()
+
+
+# -- introspection + lifecycle --------------------------------------------
+
+
+def test_replica_set_and_stats_shapes(tmp_path):
+    svc, oracle, rng = _build(tmp_path, replicas=2, replica_max_lag="off")
+    try:
+        mgr = svc.replicas
+        _mutate(svc, oracle, rng, n_ins=6, n_del=0)
+        stats = svc.replica_stats()
+        assert stats["n_replicas"] == 2 and stats["max_lag"] is None
+        assert stats["max_lag_records"] > 0  # lag accounting is live
+        assert len(stats["groups"]) == 2
+
+        for k in range(svc.service.n_shards):
+            rset = mgr.replica_set(k)
+            assert len(rset) == 2
+            assert rset.max_lag_records == stats["max_lag_records"]
+            for rep in rset:
+                assert rep.shard == k and rep.engine is not None
+                assert rep.cache_ns < -2  # below the reserved namespaces
+        with pytest.raises(ValueError):
+            mgr.replica_set(svc.service.n_shards)
+
+        svc.sync_replicas()
+        assert svc.replica_stats()["max_lag_records"] == 0
+    finally:
+        svc.close()
+
+
+def test_close_is_idempotent_across_hierarchy(tmp_path):
+    svc, _, _ = _build(tmp_path, replicas=2)
+    mgr = svc.replicas
+    svc.close()
+    assert mgr.closed and mgr.acquire() is None
+    svc.close()                 # durable double-close: no-op
+    svc.service.close()         # router close after the fact: no-op
+    mgr.close()                 # manager close after the fact: no-op
+
+    # and the other entry order: router first, then the durable wrapper
+    svc2, _, _ = _build(tmp_path / "b", replicas=1)
+    mgr2 = svc2.replicas
+    svc2.service.close()
+    assert mgr2.closed
+    svc2.close()
+    svc2.close()
+
+
+# -- nightly churn oracle -------------------------------------------------
+
+
+@pytest.mark.slow
+def test_replica_churn_under_concurrent_mutations(tmp_path):
+    """Nightly lane: mutator + dispatched readers + periodic syncs and
+    snapshots (forced reseeds) racing for ITR_CHURN_SECONDS, then a
+    quiesce and full pattern parity on every group."""
+    budget = float(os.environ.get("ITR_CHURN_SECONDS", "4"))
+    svc, oracle, rng = _build(tmp_path, replicas=2, n_edges=80,
+                              replica_max_lag="off")
+    mgr = svc.replicas
+    stop = threading.Event()
+    errors: list = []
+    lock = threading.Lock()  # guards oracle + rng
+
+    def mutator():
+        try:
+            while not stop.is_set():
+                with lock:
+                    _mutate(svc, oracle, rng, n_ins=6, n_del=2)
+                time.sleep(0.002)
+        except Exception as exc:  # pragma: no cover - surfaced below
+            errors.append(exc)
+            stop.set()
+
+    def reader(seed):
+        r = np.random.default_rng(seed)
+        try:
+            while not stop.is_set():
+                s, p, o = (int(v) for v in _rand_rows(r, 1)[0])
+                for pattern in PATTERN_NAMES:
+                    res = svc.query(*_bind(pattern, s, p, o))
+                    for tp, (ts, to) in res:  # well-formed (p, (s, o))
+                        assert 0 <= tp < N_PREDS
+        except Exception as exc:  # pragma: no cover - surfaced below
+            errors.append(exc)
+            stop.set()
+
+    def churner():
+        try:
+            i = 0
+            while not stop.is_set():
+                time.sleep(0.05)
+                svc.sync_replicas()
+                i += 1
+                if i % 6 == 0:
+                    svc.snapshot()  # compacts the WAL: forces reseeds
+        except Exception as exc:  # pragma: no cover - surfaced below
+            errors.append(exc)
+            stop.set()
+
+    threads = [threading.Thread(target=mutator)]
+    threads += [threading.Thread(target=reader, args=(100 + i,))
+                for i in range(3)]
+    threads.append(threading.Thread(target=churner))
+    for t in threads:
+        t.start()
+    time.sleep(budget)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    try:
+        assert not errors, errors
+        svc.sync_replicas()  # quiesce
+        assert sum(g.reseeds for g in mgr.groups) > 0
+        assert svc.replica_stats()["max_lag_records"] == 0
+        for probe in _probes(rng, oracle, k=5):
+            _check_all_patterns(svc, oracle, probe, ctx="churn quiesce")
+            for g in mgr.groups:
+                _check_all_patterns(g.service, oracle, probe,
+                                    ctx=f"churn group{g.index}")
+    finally:
+        svc.close()
