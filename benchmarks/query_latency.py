@@ -120,6 +120,7 @@ def run(dataset="geo-coordinates-en", n_queries=500, quiet=False,
     _bench_sharded(itr, ds, bench, n_queries, quiet)
     _bench_mutation(itr, ds, bench, n_queries, quiet)
     _bench_rebalance(itr, ds, bench, n_queries, quiet)
+    _bench_bgp(itr, ds, bench, n_queries, quiet)
     _bench_recovery(ds, bench, quiet)
     _finalize_throughput(bench, n_queries)
     if json_path:
@@ -655,6 +656,134 @@ def _bench_rebalance(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None:
               f"full={full_s * 1e3:9.1f}ms "
               f"({bench['rebalance']['full_vs_migration']:5.1f}x), "
               f"pending={res['pending']}")
+
+
+def _naive_bgp_join(query_fn, patterns) -> list[tuple]:
+    """The baseline `query_bgp` must beat: fetch each pattern's full
+    result through the ordinary per-pattern query surface, then join the
+    Python way — a dict index on the shared variables, patterns in the
+    order given (no planning, no id-array joins). Returns sorted binding
+    tuples, the `BGPResult.tuples()` comparison shape."""
+    from repro.core.bgp import bgp_variables, parse_bgp
+
+    patterns = parse_bgp(patterns)
+    out_vars = bgp_variables(patterns)
+    bindings: list[dict] = [{}]
+    for pat in patterns:
+        terms = pat.terms
+        res = query_fn(*(None if isinstance(t, str) else t for t in terms))
+        solved = set(bindings[0]) if bindings else set()
+        shared = [v for v in pat.variables() if v in solved]
+        index: dict = {}
+        for label, (s, o) in res:
+            vals: dict = {}
+            ok = True
+            for slot, val in enumerate((s, label, o)):
+                term = terms[slot]
+                if isinstance(term, str):
+                    if term in vals and vals[term] != val:
+                        ok = False
+                        break
+                    vals[term] = val
+            if ok:
+                index.setdefault(
+                    tuple(vals[v] for v in shared), []).append(vals)
+        nxt = []
+        for b in bindings:
+            for vals in index.get(tuple(b[v] for v in shared), []):
+                nb = dict(b)
+                nb.update(vals)
+                nxt.append(nb)
+        bindings = nxt
+        if not bindings:
+            break
+    return sorted(tuple(b[v] for v in out_vars) for b in bindings)
+
+
+def _chain_predicates(triples, k: int, n_preds: int) -> list[int]:
+    """Predicates (p1, .., pk) such that `?a p1 ?b . ?b p2 ?c ...` is
+    satisfiable, found by walking actual rows subject-to-object; falls
+    back to the most frequent predicates when no k-hop walk exists (a
+    0-binding chain still measures the join machinery, just less of it)."""
+    by_subj: dict = {}
+    for s, p, o in triples.tolist():
+        by_subj.setdefault(s, []).append((p, o))
+    for s, p, o in triples.tolist():
+        chain, node = [p], o
+        while len(chain) < k and by_subj.get(node):
+            p2, node = by_subj[node][0]
+            chain.append(p2)
+        if len(chain) == k:
+            return chain
+    freq = np.argsort(-np.bincount(triples[:, 1], minlength=n_preds))
+    return [int(freq[i % len(freq)]) for i in range(k)]
+
+
+def _bench_bgp(itr, ds, bench: dict, n_queries: int, quiet: bool) -> None:
+    """BGP joins over the sharded tier (PR 9).
+
+    Three shapes derived from the dataset's most frequent predicates — a
+    2-pattern chain, a 3-pattern chain, and a 2-pattern star — each
+    measured three ways on a 2-shard `predicate_hash` tier:
+
+    * ``cold_us``: `query_bgp` with every cache namespace invalidated
+      first (planner + bind/hash joins + sub-pattern fetches, all cold);
+    * ``warm_us``: the identical BGP again — a whole-BGP hit in the
+      merged cache namespace;
+    * ``naive_us``: the per-pattern-then-Python-join baseline
+      (`_naive_bgp_join`), also from a cold cache, same fetch surface.
+
+    Gated: ``chain3.planned_vs_naive`` (naive/cold, higher is better) —
+    the planned id-array join path must keep beating materialize-and-loop
+    Python joins; ``chain3.warm_speedup`` (cold/warm) — the whole-BGP
+    cache must keep short-circuiting repeat analytical queries.
+    """
+    from repro.serve.sharded import ShardedTripleService
+
+    svc = ShardedTripleService.build(ds.triples, ds.n_nodes, ds.n_preds,
+                                     n_shards=2, crossover=0,
+                                     delta_budget=None, rebalance_skew=None)
+    p1, p2, p3 = _chain_predicates(ds.triples, 3, ds.n_preds)
+    shapes = {
+        "chain2": f"?a {p1} ?b . ?b {p2} ?c",
+        "chain3": f"?a {p1} ?b . ?b {p2} ?c . ?c {p3} ?d",
+        "star2": f"?h {p1} ?a . ?h {p2} ?b",
+    }
+    section: dict = {"n_shards": 2, "predicates": [p1, p2, p3]}
+    reps = 3
+    for name, bgp in shapes.items():
+        cold_s = warm_s = naive_s = float("inf")
+        res = None
+        for _ in range(reps):
+            svc.invalidate()  # sub-pattern AND whole-BGP namespaces
+            t0 = time.perf_counter()
+            res = svc.query_bgp(bgp)
+            cold_s = min(cold_s, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            svc.query_bgp(bgp)
+            warm_s = min(warm_s, time.perf_counter() - t0)
+        for _ in range(reps):
+            svc.invalidate()  # same cold start the planned path gets
+            t0 = time.perf_counter()
+            naive = _naive_bgp_join(svc.query, bgp)
+            naive_s = min(naive_s, time.perf_counter() - t0)
+        assert naive == res.tuples(), f"bgp {name}: naive/planned mismatch"
+        section[name] = {
+            "bgp": bgp,
+            "n_bindings": len(res),
+            "cold_us": cold_s * 1e6,
+            "warm_us": warm_s * 1e6,
+            "naive_us": naive_s * 1e6,
+            "planned_vs_naive": naive_s / cold_s if cold_s > 0 else float("inf"),
+            "warm_speedup": cold_s / warm_s if warm_s > 0 else float("inf"),
+        }
+        if not quiet:
+            r = section[name]
+            print(f"bgp {name} n={len(res)} cold={r['cold_us']:9.1f}us "
+                  f"warm={r['warm_us']:9.1f}us naive={r['naive_us']:9.1f}us "
+                  f"({r['planned_vs_naive']:5.1f}x vs naive, "
+                  f"{r['warm_speedup']:5.1f}x warm)")
+    bench["bgp"] = section
 
 
 def _bench_recovery(ds, bench: dict, quiet: bool) -> None:

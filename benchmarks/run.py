@@ -76,6 +76,13 @@ def gate_metrics(bench: dict) -> dict[str, float]:
             rebalance["skew_after_vs_before"]
         # migration must stay cheaper than a full re-partition
         out["rebalance.full_vs_migration"] = rebalance["full_vs_migration"]
+    bgp = bench.get("bgp", {})
+    if "chain3" in bgp:
+        # the planned id-array join must keep beating the naive
+        # per-pattern-then-Python-join baseline on a 3-pattern chain
+        out["bgp.chain3.planned_vs_naive"] = bgp["chain3"]["planned_vs_naive"]
+        # whole-BGP cache hits must keep short-circuiting repeat queries
+        out["bgp.chain3.warm_speedup"] = bgp["chain3"]["warm_speedup"]
     recovery = bench.get("recovery", {})
     if "cold_start_speedup" in recovery:
         # snapshot cold start must stay cheaper than a RePair rebuild

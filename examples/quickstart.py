@@ -63,6 +63,20 @@ def main():
           f"{st.owned} owned + {st.scattered} scatter-gathered patterns, "
           f"verified vs single engine")
 
+    # BGP joins: conjunctive patterns with shared variables, planned by
+    # selectivity stats from the compressed CSR and executed as batched
+    # id-array joins through the same sharded path (docs/ARCHITECTURE.md §12)
+    p2 = (p + 1) % ds.n_preds
+    bgp = f"{s} {p} ?y . ?y {p2} ?z"
+    res_bgp = svc.query_bgp(bgp)
+    naive = sorted(
+        (int(y), int(z))
+        for _, (_, y) in engine.query(s, p, None)
+        for _, (_, z) in engine.query(int(y), p2, None))
+    assert sorted(res_bgp.tuples()) == sorted(set(naive))
+    print(f"BGP '{bgp}': vars={res_bgp.vars}, {len(res_bgp)} bindings "
+          f"(verified vs per-pattern join)")
+
     # mutation: inserts/deletes land in a per-shard delta overlay (routed
     # to the owning shard) and queries stay exact immediately; an explicit
     # rebuild() recompresses dirty shards through RePair (docs/ARCHITECTURE.md)

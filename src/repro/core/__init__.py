@@ -7,6 +7,14 @@ from repro.core.grammar import Grammar, Rule
 from repro.core.repair import RepairConfig, RepairStats, compress
 from repro.core.encode import EncodedGrammar, encode
 from repro.core.flatten import FlatGrammar, FrontierArena, concat_ragged
+from repro.core.bgp import (
+    BGPResult,
+    SelectivityStats,
+    TriplePattern,
+    execute_bgp,
+    parse_bgp,
+    plan_bgp,
+)
 from repro.core.query import QueryResultView, TripleQueryEngine, query_oracle
 from repro.core.result_cache import CacheStats, QueryResultCache, ShardCacheView
 from repro.core.itr_plus import attach_node_labels, strip_node_labels
@@ -36,6 +44,12 @@ __all__ = [
     "CacheStats",
     "ShardCacheView",
     "query_oracle",
+    "BGPResult",
+    "SelectivityStats",
+    "TriplePattern",
+    "execute_bgp",
+    "parse_bgp",
+    "plan_bgp",
     "attach_node_labels",
     "strip_node_labels",
 ]

@@ -1,0 +1,563 @@
+"""Basic graph pattern (BGP) join queries over the batched triple engine.
+
+A BGP is a conjunction of triple patterns sharing named variables —
+``?x worksFor ?y . ?y locatedIn Berlin`` — the unit of real RDF query
+loads. This module is the join layer on top of the existing single-pattern
+machinery ("Compressed k2-Triples" evaluates the same shapes over k²-trees
+with sideways information passing; here the substrate is the
+grammar-compressed engine):
+
+* **Pattern model** — :func:`parse_bgp` accepts either the string form
+  above (integer ids for constants, ``?name`` for variables, patterns
+  separated by ``.``) or a list of ``(s, p, o)`` triples whose terms are
+  ints or ``?name`` strings. There is no term dictionary yet (ROADMAP
+  item 1), so bare strings are rejected rather than silently misread.
+* **Selectivity stats** — :class:`SelectivityStats` holds per-predicate
+  cardinalities and distinct subject/object counts, computed once per
+  engine build from the flattened CSR arrays *without decompressing*:
+  per-rule terminal-label counts propagate bottom-up through the rule
+  bodies (RePair bodies only reference earlier rules), and start-graph
+  edges sum their rules' counts. The stats order joins; they never gate
+  correctness.
+* **Planner** — :func:`plan_bgp` greedily picks the next pattern with the
+  lowest estimated cardinality given the variables already solved,
+  preferring patterns connected to the solved set so cartesian products
+  only happen when the BGP truly is disconnected.
+* **Executor** — :func:`execute_bgp` maintains a *binding table* (one
+  int64 column per solved variable) and, per planned step, joins one
+  pattern in through a ``batch_fn`` with the `query_batch_view` signature
+  (the engine itself, or the sharded service's flush path — which brings
+  micro-batch dedup, the shared cache, shard routing, and replica
+  dispatch along for free). Two step modes, both joins on id arrays:
+
+  - **bind-join** (selective steps): the distinct bound-variable combos
+    are substituted into concrete (S,P,O) patterns and shipped as ONE
+    batch — owned patterns stay on their shard; the returned id columns
+    merge back through the unique-inverse mapping (a hash join keyed by
+    combo id).
+  - **scan + hash-join** (unselective steps, when the combo count exceeds
+    the pattern's constants-only estimate): the pattern runs once with
+    only constants bound and the candidate columns merge against the
+    binding table with a vectorized sort/searchsorted equi-join
+    (:func:`_join_indices`).
+
+  An empty intermediate table short-circuits the remaining patterns; a
+  variable repeated within one pattern (``?x ?p ?x``) filters candidate
+  rows for equality before joining.
+
+Results are a :class:`BGPResult`: variables in first-appearance order,
+binding rows lexicographically sorted — deterministic, so whole-BGP
+results can be cached and compared byte-for-byte across executions.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.flatten import _ragged_arange
+from repro.core.hypergraph import _ragged_take
+
+_EMPTY = np.zeros(0, dtype=np.int64)
+
+# bind-join fan-out floor: below this many distinct bound-variable combos a
+# step always binds (the batch is cheap and dedup/cache absorb repeats);
+# above it the combo count competes against the pattern's constants-only
+# cardinality estimate and the step may switch to scan + hash-join
+_BIND_FANOUT = 64
+
+
+@dataclass(frozen=True)
+class TriplePattern:
+    """One (s, p, o) pattern: each term an int constant or a ``?var`` name."""
+
+    s: int | str
+    p: int | str
+    o: int | str
+
+    @property
+    def terms(self) -> tuple:
+        return (self.s, self.p, self.o)
+
+    def variables(self) -> list[str]:
+        """Variable names in slot order (repeats kept)."""
+        return [t for t in self.terms if isinstance(t, str)]
+
+    def __str__(self) -> str:
+        return " ".join(str(t) for t in self.terms)
+
+
+def _parse_term(tok):
+    if isinstance(tok, TriplePattern):
+        raise TypeError("pattern given where a term was expected")
+    if isinstance(tok, str):
+        tok = tok.strip()
+        if tok.startswith("?"):
+            if len(tok) < 2:
+                raise ValueError("variable needs a name: bare '?'")
+            return tok
+        try:
+            val = int(tok)
+        except ValueError:
+            raise ValueError(
+                f"term {tok!r} is neither an integer id nor a ?variable "
+                "(string terms need the term dictionary, not built yet)"
+            ) from None
+        tok = val
+    if isinstance(tok, (int, np.integer)):
+        val = int(tok)
+        if val < 0:
+            raise ValueError(f"constant ids must be >= 0, got {val}")
+        return val
+    raise TypeError(f"unsupported pattern term: {tok!r}")
+
+
+def parse_bgp(bgp) -> list[TriplePattern]:
+    """Normalize a BGP into a list of :class:`TriplePattern`.
+
+    Accepts the string form (``"?x 0 ?y . ?y 1 17"`` — whitespace-split
+    terms, ``.``-separated patterns) or an iterable of 3-term patterns
+    (``TriplePattern`` instances pass through). Every term must be a
+    non-negative int id or a ``?name`` variable; an empty BGP is an error.
+    """
+    if isinstance(bgp, TriplePattern):
+        return [bgp]
+    if isinstance(bgp, str):
+        parts = [part.strip() for part in bgp.split(".")]
+        patterns: list = [part.split() for part in parts if part]
+    else:
+        patterns = list(bgp)
+    out: list[TriplePattern] = []
+    for pat in patterns:
+        if isinstance(pat, TriplePattern):
+            out.append(pat)
+            continue
+        terms = tuple(pat)
+        if len(terms) != 3:
+            raise ValueError(f"triple pattern needs 3 terms, got {terms!r}")
+        out.append(TriplePattern(*(_parse_term(t) for t in terms)))
+    if not out:
+        raise ValueError("empty BGP: at least one triple pattern required")
+    return out
+
+
+def bgp_variables(patterns: list[TriplePattern]) -> list[str]:
+    """Variable names in first-appearance order — the result column order."""
+    seen: dict[str, None] = {}
+    for pat in patterns:
+        for v in pat.variables():
+            seen.setdefault(v, None)
+    return list(seen)
+
+
+def canonical_bgp(patterns: list[TriplePattern]) -> str:
+    """Stable text form with variables renamed by first occurrence, so two
+    BGPs identical up to variable names share one cache key. Pattern
+    *order* is part of the key (join order never changes the result set,
+    but canonicalizing away the order would require a graph-isomorphism
+    pass for no serving win)."""
+    names: dict[str, int] = {}
+    parts = []
+    for pat in patterns:
+        toks = []
+        for t in pat.terms:
+            if isinstance(t, str):
+                toks.append(f"?{names.setdefault(t, len(names))}")
+            else:
+                toks.append(str(t))
+        parts.append(" ".join(toks))
+    return " . ".join(parts)
+
+
+def bgp_cache_key(patterns: list[TriplePattern]) -> tuple[int, int, int]:
+    """Digest a canonicalized BGP into the (S, P, O) int slots of the
+    shared result cache. The three ints are always <= -2, so a key can
+    never collide with a real pattern key (those use values >= -1); the
+    generation component of the cache key is supplied by the cache itself,
+    which is what makes the merged-namespace generation a whole-BGP
+    invalidation vector."""
+    digest = hashlib.blake2b(canonical_bgp(patterns).encode(),
+                             digest_size=24).digest()
+    return tuple(-2 - (int.from_bytes(digest[8 * i:8 * i + 8], "big") >> 2)
+                 for i in range(3))
+
+
+class BGPResult:
+    """Bindings of a BGP: ``vars`` (first-appearance order) x ``rows``.
+
+    ``rows`` is a read-only ``(n_bindings, n_vars)`` int64 array in
+    lexicographic row order — deterministic across executions, shard
+    counts, and partition strategies, so results compare byte-for-byte.
+    """
+
+    __slots__ = ("vars", "rows")
+
+    def __init__(self, variables, rows: np.ndarray):
+        self.vars = tuple(variables)
+        self.rows = rows
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def tuples(self) -> list[tuple]:
+        """Binding rows as plain int tuples (test/oracle comparison form)."""
+        return [tuple(int(v) for v in row) for row in self.rows]
+
+    def bindings(self) -> list[dict]:
+        """Binding rows as var -> id dicts."""
+        return [dict(zip(self.vars, row)) for row in self.tuples()]
+
+    def __repr__(self) -> str:
+        return f"BGPResult(vars={self.vars}, n={len(self.rows)})"
+
+
+def encode_result_entry(result: BGPResult):
+    """A :class:`BGPResult` in the cache's ``(labels, nodes_flat,
+    offsets)`` entry shape: one 'edge' per binding row (labels all zero,
+    nodes = the row values, fixed rank = n_vars), so whole-BGP results
+    ride the existing :class:`~repro.core.result_cache.QueryResultCache`
+    budgets unchanged. Inverse: :func:`decode_result_entry`."""
+    n, k = result.rows.shape
+    labels = np.zeros(n, dtype=np.int64)
+    nodes = np.ascontiguousarray(result.rows, dtype=np.int64).reshape(-1)
+    offsets = np.arange(n + 1, dtype=np.int64) * k
+    return labels, nodes, offsets
+
+
+def decode_result_entry(entry, variables) -> BGPResult:
+    labels, nodes, _ = entry
+    k = len(tuple(variables))
+    n = len(labels)
+    rows = nodes.reshape(n, k) if k else np.zeros((n, 0), dtype=np.int64)
+    rows.flags.writeable = False
+    return BGPResult(variables, rows)
+
+
+# -- selectivity statistics ---------------------------------------------------
+@dataclass
+class SelectivityStats:
+    """Join-ordering statistics of one engine's compressed base.
+
+    ``pred_card[p]`` is the exact number of base edges labeled ``p``,
+    computed from the flattened CSR arrays alone: per-rule terminal-label
+    counts propagate bottom-up through the rule bodies, then each start
+    edge contributes its own label or its rule's counts. ``n_subjects`` /
+    ``n_objects`` are distinct-value counts over the terminal start edges'
+    first/second slots plus every nonterminal edge's attachment nodes (an
+    upper bound — expansions can only place attachment nodes, so nothing
+    is missed). The mutation overlay is deliberately ignored: it is
+    bounded by the rebuild budget, and stats only order joins.
+    """
+
+    total: int
+    pred_card: np.ndarray
+    n_subjects: int
+    n_objects: int
+
+    @classmethod
+    def from_csr(cls, labels, ranks, nodes_flat, offsets, flat,
+                 n_terminals: int) -> "SelectivityStats":
+        T = int(n_terminals)
+        R = flat.n_rules
+        counts = np.zeros((R, T), dtype=np.int64)
+        for slot in range(R):
+            body = flat.edge_labels[
+                flat.edge_offsets[slot]:flat.edge_offsets[slot + 1]]
+            terms = body[body < T]
+            if len(terms) and T:
+                counts[slot] += np.bincount(terms, minlength=T)
+            nts = body[body >= T]
+            if len(nts):
+                child = flat.rule_index[nts]
+                if bool(np.any(child >= slot)):
+                    raise ValueError(
+                        "rule bodies must reference earlier rules "
+                        "(RePair output is bottom-up ordered)")
+                counts[slot] += counts[child].sum(axis=0)
+
+        labels = np.asarray(labels, dtype=np.int64)
+        ranks = np.asarray(ranks, dtype=np.int64)
+        offsets = np.asarray(offsets, dtype=np.int64)
+        is_term = labels < T
+        pred_card = np.bincount(labels[is_term], minlength=T).astype(np.int64) \
+            if T else np.zeros(0, dtype=np.int64)
+        nt_idx = np.flatnonzero(~is_term)
+        if len(nt_idx) and R:
+            pred_card += counts[flat.rule_index[labels[nt_idx]]].sum(axis=0)
+
+        starts = offsets[:-1]
+        t2 = is_term & (ranks >= 2)
+        subs = nodes_flat[starts[t2]] if t2.any() else _EMPTY
+        objs = nodes_flat[starts[t2] + 1] if t2.any() else _EMPTY
+        att = nodes_flat[_ragged_take(offsets, nt_idx, ranks[nt_idx])] \
+            if len(nt_idx) else _EMPTY
+        return cls(total=int(pred_card.sum()), pred_card=pred_card,
+                   n_subjects=max(1, len(np.unique(np.concatenate([subs, att])))),
+                   n_objects=max(1, len(np.unique(np.concatenate([objs, att])))))
+
+    @classmethod
+    def merge(cls, parts) -> "SelectivityStats":
+        """Tier-level stats: per-shard sums (distinct-count sums
+        overestimate under ``predicate_hash``, where one subject spans
+        shards — an acceptable bias for ordering joins)."""
+        parts = list(parts)
+        if not parts:
+            return cls(0, np.zeros(0, dtype=np.int64), 1, 1)
+        T = max(len(p.pred_card) for p in parts)
+        pred = np.zeros(T, dtype=np.int64)
+        for p in parts:
+            pred[:len(p.pred_card)] += p.pred_card
+        return cls(total=int(sum(p.total for p in parts)), pred_card=pred,
+                   n_subjects=sum(p.n_subjects for p in parts),
+                   n_objects=sum(p.n_objects for p in parts))
+
+    def estimate(self, s_bound: bool, p: int | None, o_bound: bool) -> float:
+        """Expected matches of one pattern under independence: predicate
+        cardinality (or the full edge count for a free/variable P), divided
+        by the distinct subject/object counts per bound slot."""
+        if p is not None:
+            p = int(p)
+            card = float(self.pred_card[p]) \
+                if 0 <= p < len(self.pred_card) else 0.0
+        else:
+            card = float(self.total)
+        if s_bound:
+            card /= max(1, self.n_subjects)
+        if o_bound:
+            card /= max(1, self.n_objects)
+        return card
+
+
+def pattern_cost(pattern: TriplePattern, bound, stats) -> float:
+    """Estimated matches of `pattern` once the variables in `bound` carry
+    concrete values. With no stats, falls back to counting free slots."""
+    s, p, o = pattern.terms
+    s_bound = not isinstance(s, str) or s in bound
+    o_bound = not isinstance(o, str) or o in bound
+    if stats is None:
+        free = sum(1 for b in (s_bound, not isinstance(p, str) or p in bound,
+                               o_bound) if not b)
+        return float(1000 ** free)
+    if not isinstance(p, str):
+        return stats.estimate(s_bound, p, o_bound)
+    if p in bound:  # concrete at run time, unknown now: average predicate
+        card = stats.total / max(1, len(stats.pred_card))
+        if s_bound:
+            card /= max(1, stats.n_subjects)
+        if o_bound:
+            card /= max(1, stats.n_objects)
+        return card
+    return stats.estimate(s_bound, None, o_bound)
+
+
+def plan_bgp(patterns: list[TriplePattern], stats=None) -> list[int]:
+    """Greedy variable-elimination order (pattern indices).
+
+    Start from the pattern with the lowest constants-only estimate; then
+    repeatedly take the cheapest pattern *given the solved variables*,
+    restricted to patterns sharing a solved variable whenever any exists —
+    a cartesian step only happens when the remaining BGP is disconnected
+    from everything solved so far. Ties break on pattern index, so plans
+    are deterministic.
+    """
+    remaining = list(range(len(patterns)))
+    bound: set[str] = set()
+    order: list[int] = []
+    while remaining:
+        best = None
+        best_key = None
+        for i in remaining:
+            pat = patterns[i]
+            connected = not bound or \
+                any(v in bound for v in pat.variables()) or \
+                not pat.variables()
+            key = (not connected, pattern_cost(pat, bound, stats), i)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        order.append(best)
+        remaining.remove(best)
+        bound.update(patterns[best].variables())
+    return order
+
+
+# -- execution ----------------------------------------------------------------
+def _join_indices(left: np.ndarray, right: np.ndarray):
+    """Vectorized equi-join of two key matrices on all columns.
+
+    Returns aligned ``(li, ri)`` index arrays: every pair with
+    ``left[li[k]] == right[ri[k]]`` row-wise, grouped by left row. One
+    shared `np.unique` assigns both sides integer key codes (the hash),
+    then a sort + `searchsorted` merge emits the pairs — no Python loop.
+    """
+    n = len(left)
+    both = np.concatenate([left, right], axis=0)
+    _, codes = np.unique(both, axis=0, return_inverse=True)
+    codes = codes.reshape(-1)
+    lcode, rcode = codes[:n], codes[n:]
+    order = np.argsort(rcode, kind="stable")
+    rsorted = rcode[order]
+    lo = np.searchsorted(rsorted, lcode, side="left")
+    hi = np.searchsorted(rsorted, lcode, side="right")
+    cnt = hi - lo
+    li = np.repeat(np.arange(n, dtype=np.int64), cnt)
+    ri = order[np.repeat(lo, cnt) + _ragged_arange(cnt)]
+    return li, ri
+
+
+def _var_positions(pattern: TriplePattern) -> dict[str, list[int]]:
+    pos: dict[str, list[int]] = {}
+    for slot, t in enumerate(pattern.terms):
+        if isinstance(t, str):
+            pos.setdefault(t, []).append(slot)
+    return pos
+
+
+def _entry_candidates(entry, want_slots: list[int],
+                      check_pos: list[list[int]]) -> np.ndarray:
+    """Candidate id columns from one result entry.
+
+    Keeps only rank-2 edges (triples), applies in-pattern repeated-variable
+    equality over each slot group in `check_pos` (slot 0 = subject,
+    1 = predicate/label, 2 = object), and returns the surviving rows'
+    values at `want_slots` as an ``(m, len(want_slots))`` matrix.
+    """
+    labels, nodes, offsets = entry
+    ranks = np.diff(offsets)
+    keep = ranks == 2
+    lab = labels[keep]
+    starts = offsets[:-1][keep]
+    cols = (nodes[starts] if len(lab) else _EMPTY, lab,
+            nodes[starts + 1] if len(lab) else _EMPTY)
+    mask = np.ones(len(lab), dtype=bool)
+    for slots in check_pos:
+        for extra in slots[1:]:
+            mask &= cols[slots[0]] == cols[extra]
+    if not mask.all():
+        cols = tuple(c[mask] for c in cols)
+    m = len(cols[1])
+    if not want_slots:
+        return np.zeros((m, 0), dtype=np.int64)
+    return np.stack([cols[slot] for slot in want_slots], axis=1)
+
+
+def execute_bgp(patterns, batch_fn, stats=None, order=None) -> BGPResult:
+    """Evaluate a BGP through a batched single-pattern executor.
+
+    `batch_fn(s, p, o)` takes aligned int64 columns (-1 = unbound) and
+    returns a :class:`~repro.core.query.QueryResultView` — pass
+    ``engine.query_batch_view`` or the sharded service's flush hook; every
+    sub-pattern batch then inherits that path's dedup, caching, shard
+    routing, and locking. `stats` orders the join (:func:`plan_bgp`) and
+    arbitrates bind-join vs scan+hash-join per step; `order` overrides the
+    planner with an explicit pattern-index order.
+
+    The binding table starts as the single empty binding and each step
+    joins one pattern in; when it empties, the remaining patterns are
+    never executed (the result is already known empty).
+    """
+    patterns = parse_bgp(patterns)
+    out_vars = bgp_variables(patterns)
+    if order is None:
+        order = plan_bgp(patterns, stats)
+    elif sorted(order) != list(range(len(patterns))):
+        raise ValueError(f"order must permute range({len(patterns)}), "
+                         f"got {order!r}")
+    solved: list[str] = []
+    rows = np.zeros((1, 0), dtype=np.int64)
+    for i in order:
+        rows, solved = _join_step(rows, solved, patterns[i], batch_fn, stats)
+        if len(rows) == 0:
+            break
+    if len(rows) == 0:
+        final = np.zeros((0, len(out_vars)), dtype=np.int64)
+    else:
+        perm = [solved.index(v) for v in out_vars]
+        final = rows[:, perm] if perm else rows[:, :0]
+        if len(final) and final.shape[1]:
+            final = final[np.lexsort(final.T[::-1])]
+        final = np.ascontiguousarray(final)
+    final.flags.writeable = False
+    return BGPResult(out_vars, final)
+
+
+def _join_step(rows: np.ndarray, solved: list[str], pattern: TriplePattern,
+               batch_fn, stats):
+    """Join one pattern into the binding table; returns (rows, solved)."""
+    var_pos = _var_positions(pattern)
+    bound_vars = [v for v in solved if v in var_pos]
+    new_vars = [v for v in var_pos if v not in solved]
+    new_slots = [var_pos[v][0] for v in new_vars]
+    n = len(rows)
+
+    if not bound_vars:
+        # first step, or a genuinely disconnected pattern: one scan, then
+        # a cross product against the table (n == 1 empty binding at start)
+        cols = [np.asarray([t if not isinstance(t, str) else -1
+                            for t in pattern.terms], dtype=np.int64)]
+        view = batch_fn(cols[0][:1], cols[0][1:2], cols[0][2:3])
+        cand = _entry_candidates(view.entry(0), new_slots,
+                                 list(var_pos.values()))
+        m = len(cand)
+        out = np.concatenate(
+            [np.repeat(rows, m, axis=0), np.tile(cand, (n, 1))], axis=1) \
+            if n * m else np.zeros((0, len(solved) + len(new_vars)), np.int64)
+        return out, solved + new_vars
+
+    key_cols = [solved.index(v) for v in bound_vars]
+    table_keys = rows[:, key_cols]
+    combos, inv = np.unique(table_keys, axis=0, return_inverse=True)
+    inv = inv.reshape(-1)
+    u = len(combos)
+    # bind-join pays per distinct combo (a point pattern each, plus a
+    # per-entry merge); scan+hash pays one est_const-row fetch plus a
+    # vectorized join. Bind only when the combo count is small in absolute
+    # terms or tiny relative to the scan — near parity the scan's single
+    # batched fetch wins on constant factors.
+    est_const = pattern_cost(pattern, frozenset(), stats) \
+        if stats is not None else None
+    threshold = _BIND_FANOUT if est_const is None \
+        else max(_BIND_FANOUT, est_const / 8.0)
+
+    if u > threshold:
+        # scan + hash-join: run the pattern once with constants only, then
+        # merge-join candidate columns against the table on the bound vars
+        cols = np.asarray([t if not isinstance(t, str) else -1
+                           for t in pattern.terms], dtype=np.int64)
+        view = batch_fn(cols[:1], cols[1:2], cols[2:3])
+        want = [var_pos[v][0] for v in bound_vars] + new_slots
+        cand = _entry_candidates(view.entry(0), want, list(var_pos.values()))
+        li, ri = _join_indices(table_keys, cand[:, :len(bound_vars)])
+        out = np.concatenate([rows[li], cand[ri][:, len(bound_vars):]], axis=1)
+        return out, solved + new_vars
+
+    # bind-join: one concrete pattern per distinct bound-variable combo,
+    # shipped as a single batch (dedup/cache/shard routing downstream);
+    # the unique-inverse is the hash that joins results back to table rows
+    sub = np.empty((3, u), dtype=np.int64)
+    for slot, t in enumerate(pattern.terms):
+        if isinstance(t, str):
+            sub[slot] = combos[:, bound_vars.index(t)] \
+                if t in bound_vars else -1
+        else:
+            sub[slot] = t
+    view = batch_fn(sub[0], sub[1], sub[2])
+    # repeated-variable checks only cover FREE groups here: bound and
+    # constant slots were substituted, so the executor enforced them
+    check = [slots for v, slots in var_pos.items()
+             if v in new_vars and len(slots) > 1]
+    per_entry = [_entry_candidates(e, new_slots, check) for e in view.entries]
+    combo_entry = view.qid_entry
+    combo_counts = np.array([len(per_entry[int(combo_entry[j])])
+                             for j in range(u)], dtype=np.int64)
+    if int(combo_counts.sum()) == 0:
+        return np.zeros((0, len(solved) + len(new_vars)), np.int64), \
+            solved + new_vars
+    cand_all = np.concatenate([per_entry[int(combo_entry[j])]
+                               for j in range(u)], axis=0)
+    combo_starts = np.cumsum(combo_counts) - combo_counts
+    cnt = combo_counts[inv]
+    take = np.repeat(combo_starts[inv], cnt) + _ragged_arange(cnt)
+    out = np.concatenate(
+        [np.repeat(rows, cnt, axis=0), cand_all[take]], axis=1)
+    return out, solved + new_vars

@@ -252,6 +252,7 @@ class TripleQueryEngine:
             self.delta_budget = None if delta_budget is None \
                 else resolve_delta_budget(delta_budget)
         self.rebuild_count = 0
+        self._select_stats = None  # lazy SelectivityStats (see selectivity())
 
     @classmethod
     def from_state(cls, grammar: Grammar, encoded: EncodedGrammar,
@@ -313,6 +314,7 @@ class TripleQueryEngine:
         self.delta_budget = None if delta_budget is None \
             else resolve_delta_budget(delta_budget)
         self.rebuild_count = int(rebuild_count)
+        self._select_stats = None
         return self
 
     # -- crossover calibration -------------------------------------------
@@ -789,6 +791,30 @@ class TripleQueryEngine:
         """The logical triple set: decompressed base with the overlay
         applied (tombstones removed, inserts appended)."""
         return self.delta.apply(self.base_triples())
+
+    # -- BGP joins -------------------------------------------------------
+    def selectivity(self):
+        """Join-ordering stats (per-predicate cardinalities, distinct
+        subject/object counts) computed once per build from the flattened
+        CSR arrays — no decompression. Lazily cached; `rebuild()` swaps
+        the whole engine state, so the next call recomputes for the new
+        grammar. The mutation overlay is ignored: it is bounded by the
+        rebuild budget and stats only order joins, never gate answers."""
+        if self._select_stats is None:
+            from repro.core.bgp import SelectivityStats
+            self._select_stats = SelectivityStats.from_csr(
+                self._sorted_labels, self._sorted_ranks, self._sorted_nodes,
+                self._sorted_offsets, self.flat, self.T)
+        return self._select_stats
+
+    def query_bgp(self, patterns):
+        """Evaluate a basic graph pattern — a conjunction of triple
+        patterns with shared `?var` terms, e.g. ``"?x 0 ?y . ?y 1 17"`` —
+        and return a :class:`~repro.core.bgp.BGPResult`. Joins are planned
+        by `selectivity()` and each step runs through `query_batch_view`,
+        so sub-patterns get the batched frontier + result cache for free."""
+        from repro.core.bgp import execute_bgp
+        return execute_bgp(patterns, self.query_batch_view, self.selectivity())
 
     def rebuild(self, config=None) -> bool:
         """Recompress base+delta into a fresh grammar and swap it in.

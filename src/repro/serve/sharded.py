@@ -150,6 +150,8 @@ class ShardedServiceStats:
     migrated_rows: int = 0  # rows moved between shards by rebalancing
     degraded_patterns: int = 0  # patterns answered with a failed shard's hole
     replica_flushes: int = 0  # flushes served by a read replica group
+    bgp_queries: int = 0      # whole-BGP joins answered (hits + executions)
+    bgp_cache_hits: int = 0   # BGPs served straight from the merged cache
     total_s: float = 0.0
     last_flush_qps: float = 0.0
 
@@ -302,6 +304,58 @@ class ShardedTripleService(MicroBatchService):
             if group is not None:
                 st.replica_flushes += 1
         return view
+
+    def query_bgp(self, patterns):
+        """Evaluate a basic graph pattern over the sharded tier.
+
+        Sub-pattern batches go through :meth:`_flush_columns`, so each
+        join step inherits the full serving stack: micro-batch dedup, the
+        shared result cache, owned-vs-scatter shard routing, the threaded
+        fan-out pool, and replica dispatch. Whole-BGP results are cached
+        in the merged-scatter namespace (disable with ``ITR_BGP_CACHE=0``)
+        keyed by the canonicalized pattern list; the namespace generation
+        is bumped by `invalidate()` on ANY shard change, so it acts as a
+        tier-wide generation vector and stale joins can never be served.
+
+        Concurrency: each join step takes the read lock on its own (same
+        discipline as `query`), so a BGP is atomic *per step*, not across
+        steps — a mutation landing between steps can surface a mixed
+        view, exactly like two independent `query` calls would see. The
+        cache insert is guarded by the generation observed before the
+        first step, so such a mixed result is never cached.
+        """
+        from repro.core.bgp import (
+            SelectivityStats,
+            bgp_cache_key,
+            bgp_variables,
+            decode_result_entry,
+            encode_result_entry,
+            execute_bgp,
+            parse_bgp,
+        )
+        patterns = parse_bgp(patterns)
+        out_vars = bgp_variables(patterns)
+        cache = self.cache if _env_flag("ITR_BGP_CACHE", True) else None
+        key = gen0 = None
+        if cache is not None:
+            key = bgp_cache_key(patterns)
+            gen0 = cache.generation(self._merged_ns)
+            hit = cache.lookup(*key, shard=self._merged_ns)
+            if hit is not None:
+                with self._stats_lock:
+                    self.stats.bgp_queries += 1
+                    self.stats.bgp_cache_hits += 1
+                return decode_result_entry(hit, out_vars)
+        with self._rw.read():  # pin engines for the stats pass only
+            stats = SelectivityStats.merge(
+                eng.selectivity() for eng in self.engines)
+        result = execute_bgp(patterns, self._flush_columns, stats)
+        if cache is not None and cache.generation(self._merged_ns) == gen0:
+            cache.insert(*key, encode_result_entry(result),
+                         shard=self._merged_ns)
+        with self._stats_lock:
+            self.stats.bgp_queries += 1
+        return result
 
     # -- fan-out pool ------------------------------------------------------
     def set_serve_threads(self, n: int | None) -> int:

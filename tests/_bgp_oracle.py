@@ -1,0 +1,70 @@
+"""Brute-force BGP reference: nested loops over an explicit triple set.
+
+No engine code on this side — patterns match by scanning every triple for
+every partial binding, so any divergence from `query_bgp` (lost/duplicated
+bindings, variable-order bugs, stale cache entries, join-order effects) is
+the engine's fault, not the oracle's. Deliberately quadratic-and-worse:
+the randomized suites keep graphs small and guard against blowups with
+`max_bindings`.
+"""
+from __future__ import annotations
+
+
+class OracleBlowup(Exception):
+    """Intermediate binding set exceeded the caller's budget."""
+
+
+def _match(pattern, triple, binding):
+    """Extend `binding` over one pattern x triple, or None on mismatch."""
+    out = dict(binding)
+    for term, val in zip(pattern.terms, triple):
+        if isinstance(term, str):
+            if term in out:
+                if out[term] != val:
+                    return None
+            else:
+                out[term] = val
+        elif term != val:
+            return None
+    return out
+
+
+def oracle_bgp(triples, patterns, max_bindings: int | None = None):
+    """All bindings of `patterns` over `triples`, the slow honest way.
+
+    `triples` is any iterable of (s, p, o) rows; `patterns` anything
+    `parse_bgp` accepts. Returns ``(vars, rows)`` with vars in
+    first-appearance order and rows a sorted list of int tuples — the
+    exact comparison shape of ``BGPResult.tuples()``. Raises
+    :class:`OracleBlowup` if an intermediate binding set exceeds
+    `max_bindings` (the randomized machine skips those queries instead of
+    burning minutes in nested Python loops).
+    """
+    from repro.core.bgp import bgp_variables, parse_bgp
+
+    patterns = parse_bgp(patterns)
+    out_vars = bgp_variables(patterns)
+    rows = [tuple(int(v) for v in t) for t in triples]
+    bindings = [{}]
+    for pat in patterns:
+        nxt = []
+        for binding in bindings:
+            for triple in rows:
+                extended = _match(pat, triple, binding)
+                if extended is not None:
+                    nxt.append(extended)
+        if max_bindings is not None and len(nxt) > max_bindings:
+            raise OracleBlowup(f"{len(nxt)} bindings > {max_bindings}")
+        bindings = nxt
+        if not bindings:
+            break
+    return out_vars, sorted(tuple(b[v] for v in out_vars) for b in bindings)
+
+
+def assert_bgp_equal(result, triples, patterns) -> None:
+    """`result` (a BGPResult) must equal the brute-force answer exactly —
+    same variable order, same binding multiset, same row sort."""
+    want_vars, want_rows = oracle_bgp(triples, patterns)
+    assert list(result.vars) == list(want_vars), (result.vars, want_vars)
+    assert result.tuples() == want_rows, (
+        len(result.tuples()), len(want_rows), patterns)

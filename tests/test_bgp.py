@@ -1,0 +1,404 @@
+"""Deterministic BGP join tests: parser, planner, executor, sharded tier,
+whole-BGP cache, and the edge-case regression pins (empty intermediate
+short-circuit, repeated variables, all-variable join steps, zero-row
+inputs). The randomized machine lives in test_bgp_oracle.py; the
+brute-force reference in _bgp_oracle.py.
+"""
+import numpy as np
+import pytest
+
+from _bgp_oracle import assert_bgp_equal, oracle_bgp
+from repro.core import bgp as bgp_mod
+from repro.core.bgp import (
+    BGPResult,
+    SelectivityStats,
+    TriplePattern,
+    _join_indices,
+    bgp_cache_key,
+    bgp_variables,
+    canonical_bgp,
+    decode_result_entry,
+    encode_result_entry,
+    execute_bgp,
+    parse_bgp,
+    plan_bgp,
+)
+from repro.core.hypergraph import Hypergraph, LabelTable
+from repro.core.query import TripleQueryEngine
+from repro.core.repair import compress
+from repro.distributed.partition import STRATEGIES
+from repro.serve.sharded import ShardedTripleService
+
+N_NODES, N_PREDS = 16, 4
+
+# handcrafted rows guaranteeing every join shape the suite probes:
+# a pred-0 triangle (cycle), a self-loop, a 3-pred star at node 7,
+# cross-predicate chains, and a lone pred-3 edge for selectivity plans
+_FIXED = [
+    (1, 0, 2), (2, 0, 3), (3, 0, 1),          # triangle on pred 0
+    (5, 0, 5),                                # self-loop
+    (7, 1, 8), (7, 2, 9), (7, 0, 10),         # star hub
+    (1, 1, 4), (4, 2, 6), (6, 1, 2),          # chain 1 -0/1/2-> ...
+    (12, 3, 13),                              # rare predicate
+    (2, 1, 3), (3, 2, 5), (10, 1, 11),
+]
+
+
+def _rows(extra_seed=None, n_extra=30):
+    rows = list(_FIXED)
+    if extra_seed is not None:
+        rng = np.random.default_rng(extra_seed)
+        extra = np.stack([rng.integers(0, N_NODES, n_extra),
+                          rng.integers(0, 3, n_extra),  # keep pred 3 rare
+                          rng.integers(0, N_NODES, n_extra)], axis=1)
+        rows += [tuple(map(int, r)) for r in extra]
+    return np.array(sorted(set(rows)), dtype=np.int64)
+
+
+def _engine(rows, **kwargs):
+    table = LabelTable.terminals([2] * N_PREDS)
+    grammar, _ = compress(Hypergraph.from_triples(rows, N_NODES), table)
+    kwargs.setdefault("cache", None)
+    kwargs.setdefault("crossover", 0)
+    kwargs.setdefault("delta_budget", None)
+    return TripleQueryEngine(grammar, **kwargs)
+
+
+@pytest.fixture(scope="module")
+def rows():
+    return _rows(extra_seed=3)
+
+
+@pytest.fixture(scope="module")
+def engine(rows):
+    return _engine(rows)
+
+
+def _triples(engine_or_svc):
+    if hasattr(engine_or_svc, "current_triples"):
+        return [tuple(map(int, r)) for r in engine_or_svc.current_triples()]
+    return [tuple(map(int, r))
+            for eng in engine_or_svc.engines
+            for r in eng.current_triples()]
+
+
+# -- parsing ---------------------------------------------------------------
+
+def test_parse_string_and_tuple_forms_agree():
+    from_str = parse_bgp("?x 0 ?y . ?y 1 17")
+    from_tuples = parse_bgp([("?x", 0, "?y"), ("?y", 1, 17)])
+    assert from_str == from_tuples
+    assert from_str[0] == TriplePattern("?x", 0, "?y")
+    assert from_str[1].o == 17
+    assert bgp_variables(from_str) == ["?x", "?y"]
+
+
+def test_parse_rejects_bad_terms():
+    with pytest.raises(ValueError):
+        parse_bgp("")  # empty BGP
+    with pytest.raises(ValueError):
+        parse_bgp("?x 0")  # arity
+    with pytest.raises(ValueError):
+        parse_bgp("? 0 1")  # bare '?'
+    with pytest.raises(ValueError):
+        parse_bgp([("worksFor", 0, 1)])  # string without term dictionary
+    with pytest.raises(ValueError):
+        parse_bgp([(-1, 0, 1)])  # negative constant
+    with pytest.raises(TypeError):
+        parse_bgp([(None, 0, 1)])
+
+
+def test_variables_first_appearance_order():
+    pats = parse_bgp("?b 0 ?a . ?c 1 ?a . ?a 2 ?d")
+    assert bgp_variables(pats) == ["?b", "?a", "?c", "?d"]
+
+
+def test_canonical_bgp_renames_variables():
+    a = parse_bgp("?x 0 ?y . ?y 1 17")
+    b = parse_bgp("?s 0 ?t . ?t 1 17")
+    c = parse_bgp("?x 0 ?y . ?x 1 17")  # different join structure
+    assert canonical_bgp(a) == canonical_bgp(b)
+    assert canonical_bgp(a) != canonical_bgp(c)
+    assert bgp_cache_key(a) == bgp_cache_key(b)
+    assert bgp_cache_key(a) != bgp_cache_key(c)
+    assert all(k <= -2 for k in bgp_cache_key(a))  # disjoint from patterns
+
+
+# -- planner ---------------------------------------------------------------
+
+def test_selectivity_stats_exact_pred_card(engine, rows):
+    stats = engine.selectivity()
+    want = np.bincount(rows[:, 1], minlength=N_PREDS)
+    assert stats.pred_card.tolist() == want.tolist()
+    assert stats.total == len(rows)
+    assert stats.n_subjects >= len(set(rows[:, 0].tolist()))
+    assert stats.n_objects >= len(set(rows[:, 2].tolist()))
+
+
+def test_selectivity_stats_merge():
+    a = SelectivityStats(10, np.array([4, 6]), 3, 5)
+    b = SelectivityStats(5, np.array([1, 2, 2]), 2, 2)
+    m = SelectivityStats.merge([a, b])
+    assert m.total == 15 and m.pred_card.tolist() == [5, 8, 2]
+    assert m.n_subjects == 5 and m.n_objects == 7
+    assert SelectivityStats.merge([]).total == 0
+
+
+def test_plan_starts_with_most_selective():
+    stats = SelectivityStats(16, np.array([10, 5, 1, 0]), 8, 8)
+    pats = parse_bgp("?a 0 ?b . ?b 2 ?c")
+    assert plan_bgp(pats, stats) == [1, 0]
+
+
+def test_plan_prefers_connected_over_cheaper_disconnected():
+    stats = SelectivityStats(16, np.array([10, 5, 1, 0]), 8, 8)
+    pats = parse_bgp("?a 2 ?b . ?b 0 ?c . ?c 1 ?d")
+    # after the cheap pred-2 start, pred-1 is cheaper than pred-0 but is
+    # not connected to the solved variables yet — the plan must not take
+    # a cartesian step while a connected pattern exists
+    assert plan_bgp(pats, stats) == [0, 1, 2]
+
+
+def test_execute_rejects_bad_order(engine):
+    with pytest.raises(ValueError):
+        execute_bgp("?x 0 ?y . ?y 1 ?z", engine.query_batch_view,
+                    order=[0, 0])
+
+
+# -- engine-level execution ------------------------------------------------
+
+def test_single_pattern_bgp(engine):
+    assert_bgp_equal(engine.query_bgp("?x 1 ?y"), _triples(engine), "?x 1 ?y")
+
+
+def test_chain2(engine):
+    assert_bgp_equal(engine.query_bgp("?x 0 ?y . ?y 1 ?z"),
+                     _triples(engine), "?x 0 ?y . ?y 1 ?z")
+
+
+def test_chain3(engine):
+    bgp = "?x 0 ?y . ?y 1 ?z . ?z 2 ?w"
+    assert_bgp_equal(engine.query_bgp(bgp), _triples(engine), bgp)
+
+
+def test_star(engine):
+    bgp = "?h 0 ?a . ?h 1 ?b . ?h 2 ?c"
+    res = engine.query_bgp(bgp)
+    assert_bgp_equal(res, _triples(engine), bgp)
+    assert len(res) > 0  # the fixture star hub must actually match
+
+
+def test_cycle(engine):
+    bgp = "?x 0 ?y . ?y 0 ?z . ?z 0 ?x"
+    res = engine.query_bgp(bgp)
+    assert_bgp_equal(res, _triples(engine), bgp)
+    assert (1, 2, 3) in res.tuples()  # fixture triangle
+    assert (5, 5, 5) in res.tuples()  # self-loop closes a 'cycle' too
+
+
+def test_cartesian_product(engine):
+    triples = _triples(engine)
+    bgp = "?a 3 ?b . ?c 2 ?d"  # no shared variables
+    res = engine.query_bgp(bgp)
+    assert_bgp_equal(res, triples, bgp)
+    n3 = sum(1 for _, p, _ in triples if p == 3)
+    n2 = sum(1 for _, p, _ in triples if p == 2)
+    assert len(res) == n3 * n2 > 0
+
+
+def test_unsatisfiable_patterns(engine):
+    res = engine.query_bgp("?x 0 ?y . ?y 3 15")
+    assert_bgp_equal(res, _triples(engine), "?x 0 ?y . ?y 3 15")
+    assert len(res) == 0 and res.vars == ("?x", "?y")
+    assert engine.query_bgp([(0, 3, 0)]).tuples() == []
+
+
+def test_constant_only_pattern(engine):
+    present = _triples(engine)[0]
+    bgp = [present, ("?x", 0, "?y")]
+    assert_bgp_equal(engine.query_bgp(bgp), _triples(engine), bgp)
+    absent = [(15, 3, 15), ("?x", 0, "?y")]
+    assert len(engine.query_bgp(absent)) == 0
+
+
+# -- edge-case regression pins --------------------------------------------
+
+def test_repeated_variable_within_pattern(engine):
+    for bgp in ("?x 0 ?x", "?x ?p ?x", [("?x", "?x", "?y")]):
+        assert_bgp_equal(engine.query_bgp(bgp), _triples(engine), bgp)
+    assert (5,) in engine.query_bgp("?x 0 ?x").tuples()  # the fixture self-loop
+
+
+def test_all_variable_pattern_as_join_step(engine):
+    bgp = "?s ?p ?o . ?o 1 ?w"
+    assert_bgp_equal(engine.query_bgp(bgp), _triples(engine), bgp)
+    assert_bgp_equal(engine.query_bgp("?s ?p ?o"), _triples(engine),
+                     "?s ?p ?o")
+
+
+def test_empty_intermediate_short_circuits(engine):
+    calls = []
+
+    def counting(s, p, o):
+        calls.append(len(s))
+        return engine.query_batch_view(s, p, o)
+
+    res = execute_bgp("?x 3 15 . ?x 0 ?y . ?y 1 ?z", counting,
+                      order=[0, 1, 2])
+    assert len(res) == 0 and res.vars == ("?x", "?y", "?z")
+    assert calls == [1]  # later patterns never executed
+
+
+def test_zero_row_inputs_on_join_path():
+    empty = np.zeros((0, 3), dtype=np.int64)
+    svc = ShardedTripleService.build(empty, N_NODES, N_PREDS, n_shards=2)
+    try:
+        res = svc.query_bgp("?s ?p ?o . ?s 0 ?y")
+        assert len(res) == 0 and res.vars == ("?s", "?p", "?o", "?y")
+    finally:
+        svc.close()
+
+
+def test_result_entry_roundtrip():
+    rows = np.array([[3, 1], [0, 2]], dtype=np.int64)
+    rows.flags.writeable = False
+    res = BGPResult(("?a", "?b"), rows)
+    back = decode_result_entry(encode_result_entry(res), res.vars)
+    assert back.vars == res.vars and back.tuples() == res.tuples()
+    # zero rows and zero vars both survive
+    for r in (BGPResult(("?a",), np.zeros((0, 1), dtype=np.int64)),
+              BGPResult((), np.zeros((1, 0), dtype=np.int64))):
+        back = decode_result_entry(encode_result_entry(r), r.vars)
+        assert back.tuples() == r.tuples()
+
+
+def test_bgp_result_api(engine):
+    res = engine.query_bgp("?y 1 ?x")
+    assert res.vars == ("?y", "?x")
+    rows = res.tuples()
+    assert rows == sorted(rows)  # deterministic lexicographic order
+    assert len(res) == len(rows)
+    assert res.bindings()[0] == dict(zip(res.vars, rows[0]))
+    assert not res.rows.flags.writeable
+
+
+# -- join machinery units --------------------------------------------------
+
+def test_join_indices_matches_bruteforce():
+    rng = np.random.default_rng(5)
+    left = rng.integers(0, 4, size=(30, 2)).astype(np.int64)
+    right = rng.integers(0, 4, size=(20, 2)).astype(np.int64)
+    li, ri = _join_indices(left, right)
+    got = sorted(zip(li.tolist(), ri.tolist()))
+    want = sorted((i, j) for i in range(len(left))
+                  for j in range(len(right))
+                  if (left[i] == right[j]).all())
+    assert got == want
+
+
+def test_hash_join_mode_matches_bind_mode(engine, monkeypatch):
+    bgp = "?x ?p ?y . ?y ?q ?z"
+    bind = execute_bgp(bgp, engine.query_batch_view, None)
+    monkeypatch.setattr(bgp_mod, "_BIND_FANOUT", 0)  # force scan+hash path
+    hashed = execute_bgp(bgp, engine.query_batch_view, None)
+    assert bind.tuples() == hashed.tuples() and len(bind) > 0
+    assert_bgp_equal(hashed, _triples(engine), bgp)
+
+
+# -- sharded tier ----------------------------------------------------------
+
+def test_sharded_matches_oracle_all_strategies(rows):
+    bgps = ["?x 0 ?y . ?y 1 ?z",
+            "?h 0 ?a . ?h 1 ?b",
+            "?s ?p ?o . ?o 2 ?w"]
+    triples = [tuple(map(int, r)) for r in rows]
+    for strategy in STRATEGIES:
+        for n_shards in (1, 2, 4):
+            svc = ShardedTripleService.build(
+                rows, N_NODES, N_PREDS, n_shards=n_shards, strategy=strategy)
+            try:
+                for bgp in bgps:
+                    assert_bgp_equal(svc.query_bgp(bgp), triples, bgp)
+            finally:
+                svc.close()
+
+
+def test_durable_service_dispatches_query_bgp(rows, tmp_path):
+    from repro.persist.service import DurableShardedService
+    svc = DurableShardedService.build(
+        rows, N_NODES, N_PREDS, root=str(tmp_path / "svc"), n_shards=2,
+        rebalance_skew=None)
+    try:
+        bgp = "?x 0 ?y . ?y 1 ?z"
+        assert_bgp_equal(svc.query_bgp(bgp), _triples(svc.service), bgp)
+        svc.insert_triples([[0, 0, 7], [7, 1, 9]])
+        assert_bgp_equal(svc.query_bgp(bgp), _triples(svc.service), bgp)
+    finally:
+        svc.close()
+
+
+# -- whole-BGP cache -------------------------------------------------------
+
+def test_whole_bgp_cache_hits_and_env_off(rows, monkeypatch):
+    svc = ShardedTripleService.build(rows, N_NODES, N_PREDS, n_shards=2)
+    try:
+        bgp = "?x 0 ?y . ?y 1 ?z"
+        first = svc.query_bgp(bgp)
+        again = svc.query_bgp("?a 0 ?b . ?b 1 ?c")  # canonical-equal
+        assert again.tuples() == first.tuples()
+        assert again.vars == ("?a", "?b", "?c")  # caller's names, not cached
+        assert svc.stats.bgp_cache_hits == 1
+        assert svc.stats.bgp_queries == 2
+        monkeypatch.setenv("ITR_BGP_CACHE", "0")
+        svc.query_bgp(bgp)
+        assert svc.stats.bgp_cache_hits == 1  # cache bypassed entirely
+    finally:
+        svc.close()
+
+
+def test_stale_bgp_cache_regression(rows):
+    """The generation-vector key must invalidate whole-BGP entries on ANY
+    shard change — without it, this exact sequence served a stale join."""
+    svc = ShardedTripleService.build(rows, N_NODES, N_PREDS, n_shards=2)
+    try:
+        bgp = "?x 0 ?y . ?y 1 ?z"
+        before = svc.query_bgp(bgp)
+        # new pred-1 edge hanging off an existing pred-0 edge => answer grows
+        s, _, o = next(t for t in _triples(svc) if t[1] == 0)
+        svc.insert_triples([[o, 1, 15]])
+        after = svc.query_bgp(bgp)
+        assert_bgp_equal(after, _triples(svc), bgp)
+        assert len(after) > len(before)
+        svc.delete_triples([[o, 1, 15]])
+        assert svc.query_bgp(bgp).tuples() == before.tuples()
+    finally:
+        svc.close()
+
+
+def test_bgp_correct_across_mutation_rebuild_rebalance(rows):
+    bgp = "?x 0 ?y . ?y ?p ?z"
+    for strategy in STRATEGIES:
+        svc = ShardedTripleService.build(
+            rows, N_NODES, N_PREDS, n_shards=2, strategy=strategy,
+            rebalance_skew=None)
+        try:
+            assert_bgp_equal(svc.query_bgp(bgp), _triples(svc), bgp)
+            svc.insert_triples([[0, 0, 13], [13, 2, 14], [13, 3, 1]])
+            assert_bgp_equal(svc.query_bgp(bgp), _triples(svc), bgp)
+            svc.delete_triples(rows[:5])
+            assert_bgp_equal(svc.query_bgp(bgp), _triples(svc), bgp)
+            svc.rebuild(force=True)
+            assert_bgp_equal(svc.query_bgp(bgp), _triples(svc), bgp)
+            svc.rebalance(force=True)
+            assert_bgp_equal(svc.query_bgp(bgp), _triples(svc), bgp)
+        finally:
+            svc.close()
+
+
+def test_oracle_helper_agrees_with_itself():
+    triples = [(0, 0, 1), (1, 1, 2), (0, 0, 2)]
+    vars_, rows_ = oracle_bgp(triples, "?x 0 ?y . ?y 1 ?z")
+    assert vars_ == ["?x", "?y", "?z"] and rows_ == [(0, 1, 2)]
+    # duplicate-free cartesian sanity
+    _, both = oracle_bgp(triples, "?a 0 ?b . ?c 1 ?d")
+    assert both == [(0, 1, 1, 2), (0, 2, 1, 2)]

