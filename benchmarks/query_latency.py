@@ -122,6 +122,7 @@ def run(dataset="geo-coordinates-en", n_queries=500, quiet=False,
     _bench_rebalance(itr, ds, bench, n_queries, quiet)
     _bench_bgp(itr, ds, bench, n_queries, quiet)
     _bench_recovery(ds, bench, quiet)
+    _bench_ingestion(ds, bench, quiet)
     _finalize_throughput(bench, n_queries)
     if json_path:
         try:  # a full rewrite must not erase the committed CI gate baseline
@@ -877,6 +878,73 @@ def _bench_recovery(ds, bench: dict, quiet: bool) -> None:
                   f"({r['wal_replay_records_per_s']:.0f}rec/s)")
     finally:
         shutil.rmtree(root, ignore_errors=True)
+
+
+def _bench_ingestion(ds, bench: dict, quiet: bool) -> None:
+    """Streaming RDF ingestion + term-dictionary footprint (PR 10).
+
+    The dataset is serialized to N-Triples, then streamed back through
+    :func:`repro.data.ingest.ingest_file` into an empty sharded tier.
+    ``bench["ingestion"]`` records:
+
+    * ``dict_vs_plain_bytes`` (gated, lower = better): the front-coded
+      term dictionary's bytes vs a plain-Python forward+reverse mapping
+      (raw term bytes stored twice + 8-byte id and pointer slots) —
+      deterministic for a given dataset, so it gates tightly;
+    * ``terms_per_s`` / ``rows_per_s``: mint and ingest throughput
+      (recorded, not gated — absolute rates are machine-dependent);
+    * ``dict_bytes_per_term`` vs ``hdt_model_bytes_per_term``: footprint
+      against the IRI-length model the N-Triples size baseline assumes
+      (:func:`repro.baselines.ntriples.ntriples_size_bytes`).
+    """
+    import shutil
+    import tempfile
+
+    from repro.data.ingest import ingest_file
+    from repro.data.rdf import write_ntriples
+    from repro.serve.sharded import ShardedTripleService
+
+    tmp = tempfile.mkdtemp(prefix="itr-bench-ingest-")
+    try:
+        path = f"{tmp}/graph.nt"
+        write_ntriples(path, ds.triples)
+        svc = ShardedTripleService.build(
+            np.zeros((0, 3), dtype=np.int64), n_nodes=1, n_preds=ds.n_preds,
+            n_shards=2, cache=None, crossover=0, delta_budget=None,
+            rebalance_skew=None)
+        stats = ingest_file(svc, path)
+        td = svc.term_dict
+        n_terms = td.n_nodes + td.n_preds
+        raw = sum(len(t.encode()) for t in td.nodes.terms_in_id_order()) \
+            + sum(len(t.encode()) for t in td.preds.terms_in_id_order())
+        plain_bytes = 2 * raw + 16 * n_terms
+        dict_bytes = td.size_in_bytes()
+        hdt_per_term = (24 * td.n_nodes + 28 * td.n_preds) / max(n_terms, 1)
+        bench["ingestion"] = {
+            "rows": stats.rows,
+            "batches": stats.batches,
+            "rows_per_s": stats.rows_per_s,
+            "terms_minted": stats.new_nodes + stats.new_preds,
+            "terms_per_s": (stats.new_nodes + stats.new_preds) / stats.seconds
+            if stats.seconds > 0 else float("inf"),
+            "dict_bytes": int(dict_bytes),
+            "plain_dict_bytes": int(plain_bytes),
+            "dict_vs_plain_bytes": dict_bytes / plain_bytes
+            if plain_bytes > 0 else float("inf"),
+            "dict_bytes_per_term": td.bytes_per_term(),
+            "hdt_model_bytes_per_term": hdt_per_term,
+        }
+        if not quiet:
+            b = bench["ingestion"]
+            print(f"ingestion rows={b['rows']} "
+                  f"({b['rows_per_s']:,.0f}rows/s, "
+                  f"{b['terms_per_s']:,.0f}terms/s) "
+                  f"dict={b['dict_bytes']}B vs plain={b['plain_dict_bytes']}B "
+                  f"({b['dict_vs_plain_bytes']:.3f}x) "
+                  f"{b['dict_bytes_per_term']:.1f}B/term "
+                  f"(hdt model {b['hdt_model_bytes_per_term']:.1f}B/term)")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
 
 
 def _finalize_throughput(bench: dict, n_queries: int) -> None:

@@ -30,7 +30,8 @@ GATE_TOLERANCE = 3.0
 
 # metric name suffixes where LOWER is better (ratios of our-time / reference)
 _LOWER_IS_BETTER = ("dispatched_vs_scalar", "sharded_vs_single",
-                    "overhead_vs_clean", "skew_after_vs_before")
+                    "overhead_vs_clean", "skew_after_vs_before",
+                    "dict_vs_plain_bytes")
 
 
 def gate_metrics(bench: dict) -> dict[str, float]:
@@ -87,6 +88,13 @@ def gate_metrics(bench: dict) -> dict[str, float]:
     if "cold_start_speedup" in recovery:
         # snapshot cold start must stay cheaper than a RePair rebuild
         out["recovery.cold_start_speedup"] = recovery["cold_start_speedup"]
+    ingestion = bench.get("ingestion", {})
+    if "dict_vs_plain_bytes" in ingestion:
+        # the front-coded term dictionary must stay smaller than a plain
+        # forward+reverse Python mapping; size ratio is deterministic for
+        # a given dataset, so it gates tightly despite the 3x tolerance
+        out["ingestion.dict_vs_plain_bytes"] = \
+            ingestion["dict_vs_plain_bytes"]
     load = bench.get("serving_load", {}).get("smoke_signals", {})
     if "achieved_vs_offered" in load:
         # open-loop throughput ratio at a sub-saturation offered rate:
@@ -355,6 +363,16 @@ def main(smoke: bool = False, check: bool = False,
                       f"{recovery['wal_replay_records_per_s']:.0f},rec_per_s")
                 print(f"recovery/first_query_after_open_us,"
                       f"{recovery['first_query_after_open_us']:.1f},us")
+            ingestion = bench.get("ingestion", {})
+            if ingestion:
+                print(f"ingestion/dict_vs_plain_bytes,"
+                      f"{ingestion['dict_vs_plain_bytes']:.4f},ratio")
+                print(f"ingestion/terms_per_s,"
+                      f"{ingestion['terms_per_s']:.0f},terms_per_s")
+                print(f"ingestion/rows_per_s,"
+                      f"{ingestion['rows_per_s']:.0f},rows_per_s")
+                print(f"ingestion/dict_bytes_per_term,"
+                      f"{ingestion['dict_bytes_per_term']:.2f},bytes")
         except Exception as e:
             print(f"# {BASELINE_JSON} unavailable: {e}", file=sys.stderr)
         lat = load_bench.get("latency", {})

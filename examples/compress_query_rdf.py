@@ -22,9 +22,12 @@ def main():
         path = tempfile.mktemp(suffix=".nt")
         write_ntriples(path, ds0.triples)
         print(f"(no input given: generated ttt-win-style graph at {path})")
-    triples, node_names, pred_names = parse_ntriples(path)
+    triples, node_names, pred_names, report = parse_ntriples(path)
     ds = TripleDataset(np.unique(triples, axis=0), len(node_names), len(pred_names), name=path)
     print(f"parsed {path}: |V|={ds.n_nodes} |E|={ds.n_triples} |T|={ds.n_preds}")
+    if report.malformed:
+        print(f"  WARNING: {report.malformed} malformed line(s) skipped, "
+              f"e.g. {report.samples[:2]}")
 
     built = build_all(ds)
     raw = built.pop("raw_bytes")

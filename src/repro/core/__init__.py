@@ -18,6 +18,7 @@ from repro.core.bgp import (
 from repro.core.query import QueryResultView, TripleQueryEngine, query_oracle
 from repro.core.result_cache import CacheStats, QueryResultCache, ShardCacheView
 from repro.core.itr_plus import attach_node_labels, strip_node_labels
+from repro.core.term_dict import StringSpace, TermDict, resolve_dict_block
 
 __all__ = [
     "Hypergraph",
@@ -52,4 +53,7 @@ __all__ = [
     "plan_bgp",
     "attach_node_labels",
     "strip_node_labels",
+    "StringSpace",
+    "TermDict",
+    "resolve_dict_block",
 ]

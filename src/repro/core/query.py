@@ -253,6 +253,7 @@ class TripleQueryEngine:
                 else resolve_delta_budget(delta_budget)
         self.rebuild_count = 0
         self._select_stats = None  # lazy SelectivityStats (see selectivity())
+        self.term_dict = None  # optional TermDict (attach_term_dict)
 
     @classmethod
     def from_state(cls, grammar: Grammar, encoded: EncodedGrammar,
@@ -315,6 +316,7 @@ class TripleQueryEngine:
             else resolve_delta_budget(delta_budget)
         self.rebuild_count = int(rebuild_count)
         self._select_stats = None
+        self.term_dict = None
         return self
 
     # -- crossover calibration -------------------------------------------
@@ -816,6 +818,51 @@ class TripleQueryEngine:
         from repro.core.bgp import execute_bgp
         return execute_bgp(patterns, self.query_batch_view, self.selectivity())
 
+    # -- string-term surfaces (require an attached TermDict) --------------
+    def attach_term_dict(self, term_dict) -> None:
+        """Attach a :class:`~repro.core.term_dict.TermDict` so this engine
+        can answer string-term queries (`query_strings`,
+        `query_bgp_strings`). The dictionary survives `rebuild`."""
+        self.term_dict = term_dict
+
+    def _require_term_dict(self):
+        if self.term_dict is None:
+            raise ValueError(
+                "no term dictionary attached — call attach_term_dict() "
+                "(or ingest through repro.data.ingest, which attaches one)")
+        return self.term_dict
+
+    def query_strings(self, s: str | None, p: str | None, o: str | None):
+        """Answer one (S, P, O) pattern with *term strings*: each slot is a
+        term or ``None`` (unbound). Terms resolve to ids once, here at the
+        boundary; a bound term the dictionary has never seen short-circuits
+        to ``[]`` without executing. Returns ``(s, p, o)`` term triples."""
+        td = self._require_term_dict()
+        from repro.core.term_dict import resolve_string_triple
+        s_id, p_id, o_id, known = resolve_string_triple(td, s, p, o)
+        if not known:
+            return []
+        out = []
+        for label, nodes in self.query(s_id, p_id, o_id):
+            if len(nodes) != 2:
+                raise ValueError(
+                    f"string queries need rank-2 edges, got rank {len(nodes)}")
+            out.append((td.node_term(nodes[0]), td.pred_term(label),
+                        td.node_term(nodes[1])))
+        return out
+
+    def query_bgp_strings(self, patterns) -> list[dict]:
+        """`query_bgp` with string terms: patterns are (s, p, o) tuples of
+        ``?var`` names / constant term strings. Unknown constants
+        short-circuit to ``[]``. Returns ``[{var: term}, ...]`` binding
+        rows (deterministic `BGPResult` order)."""
+        td = self._require_term_dict()
+        from repro.core.term_dict import bgp_result_to_terms, resolve_string_bgp
+        id_patterns, pred_vars, known = resolve_string_bgp(td, patterns)
+        if not known:
+            return []
+        return bgp_result_to_terms(td, self.query_bgp(id_patterns), pred_vars)
+
     def rebuild(self, config=None) -> bool:
         """Recompress base+delta into a fresh grammar and swap it in.
 
@@ -851,11 +898,13 @@ class TripleQueryEngine:
                                   config=config)
         fresh._base_edges = len(triples)  # the new base IS these rows
         rebuilds = self.rebuild_count + 1
+        term_dict = self.term_dict  # survives the swap, like the cache view
         # a kill here loses only memory: the swap below never touches disk,
         # so recovery replays snapshot + WAL and re-reaches this state
         crash_point("engine.rebuild")
         self.__dict__.update(fresh.__dict__)
         self.rebuild_count = rebuilds
+        self.term_dict = term_dict
         if self.cache is not None:
             self.cache.bump_generation()
         return True

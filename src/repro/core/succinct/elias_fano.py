@@ -16,8 +16,17 @@ class EliasFano:
         values = np.asarray(values, dtype=np.int64)
         if len(values) and np.any(np.diff(values) < 0):
             raise ValueError("EliasFano requires a non-decreasing sequence")
+        if len(values) and values[0] < 0:
+            raise ValueError("EliasFano requires non-negative values")
         self.n = int(len(values))
         self.universe = int(universe if universe is not None else (values[-1] + 1 if self.n else 1))
+        if self.n and self.universe <= int(values[-1]):
+            # a universe that cannot hold the largest value would silently
+            # mis-split the high/low bits and decode garbage on access
+            raise ValueError(
+                f"EliasFano universe {self.universe} too small for max value "
+                f"{int(values[-1])} (need universe > max value)"
+            )
         n = max(self.n, 1)
         self.l = max(0, int(np.floor(np.log2(max(self.universe, 1) / n))) if self.universe > n else 0)
         low_mask = (1 << self.l) - 1

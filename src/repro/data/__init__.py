@@ -3,7 +3,15 @@ N-Triples parser, the ITR-compressed GraphStore, and neighbor samplers."""
 from repro.data.synthetic import rdf_like, version_graph, web_graph, molecule_batch
 from repro.data.graph_store import GraphStore
 from repro.data.sampler import NeighborSampler
-from repro.data.rdf import parse_ntriples, write_ntriples
+from repro.data.rdf import ParseReport, iter_ntriples, parse_ntriples, write_ntriples
+from repro.data.ingest import (
+    IngestStats,
+    ingest_file,
+    ingest_rows,
+    iter_tsv,
+    resolve_ingest_batch,
+    scan_predicates,
+)
 
 __all__ = [
     "rdf_like",
@@ -12,6 +20,14 @@ __all__ = [
     "molecule_batch",
     "GraphStore",
     "NeighborSampler",
+    "ParseReport",
+    "iter_ntriples",
     "parse_ntriples",
     "write_ntriples",
+    "IngestStats",
+    "ingest_file",
+    "ingest_rows",
+    "iter_tsv",
+    "resolve_ingest_batch",
+    "scan_predicates",
 ]

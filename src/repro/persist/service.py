@@ -57,12 +57,20 @@ from repro.core.result_cache import QueryResultCache
 from repro.distributed.partition import plan_from_dict, plan_to_dict
 from repro.distributed.rebalance import RebalancePlan, migration_moves
 from repro.persist.crash import crash_point
-from repro.persist.snapshot import SnapshotError, load_snapshot, save_snapshot
+from repro.persist.snapshot import (
+    SnapshotError,
+    load_snapshot,
+    load_term_dict,
+    save_snapshot,
+    save_term_dict,
+)
 from repro.persist.wal import (
     OP_DELETE,
     OP_INSERT,
     OP_MIGRATE,
+    OP_NODE_TERMS,
     OP_PLAN_SWAP,
+    OP_PRED_TERMS,
     OP_REBALANCE_BEGIN,
     WriteAheadLog,
     read_wal_records,
@@ -75,6 +83,7 @@ from repro.serve.sharded import (
 
 SERVICE_MANIFEST = "service.json"
 WAL_FILE = "wal.log"
+TERM_DICT_DIR = "term_dict"
 
 _SNAP_RE = re.compile(r"^snap_(\d{6})$")
 
@@ -121,6 +130,25 @@ def _pack_plan(op: int, plan) -> bytes:
 def _pack_migrate(src: int, dst: int, rows: np.ndarray) -> bytes:
     return bytes([OP_MIGRATE]) + _MIGRATE_HDR.pack(src, dst) \
         + np.ascontiguousarray(rows, dtype="<i8").tobytes()
+
+def _pack_terms(op: int, terms) -> bytes:
+    # terms may contain any character, so each is length-prefixed
+    # (u32 byte length + utf-8 bytes) rather than delimiter-joined
+    parts = [bytes([op])]
+    for t in terms:
+        enc = t.encode("utf-8")
+        parts.append(struct.pack("<I", len(enc)))
+        parts.append(enc)
+    return b"".join(parts)
+
+def _unpack_terms(payload: bytes) -> list[str]:
+    terms, off = [], 0
+    while off < len(payload):
+        (ln,) = struct.unpack_from("<I", payload, off)
+        off += 4
+        terms.append(payload[off:off + ln].decode("utf-8"))
+        off += ln
+    return terms
 
 
 class DurableShardedService:
@@ -212,6 +240,9 @@ class DurableShardedService:
         for k in failed:
             svc.mark_shard_failed(k)
         report.failed_shards = failed
+        if manifest.get("term_dict"):
+            svc.term_dict = load_term_dict(
+                os.path.join(snap, TERM_DICT_DIR), verify=verify)
 
         mig_plan = manifest.get("migration_plan")
         if mig_plan is not None:
@@ -325,6 +356,42 @@ class DurableShardedService:
             return svc.insert_triples(rows) if op == OP_INSERT \
                 else svc.delete_triples(rows)
 
+    # -- term minting (WAL-covered) ----------------------------------------
+    def add_node_terms(self, terms) -> np.ndarray:
+        """Durably mint node-term ids: genuinely new terms are logged
+        (first-seen order) BEFORE the dictionary learns them, so recovery
+        replay and WAL-tailing replicas rebuild the identical id space."""
+        return self._mint_terms(terms, OP_NODE_TERMS)
+
+    def add_pred_terms(self, terms) -> np.ndarray:
+        """Durably mint predicate-term ids (see :meth:`add_node_terms`);
+        raises before logging anything if the mint would exceed the tier's
+        fixed predicate capacity."""
+        return self._mint_terms(terms, OP_PRED_TERMS)
+
+    def _mint_terms(self, terms, op: int) -> np.ndarray:
+        svc = self.service
+        terms = list(terms)
+        # same discipline as _mutate: validate + append + apply in one
+        # exclusive section so WAL order equals mint order (ids are
+        # assigned by arrival order — replay must see the same sequence)
+        with svc._rw.write():
+            td = svc._require_term_dict()
+            lookup = td.node_id if op == OP_NODE_TERMS else td.pred_id
+            fresh = [t for t in dict.fromkeys(terms) if lookup(t) is None]
+            if op == OP_PRED_TERMS and td.n_preds + len(fresh) > svc.plan.n_preds:
+                # validate BEFORE the append: a record that cannot apply
+                # must never reach the log
+                raise ValueError(
+                    f"predicate capacity exhausted: tier was built with "
+                    f"n_preds={svc.plan.n_preds}, dictionary holds "
+                    f"{td.n_preds}, cannot mint {len(fresh)} more — rebuild "
+                    "the tier with a larger predicate capacity")
+            if fresh:
+                self.wal.append(_pack_terms(op, fresh))
+            return svc.add_node_terms(terms) if op == OP_NODE_TERMS \
+                else svc.add_pred_terms(terms)
+
     # -- journaling hook (rebalance state changes) -------------------------
     def _on_journal(self, kind: str, payload) -> None:
         if kind == "migrate":
@@ -366,11 +433,14 @@ class DurableShardedService:
             for k, engine in enumerate(svc.engines):
                 save_snapshot(engine, os.path.join(tmp, f"shard_{k}"),
                               atomic=False)
+            if svc.term_dict is not None:
+                save_term_dict(svc.term_dict, os.path.join(tmp, TERM_DICT_DIR))
             manifest = {
                 "format": 1,
                 "plan": plan_to_dict(svc.plan),
                 "migration_plan": None if svc._migration is None
                 else plan_to_dict(svc._migration.new_plan),
+                "term_dict": svc.term_dict is not None,
             }
             # service manifest last: the directory's commit marker
             with open(os.path.join(tmp, SERVICE_MANIFEST), "w") as f:
@@ -481,6 +551,20 @@ def apply_wal_record(svc: ShardedTripleService, payload: bytes,
         svc.plan = plan_from_dict(json.loads(payload[1:].decode()))
         svc._migration = None
         report.migration_resumed = False
+    elif op in (OP_NODE_TERMS, OP_PRED_TERMS):
+        # records hold only genuinely-new terms in first-seen order, so
+        # appending them in log order reconstructs the exact id sequence
+        # (idempotent: a term already present keeps its id)
+        terms = _unpack_terms(payload[1:])
+        td = svc.term_dict
+        if td is None:
+            from repro.core.term_dict import TermDict
+            td = TermDict.empty()
+            svc.term_dict = td
+        if op == OP_NODE_TERMS:
+            td.add_node_terms(terms)
+        else:
+            td.add_pred_terms(terms)
     else:
         raise SnapshotError(f"unknown WAL op code {op}")
 

@@ -285,3 +285,48 @@ def _rules_from_flat(flat: FlatGrammar, table: LabelTable) -> dict[int, Rule]:
             np.asarray(po[e0:e1 + 1] - po[e0], dtype=np.int64))
         rules[lbl] = Rule(lbl, rank, rhs)
     return rules
+
+
+# -- term dictionary persistence --------------------------------------------
+
+def save_term_dict(term_dict, path) -> str:
+    """Write a :class:`~repro.core.term_dict.TermDict` into directory
+    *path*: one ``.npy`` per array plus a crc32-checksummed manifest,
+    written last — the same commit discipline as engine snapshots. The
+    caller (``DurableShardedService.snapshot``) places the directory
+    inside the versioned ``snap_NNNNNN.tmp`` tree, so atomicity rides the
+    service-level rename."""
+    d = os.fspath(path)
+    os.makedirs(d, exist_ok=True)
+    meta, arrays = term_dict.to_arrays()
+    checksums: dict[str, int] = {}
+    for name, arr in arrays.items():
+        fname = f"{name}.npy"
+        fpath = os.path.join(d, fname)
+        np.save(fpath, np.ascontiguousarray(arr))
+        with open(fpath, "rb") as f:
+            checksums[fname] = zlib.crc32(f.read())
+    manifest = {"format": FORMAT_VERSION, "kind": "term_dict",
+                "spaces": meta, "checksums": checksums}
+    with open(os.path.join(d, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    return d
+
+
+def load_term_dict(path, *, verify: bool = True):
+    """Inverse of :func:`save_term_dict`; raises :class:`SnapshotError`
+    on a missing/corrupt directory. Arrays load eagerly (no mmap): the
+    dictionary's append side mutates, and the arrays are small next to
+    the engine structures."""
+    from repro.core.term_dict import TermDict
+
+    d = os.fspath(path)
+    manifest = read_manifest(d)
+    if manifest.get("kind") != "term_dict":
+        raise SnapshotError(f"{d}: not a term-dictionary snapshot")
+    arrays = _load_arrays(d, manifest, mmap=False, verify=verify)
+    try:
+        return TermDict.from_arrays(manifest["spaces"], arrays)
+    except (KeyError, ValueError, IndexError) as exc:
+        raise SnapshotError(f"inconsistent term-dict snapshot {d}: {exc}") \
+            from exc

@@ -53,6 +53,8 @@ OP_DELETE = 2          # triple rows deleted
 OP_MIGRATE = 3         # one rebalance migration batch (src, dst, rows)
 OP_REBALANCE_BEGIN = 4  # successor plan decided; migration starts
 OP_PLAN_SWAP = 5       # successor plan adopted as THE routing plan
+OP_NODE_TERMS = 6      # node terms minted into the term dictionary
+OP_PRED_TERMS = 7      # predicate terms minted into the term dictionary
 
 
 def resolve_wal_fsync(value=None) -> bool:

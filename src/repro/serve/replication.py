@@ -245,6 +245,14 @@ class ReplicationManager:
                 serve_threads=primary.serve_threads)
             svc._merged_ns = base
             svc._cache_ns = [base - 1 - k for k in range(plan.n_shards)]
+            if manifest.get("term_dict"):
+                # the group gets its own dictionary copy, caught up by the
+                # same WAL term records the primary minted through — so a
+                # replica answers string queries with the identical id space
+                from repro.persist.service import TERM_DICT_DIR
+                from repro.persist.snapshot import load_term_dict
+                svc.term_dict = load_term_dict(
+                    os.path.join(snap, TERM_DICT_DIR), verify=self.verify)
             mig = manifest.get("migration_plan")
             if mig is not None:
                 new_plan = plan_from_dict(mig)

@@ -152,6 +152,8 @@ class ShardedServiceStats:
     replica_flushes: int = 0  # flushes served by a read replica group
     bgp_queries: int = 0      # whole-BGP joins answered (hits + executions)
     bgp_cache_hits: int = 0   # BGPs served straight from the merged cache
+    string_queries: int = 0   # query_strings / query_bgp_strings calls
+    unknown_term_empties: int = 0  # string queries short-circuited to empty
     total_s: float = 0.0
     last_flush_qps: float = 0.0
 
@@ -218,6 +220,8 @@ class ShardedTripleService(MicroBatchService):
         # read-replica dispatch (a ReplicationManager once the durable
         # service enables replication; flushes then prefer a replica group)
         self._replicas = None
+        # optional TermDict for the string-term surfaces (attach_term_dict)
+        self.term_dict = None
 
     # -- construction ----------------------------------------------------
     @classmethod
@@ -356,6 +360,83 @@ class ShardedTripleService(MicroBatchService):
         with self._stats_lock:
             self.stats.bgp_queries += 1
         return result
+
+    # -- string-term surfaces (require an attached TermDict) ---------------
+    def attach_term_dict(self, term_dict) -> None:
+        """Attach a :class:`~repro.core.term_dict.TermDict` mapping term
+        strings to the dense ids this tier serves. One dictionary covers
+        the whole tier (ids are global, shards are an id-space partition);
+        string queries resolve terms once here at the boundary, then run
+        on ids through the normal scatter-gather path."""
+        self.term_dict = term_dict
+
+    def _require_term_dict(self):
+        if self.term_dict is None:
+            raise ValueError(
+                "no term dictionary attached — call attach_term_dict() "
+                "(or ingest through repro.data.ingest, which attaches one)")
+        return self.term_dict
+
+    def query_strings(self, s: str | None, p: str | None, o: str | None):
+        """One (S, P, O) pattern with *term strings* (``None`` = unbound).
+        A bound term the dictionary has never seen short-circuits to
+        ``[]`` without touching any shard. Returns term triples."""
+        td = self._require_term_dict()
+        from repro.core.term_dict import resolve_string_triple
+        s_id, p_id, o_id, known = resolve_string_triple(td, s, p, o)
+        with self._stats_lock:
+            self.stats.string_queries += 1
+            if not known:
+                self.stats.unknown_term_empties += 1
+        if not known:
+            return []
+        out = []
+        for label, nodes in self.query(s_id, p_id, o_id):
+            if len(nodes) != 2:
+                raise ValueError(
+                    f"string queries need rank-2 edges, got rank {len(nodes)}")
+            out.append((td.node_term(nodes[0]), td.pred_term(label),
+                        td.node_term(nodes[1])))
+        return out
+
+    def query_bgp_strings(self, patterns) -> list[dict]:
+        """`query_bgp` with string terms: patterns are (s, p, o) tuples of
+        ``?var`` names / constant term strings; unknown constants
+        short-circuit to ``[]`` without executing any join step. Returns
+        ``[{var: term}, ...]`` binding rows (deterministic order)."""
+        td = self._require_term_dict()
+        from repro.core.term_dict import bgp_result_to_terms, resolve_string_bgp
+        id_patterns, pred_vars, known = resolve_string_bgp(td, patterns)
+        with self._stats_lock:
+            self.stats.string_queries += 1
+            if not known:
+                self.stats.unknown_term_empties += 1
+        if not known:
+            return []
+        return bgp_result_to_terms(td, self.query_bgp(id_patterns), pred_vars)
+
+    def add_node_terms(self, terms) -> np.ndarray:
+        """Mint node ids for *terms* (known terms keep theirs); int64 ids
+        in input order. Node ids may extend past the build-time universe —
+        the plan routes them (clipped node ranges / hashed predicates)."""
+        with self._rw.write():
+            return self._require_term_dict().add_node_terms(terms)
+
+    def add_pred_terms(self, terms) -> np.ndarray:
+        """Mint predicate ids for *terms*. Predicate capacity is fixed at
+        build time (`n_preds` terminal labels per shard engine), so terms
+        that would mint past it raise instead of corrupting the id space —
+        pre-size `n_preds` when building a tier for streaming ingestion."""
+        with self._rw.write():
+            td = self._require_term_dict()
+            fresh = [t for t in dict.fromkeys(terms) if td.pred_id(t) is None]
+            if td.n_preds + len(fresh) > self.plan.n_preds:
+                raise ValueError(
+                    f"predicate capacity exhausted: tier was built with "
+                    f"n_preds={self.plan.n_preds}, dictionary holds "
+                    f"{td.n_preds}, cannot mint {len(fresh)} more — rebuild "
+                    "the tier with a larger predicate capacity")
+            return td.add_pred_terms(terms)
 
     # -- fan-out pool ------------------------------------------------------
     def set_serve_threads(self, n: int | None) -> int:

@@ -75,8 +75,9 @@ def test_ntriples_roundtrip(tmp_path):
     ds = rdf_like(n_nodes=40, n_edges=100, n_preds=3, seed=5)
     path = tmp_path / "g.nt"
     write_ntriples(str(path), ds.triples)
-    triples, node_names, pred_names = parse_ntriples(str(path))
+    triples, node_names, pred_names, report = parse_ntriples(str(path))
     assert len(triples) == ds.n_triples
+    assert report.malformed == 0 and report.statements == ds.n_triples
     # ids are assigned in file order; compare as string triple sets
     orig = {(f"<http://ex.org/n{s}>", f"<http://ex.org/p{p}>", f"<http://ex.org/n{o}>")
             for s, p, o in ds.triples}

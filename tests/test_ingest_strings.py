@@ -1,0 +1,262 @@
+"""Streaming ingestion + string-term query surfaces, end to end.
+
+Parity oracle: the committed fixture parsed into a plain Python set of
+(s, p, o) term-string triples; every string query on every tier (engine,
+sharded, durable, replica) must answer exactly what set comprehension
+over that oracle answers — for all 8 bound/unbound patterns.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.grammar import Hypergraph, LabelTable
+from repro.core.query import TripleQueryEngine
+from repro.core.repair import compress
+from repro.core.term_dict import TermDict
+from repro.data.ingest import (
+    IngestStats,
+    ingest_file,
+    ingest_rows,
+    iter_tsv,
+    resolve_ingest_batch,
+    scan_predicates,
+)
+from repro.data.rdf import ParseReport, parse_ntriples
+from repro.persist.service import DurableShardedService
+from repro.serve.sharded import ShardedTripleService
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "small.nt")
+PATTERNS = ["spo", "sp?", "s?o", "s??", "?po", "?p?", "??o", "???"]
+
+
+def _oracle():
+    """The fixture as a plain-Python set of term-string triples."""
+    triples, nodes, preds, report = parse_ntriples(FIXTURE)
+    assert report.malformed == 1  # the fixture commits one junk line
+    return {(nodes[s], preds[p], nodes[o]) for s, p, o in triples}
+
+
+def _oracle_answer(oracle, s, p, o):
+    return {t for t in oracle
+            if (s is None or t[0] == s)
+            and (p is None or t[1] == p)
+            and (o is None or t[2] == o)}
+
+
+def _assert_string_parity(query_strings, oracle):
+    """All 8 patterns, bound from every oracle triple, must match."""
+    for s, p, o in sorted(oracle):
+        for pat in PATTERNS:
+            qs = s if pat[0] == "s" else None
+            qp = p if pat[1] == "p" else None
+            qo = o if pat[2] == "o" else None
+            got = set(query_strings(qs, qp, qo))
+            assert got == _oracle_answer(oracle, qs, qp, qo), (pat, s, p, o)
+
+
+def _empty_sharded(n_preds=8, n_shards=2):
+    return ShardedTripleService.build(
+        np.zeros((0, 3), dtype=np.int64), n_nodes=1, n_preds=n_preds,
+        n_shards=n_shards, cache=None)
+
+
+# ---------------- source scanning ----------------
+def test_scan_predicates_first_seen_order():
+    preds, statements = scan_predicates(FIXTURE)
+    assert statements == 13
+    assert len(preds) == len(set(preds)) == 8
+    assert preds[0] == "<http://ex.org/knows>"  # first-seen order
+
+
+def test_iter_tsv_counts_malformed():
+    lines = ["<http://a>\t<http://p>\t<http://b>",
+             "only\ttwo",
+             "",
+             '<http://a>\t<http://p>\t"lit with spaces"']
+    report = ParseReport()
+    rows = list(iter_tsv(lines, report))
+    assert rows == [("<http://a>", "<http://p>", "<http://b>"),
+                    ("<http://a>", "<http://p>", '"lit with spaces"')]
+    assert report.malformed == 1  # blank lines are not statements or errors
+
+
+def test_resolve_ingest_batch(monkeypatch):
+    assert resolve_ingest_batch(7) == 7
+    assert resolve_ingest_batch(0) == 1  # clamp
+    monkeypatch.setenv("ITR_INGEST_BATCH", "64")
+    assert resolve_ingest_batch(None) == 64
+    monkeypatch.setenv("ITR_INGEST_BATCH", "junk")
+    assert resolve_ingest_batch(None) == 4096
+
+
+# ---------------- engine-level surface ----------------
+def _empty_engine(n_preds=8):
+    table = LabelTable.terminals([2] * n_preds)
+    grammar, _ = compress(
+        Hypergraph.from_triples(np.zeros((0, 3), dtype=np.int64), 1), table)
+    return TripleQueryEngine(grammar, cache=None, crossover=0, delta_budget=None)
+
+
+def test_engine_requires_dict():
+    eng = _empty_engine()
+    with pytest.raises(ValueError, match="no term dictionary"):
+        eng.query_strings("<http://x>", None, None)
+    with pytest.raises(ValueError, match="no term dictionary"):
+        eng.query_bgp_strings([("?x", "<http://p>", "?y")])
+
+
+def test_engine_ingest_and_parity():
+    eng = _empty_engine()
+    stats = ingest_file(eng, FIXTURE, batch_size=4)
+    assert (stats.rows, stats.inserted, stats.statements) == (13, 13, 13)
+    assert stats.malformed == 1 and len(stats.malformed_samples) == 1
+    assert (stats.new_nodes, stats.new_preds, stats.batches) == (11, 8, 4)
+    assert stats.rows_per_s > 0
+    _assert_string_parity(eng.query_strings, _oracle())
+
+
+def test_engine_rebuild_preserves_dict():
+    eng = _empty_engine()
+    ingest_file(eng, FIXTURE)
+    td = eng.term_dict
+    assert eng.rebuild() is True
+    assert eng.term_dict is td
+    _assert_string_parity(eng.query_strings, _oracle())
+
+
+def test_ingest_rows_into_bare_target_requires_attach():
+    class Bare:
+        def insert_triples(self, t):
+            return len(t)
+
+    with pytest.raises(ValueError, match="attach"):
+        ingest_rows(Bare(), [("<http://a>", "<http://p>", "<http://b>")])
+
+
+# ---------------- sharded tier ----------------
+def test_sharded_ingest_parity_all_patterns():
+    svc = _empty_sharded()
+    stats = ingest_file(svc, FIXTURE, batch_size=5)
+    assert stats.batches == 3 and stats.inserted == 13
+    oracle = _oracle()
+    _assert_string_parity(svc.query_strings, oracle)
+    # ingest is idempotent at the triple level: same file again dedups
+    stats2 = ingest_file(svc, FIXTURE)
+    assert stats2.inserted == 0 and stats2.new_nodes == 0 and stats2.new_preds == 0
+    _assert_string_parity(svc.query_strings, oracle)
+
+
+def test_sharded_unknown_term_short_circuits():
+    svc = _empty_sharded()
+    ingest_file(svc, FIXTURE)
+    flushes_before = svc.stats.flushes
+    assert svc.query_strings("<http://ex.org/nobody>", None, None) == []
+    assert svc.query_bgp_strings([("?x", "<http://no.such/pred>", "?y")]) == []
+    assert svc.stats.flushes == flushes_before  # no shard was touched
+    assert svc.stats.string_queries >= 2
+    assert svc.stats.unknown_term_empties == 2
+
+
+def test_sharded_bgp_strings_parity_and_pred_var():
+    svc = _empty_sharded()
+    ingest_file(svc, FIXTURE)
+    oracle = _oracle()
+    knows = "<http://ex.org/knows>"
+    rows = svc.query_bgp_strings([("?x", knows, "?y"), ("?y", knows, "?z")])
+    want = {(a[0], a[2], b[2]) for a in oracle if a[1] == knows
+            for b in oracle if b[1] == knows and b[0] == a[2]}
+    assert {(r["?x"], r["?y"], r["?z"]) for r in rows} == want and rows
+    # predicate-position variable decodes through the predicate space
+    rows = svc.query_bgp_strings([("<http://ex.org/alice>", "?p", "?o")])
+    assert {(r["?p"], r["?o"]) for r in rows} == \
+        {(p, o) for s, p, o in oracle if s == "<http://ex.org/alice>"}
+    with pytest.raises(ValueError, match="both predicate and"):
+        svc.query_bgp_strings([("?x", "?x", "?y")])
+
+
+def test_sharded_tsv_ingest(tmp_path):
+    path = tmp_path / "g.tsv"
+    path.write_text("<http://a>\t<http://p>\t<http://b>\n"
+                    "broken line without tabs\n"
+                    "<http://b>\t<http://p>\t<http://c>\n")
+    svc = _empty_sharded(n_preds=1)
+    stats = ingest_file(svc, str(path))  # format inferred from extension
+    assert stats.inserted == 2 and stats.malformed == 1
+    assert svc.query_strings(None, "<http://p>", None) == [
+        ("<http://a>", "<http://p>", "<http://b>"),
+        ("<http://b>", "<http://p>", "<http://c>")]
+
+
+def test_sharded_pred_capacity_exhausted():
+    svc = _empty_sharded(n_preds=2)  # fixture needs 8
+    with pytest.raises(ValueError, match="predicate capacity"):
+        ingest_file(svc, FIXTURE)
+
+
+def test_ingest_rows_with_progress_and_stats_reuse():
+    svc = _empty_sharded(n_preds=1)
+    seen = []
+    stats = IngestStats()
+    rows = [("<http://a>", "<http://p>", "<http://b>"),
+            ("<http://b>", "<http://p>", "<http://c>"),
+            ("<http://c>", "<http://p>", "<http://a>")]
+    out = ingest_rows(svc, rows, batch_size=2, stats=stats,
+                      progress=lambda s: seen.append(s.rows))
+    assert out is stats and stats.batches == 2 and seen == [2, 3]
+
+
+# ---------------- durable tier: WAL, snapshot, replicas ----------------
+def test_durable_ingest_survives_reopen_and_replicates():
+    with tempfile.TemporaryDirectory() as root:
+        svc = DurableShardedService.build(
+            np.zeros((0, 3), dtype=np.int64), n_nodes=1, n_preds=8,
+            root=root, n_shards=2, cache=None)
+        svc.attach_term_dict(TermDict.empty())
+        ingest_file(svc, FIXTURE, batch_size=5)
+        oracle = _oracle()
+        _assert_string_parity(svc.query_strings, oracle)
+        node_order = svc.term_dict.nodes.terms_in_id_order()
+        svc.close()
+
+        # reopen #1: dict rebuilt purely from the WAL term records
+        svc = DurableShardedService.open(root=root, cache=None)
+        assert svc.term_dict.nodes.terms_in_id_order() == node_order
+        _assert_string_parity(svc.query_strings, oracle)
+
+        # snapshot folds the dict in; post-snapshot mints ride the new WAL
+        svc.snapshot()
+        svc.add_node_terms(["<http://ex.org/late>"])
+        svc.close()
+        svc = DurableShardedService.open(root=root, cache=None)
+        assert svc.term_dict.node_id("<http://ex.org/late>") is not None
+        _assert_string_parity(svc.query_strings, oracle)
+
+        # replicas seed the dict from the snapshot + WAL tail
+        svc.enable_replication(1)
+        svc.sync_replicas()
+        rep_svc = svc.replicas.groups[0].service
+        assert rep_svc.term_dict.nodes.terms_in_id_order() == \
+            svc.term_dict.nodes.terms_in_id_order()
+        _assert_string_parity(rep_svc.query_strings, oracle)
+        svc.close()
+
+
+def test_durable_pred_capacity_does_not_touch_wal():
+    with tempfile.TemporaryDirectory() as root:
+        svc = DurableShardedService.build(
+            np.zeros((0, 3), dtype=np.int64), n_nodes=1, n_preds=1,
+            root=root, n_shards=1, cache=None)
+        svc.attach_term_dict(TermDict.empty())
+        svc.add_pred_terms(["<http://p0>"])
+        offset = svc.wal.offset
+        with pytest.raises(ValueError, match="predicate capacity"):
+            svc.add_pred_terms(["<http://p1>"])
+        # the rejected mint must not have been logged: replay would
+        # otherwise rebuild an over-capacity dictionary
+        assert svc.wal.offset == offset
+        svc.close()
+        svc = DurableShardedService.open(root=root, cache=None)
+        assert svc.term_dict.n_preds == 1
+        svc.close()

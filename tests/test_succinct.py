@@ -79,6 +79,21 @@ def test_elias_fano_access_and_rank():
     assert ef.rank_leq(100) == 9
 
 
+def test_elias_fano_rejects_too_small_universe():
+    vals = np.array([2, 5, 9], dtype=np.int64)
+    # universe must exceed the max value: == max and < max both mis-split
+    for bad in (9, 4, 0):
+        with pytest.raises(ValueError, match="universe"):
+            EliasFano(vals, universe=bad)
+    with pytest.raises(ValueError, match="non-negative"):
+        EliasFano(np.array([-1, 3], dtype=np.int64))
+    # boundary: universe == max + 1 is the tightest legal value
+    ef = EliasFano(vals, universe=10)
+    assert np.array_equal(ef.to_numpy(), vals)
+    # an explicit universe on an empty sequence is always fine
+    assert EliasFano(np.array([], dtype=np.int64), universe=0).n == 0
+
+
 def test_elias_fano_compresses_dense_runs():
     vals = np.repeat(np.arange(100), 50)  # 5000 values, universe 100
     ef = EliasFano(vals)

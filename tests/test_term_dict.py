@@ -1,0 +1,227 @@
+"""Unit + property tests for the compressed term dictionary
+(`repro.core.term_dict`) and its snapshot persistence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.term_dict import (
+    StringSpace,
+    TermDict,
+    bgp_result_to_terms,
+    resolve_dict_block,
+    resolve_string_bgp,
+    resolve_string_triple,
+)
+from repro.persist.snapshot import SnapshotError, load_term_dict, save_term_dict
+
+_TERMS = ([f"<http://ex.org/node/{i:04d}>" for i in range(60)]
+          + [f"_:b{i}" for i in range(10)]
+          + ['"plain lit"', '"inner "quotes""@en', '"line\nbreak"',
+             '"tab\there"^^<http://t>', '"1.5"^^<http://xsd#double>', '""'])
+
+
+def _space(terms, block=8):
+    return StringSpace.from_terms(list(terms), block=block)
+
+
+# ---------------- base round-trip ----------------
+def test_bidirectional_lookup_unsorted_input():
+    rng = np.random.default_rng(0)
+    terms = list(_TERMS)
+    rng.shuffle(terms)
+    sp = _space(terms)
+    assert len(sp) == len(terms)
+    for i, t in enumerate(terms):
+        assert sp.term_to_id(t) == i
+        assert sp.id_to_term(i) == t
+
+
+def test_bidirectional_lookup_sorted_input_elides_permutation():
+    terms = sorted(_TERMS)
+    sp = _space(terms)
+    assert sp._ids is None  # identity permutation is not materialized
+    for i, t in enumerate(terms):
+        assert sp.term_to_id(t) == i
+        assert sp.id_to_term(i) == t
+
+
+def test_unknown_term_and_bad_id():
+    sp = _space(_TERMS)
+    assert sp.term_to_id("<http://ex.org/absent>") is None
+    assert sp.term_to_id("") is None
+    with pytest.raises(IndexError):
+        sp.id_to_term(len(sp))
+    with pytest.raises(IndexError):
+        sp.id_to_term(-1)
+
+
+def test_empty_space():
+    sp = StringSpace()
+    assert len(sp) == 0
+    assert sp.term_to_id("x") is None
+    ids = sp.add_terms(["a", "b", "a"])
+    assert ids.tolist() == [0, 1, 0]
+
+
+def test_duplicate_terms_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        _space(["a", "b", "a"])
+
+
+def test_front_coding_compresses_shared_prefixes():
+    # sorted input -> no permutation arrays, so the measurement is the
+    # front-coded payload itself
+    terms = sorted(f"<http://example.org/very/long/common/prefix/{i}>"
+                   for i in range(512))
+    sp = _space(terms, block=16)
+    plain = sum(len(t.encode()) for t in terms)
+    assert sp.size_in_bytes() < 0.5 * plain
+
+
+# ---------------- append tail + compaction ----------------
+def test_append_tail_and_compaction_preserve_ids():
+    sp = _space(_TERMS[:20])
+    ids = sp.add_terms(["zzz", _TERMS[3], "aaa", "zzz"])
+    assert ids.tolist() == [20, 3, 21, 20]
+    assert sp.n_extra == 2
+    assert sp.id_to_term(21) == "aaa"
+    comp = sp.compacted()
+    assert comp.n_extra == 0 and len(comp) == 22
+    for i in range(len(sp)):
+        assert comp.id_to_term(i) == sp.id_to_term(i)
+        assert comp.term_to_id(sp.id_to_term(i)) == i
+
+
+# ---------------- persistence ----------------
+def test_to_from_arrays_roundtrip():
+    rng = np.random.default_rng(1)
+    terms = list(_TERMS)
+    rng.shuffle(terms)
+    sp = _space(terms)
+    sp.add_terms(["tail-1", "tail-2"])
+    sp2 = StringSpace.from_arrays(*sp.to_arrays())
+    assert len(sp2) == len(sp)
+    for i in range(len(sp)):
+        assert sp2.id_to_term(i) == sp.id_to_term(i)
+    assert sp2.term_to_id("tail-2") == sp.term_to_id("tail-2")
+
+
+def test_save_load_term_dict(tmp_path):
+    td = TermDict.from_terms(_TERMS, ["<http://p0>", "<http://p1>"])
+    td.add_node_terms(["<http://late>"])
+    d = save_term_dict(td, tmp_path / "td")
+    td2 = load_term_dict(d)
+    assert td2.nodes.terms_in_id_order() == td.nodes.terms_in_id_order()
+    assert td2.preds.terms_in_id_order() == td.preds.terms_in_id_order()
+    assert td2.node_id("<http://late>") == td.node_id("<http://late>")
+
+
+def test_load_term_dict_rejects_corruption(tmp_path):
+    td = TermDict.from_terms(["a", "b"], ["p"])
+    d = save_term_dict(td, tmp_path / "td")
+    blob = tmp_path / "td" / "nodes_blob.npy"
+    raw = bytearray(blob.read_bytes())
+    raw[-1] ^= 0xFF
+    blob.write_bytes(bytes(raw))
+    with pytest.raises(SnapshotError, match="checksum"):
+        load_term_dict(d)
+    with pytest.raises(SnapshotError):
+        load_term_dict(tmp_path / "missing")
+
+
+def test_load_term_dict_rejects_wrong_kind(tmp_path):
+    import json
+
+    d = tmp_path / "notdict"
+    d.mkdir()
+    (d / "manifest.json").write_text(json.dumps({"format": 1, "checksums": {}}))
+    with pytest.raises(SnapshotError, match="not a term-dict"):
+        load_term_dict(d)
+
+
+# ---------------- TermDict two-space semantics ----------------
+def test_term_dict_spaces_are_disjoint():
+    td = TermDict.empty()
+    n = td.add_node_terms(["<http://x>", "<http://p>"])
+    p = td.add_pred_terms(["<http://p>"])
+    assert n.tolist() == [0, 1] and p.tolist() == [0]
+    assert td.node_term(1) == "<http://p>" and td.pred_term(0) == "<http://p>"
+    assert td.n_nodes == 2 and td.n_preds == 1
+    assert td.bytes_per_term() > 0
+    comp = td.compacted()
+    assert comp.node_id("<http://x>") == 0 and comp.pred_id("<http://p>") == 0
+
+
+def test_resolve_dict_block(monkeypatch):
+    assert resolve_dict_block(4) == 4
+    assert resolve_dict_block(0) == 2  # clamp
+    monkeypatch.setenv("ITR_DICT_BLOCK", "32")
+    assert resolve_dict_block() == 32
+    monkeypatch.setenv("ITR_DICT_BLOCK", "junk")
+    assert resolve_dict_block() == 16
+    monkeypatch.delenv("ITR_DICT_BLOCK")
+    assert resolve_dict_block() == 16
+
+
+# ---------------- string-pattern resolution helpers ----------------
+def _td():
+    return TermDict.from_terms(["<http://a>", "<http://b>"], ["<http://p>"])
+
+
+def test_resolve_string_triple():
+    td = _td()
+    assert resolve_string_triple(td, "<http://a>", None, "<http://b>") == (0, None, 1, True)
+    assert resolve_string_triple(td, None, "<http://p>", None) == (None, 0, None, True)
+    assert resolve_string_triple(td, "<http://absent>", None, None)[3] is False
+    with pytest.raises(TypeError):
+        resolve_string_triple(td, 3, None, None)
+
+
+def test_resolve_string_bgp():
+    td = _td()
+    pats, pred_vars, known = resolve_string_bgp(
+        td, [("?x", "<http://p>", "?y"), ("?y", "?p", "<http://b>")])
+    assert known
+    assert pats == [("?x", 0, "?y"), ("?y", "?p", 1)]
+    assert pred_vars == {"?p"}
+    # single-pattern convenience form
+    pats1, _, _ = resolve_string_bgp(td, ("?x", "<http://p>", "?y"))
+    assert pats1 == [("?x", 0, "?y")]
+    # unknown constant -> known=False
+    _, _, known = resolve_string_bgp(td, [("?x", "<http://nope>", "?y")])
+    assert known is False
+    # a var cannot straddle the two id spaces
+    with pytest.raises(ValueError, match="both predicate and"):
+        resolve_string_bgp(td, [("?x", "?x", "?y")])
+    with pytest.raises(ValueError, match="triples"):
+        resolve_string_bgp(td, [("?x", "<http://p>")])
+    with pytest.raises(TypeError):
+        resolve_string_bgp(td, [(None, "<http://p>", "?y")])
+
+
+def test_bgp_result_to_terms():
+    from repro.core.bgp import BGPResult
+
+    td = _td()
+    res = BGPResult(("?x", "?p"), np.array([[0, 0], [1, 0]], dtype=np.int64))
+    rows = bgp_result_to_terms(td, res, {"?p"})
+    assert rows == [{"?x": "<http://a>", "?p": "<http://p>"},
+                    {"?x": "<http://b>", "?p": "<http://p>"}]
+
+
+# ---------------- property: random pools, random blocks ----------------
+@settings(max_examples=15)
+@given(st.integers(2, 40), st.integers(1, 120), st.booleans())
+def test_property_bijection(block, n_terms, shuffle):
+    rng = np.random.default_rng(block * 1000 + n_terms)
+    terms = [f"<http://t/{i}/{'x' * int(rng.integers(0, 20))}>"
+             for i in range(n_terms)]
+    if shuffle:
+        rng.shuffle(terms)
+    sp = StringSpace.from_terms(terms, block=block)
+    for i, t in enumerate(terms):
+        assert sp.term_to_id(t) == i
+        assert sp.id_to_term(i) == t
+    assert sp.term_to_id("<absent>") is None
+    sp2 = StringSpace.from_arrays(*sp.to_arrays())
+    assert sp2.terms_in_id_order() == terms
